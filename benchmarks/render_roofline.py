@@ -1,0 +1,35 @@
+"""Render the §Roofline markdown table from dryrun_results.json."""
+
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x:.1e}"
+    return f"{x:.4f}" if x < 1 else f"{x:.2f}"
+
+
+def main(path):
+    with open(path) as f:
+        data = json.load(f)
+    print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+          "t_collective (s) | bottleneck | GiB/dev | useful-flops ratio |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in data["rows"]:
+        ur = r.get("useful_flops_ratio")
+        ur = "-" if ur is None or ur != ur else f"{1/ur:.2f}x" if ur else "-"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} "
+              f"| {fmt_s(r['t_collective_s'])} | {r['bottleneck']} "
+              f"| {r['bytes_per_device']/2**30:.2f} | {ur} |")
+    if data.get("failures"):
+        print("\nFAILURES:", data["failures"])
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "dryrun_results.json"))

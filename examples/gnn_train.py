@@ -1,0 +1,76 @@
+"""GNN training: full-batch GCN + sampled-minibatch GraphSAGE-style run.
+
+    PYTHONPATH=src python examples/gnn_train.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.data.pipeline import graph_minibatch_stream
+from repro.graphs import csr_from_coo, erdos_renyi
+from repro.graphs.sampler import NeighborSampler
+from repro.launch.steps import build_bundle
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def full_batch():
+    spec = get_arch("gcn_cora")
+    b = build_bundle(spec, "full_graph_sm", reduced=True)
+    t = Trainer(b, TrainerConfig(num_steps=30, ckpt_every=10, log_every=5,
+                                 ckpt_dir=tempfile.mkdtemp("repro_gcn")))
+    t.run()
+    losses = [m["loss"] for m in t.metrics_log if "loss" in m]
+    print(f"gcn full-batch: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0]
+
+
+def sampled_minibatch():
+    import jax
+    from repro.models.gnn import models as gnn
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.adamw import apply_updates, init_state
+
+    spec = get_arch("gatedgcn")
+    cfg = spec.reduced
+    # a reddit-like synthetic graph + the real neighbor sampler
+    n = 5_000
+    src, dst = erdos_renyi(n, avg_degree=20, seed=0)
+    indptr, indices = csr_from_coo(src, dst, n)
+    sampler = NeighborSampler(indptr, indices)
+    stream = graph_minibatch_stream(sampler, batch_nodes=32, fanouts=(5, 3),
+                                    n_pad=1024, e_pad=1024, d_feat=16, seed=0)
+    params = gnn.init_params(cfg, 16, jax.random.PRNGKey(0))
+    opt = init_state(params)
+    ocfg = AdamWConfig(lr=3e-3)
+
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        def loss_fn(p):
+            return gnn.loss_fn(cfg, p, batch)
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = apply_updates(ocfg, params, g, opt)
+        return params, opt, l
+
+    losses = []
+    for i in range(20):
+        _, batch = next(stream)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()
+                 if k != "global_ids"}
+        batch["targets"] = jnp.asarray(
+            rng.standard_normal((batch["node_feats"].shape[0], cfg.d_out))
+            .astype(np.float32))
+        params, opt, l = train_step(params, opt, batch)
+        losses.append(float(l))
+    stream.close()
+    print(f"gatedgcn sampled-minibatch: loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f} over {len(losses)} sampled subgraphs")
+
+
+if __name__ == "__main__":
+    full_batch()
+    sampled_minibatch()

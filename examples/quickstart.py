@@ -1,0 +1,48 @@
+"""Quickstart: distributed BFS on all three paper graph families.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the 1-D-partitioned engine in every frontier mode on a small-world,
+an Erdős-Rényi and a star graph, validates against the serial oracle, and
+prints the per-mode communication volumes — the paper's §5 story in one
+screen.
+"""
+
+import numpy as np
+
+from repro.core import BFSOptions, bfs
+from repro.core.ref import INF, bfs_reference
+from repro.graphs import generate, shard_graph
+
+
+def main():
+    n = 20_000
+    for kind, kw in (("small_world", {"k": 8, "beta": 0.1}),
+                     ("erdos_renyi", {"avg_degree": 8.0}),
+                     ("star", {})):
+        src, dst = generate(kind, n, seed=0, **kw)
+        g = shard_graph(src, dst, n, p=1)
+        want = bfs_reference(src, dst, n, [0])
+        print(f"\n== {kind}: n={n} directed_edges={src.shape[0]} ==")
+        for mode in ("dense", "queue", "auto"):
+            for strat in (("allgather_merge", "baseline [2]"),
+                          ("alltoall_direct", "paper-optimized")):
+                opts = BFSOptions(mode=mode, dense_exchange=strat[0],
+                                  queue_exchange=strat[0]
+                                  if strat[0] in ("allgather_merge",
+                                                  "alltoall_direct")
+                                  else "alltoall_direct",
+                                  queue_cap=1 << 14)
+                dist, stats = bfs(g, [0], opts=opts)
+                ok = np.array_equal(dist, want)
+                print(f"  mode={mode:6s} exchange={strat[1]:16s} "
+                      f"levels={stats.levels:3d} "
+                      f"visited={stats.visited:6d} "
+                      f"comm_bytes/chip={stats.comm_bytes:12.0f} "
+                      f"{'OK' if ok else 'MISMATCH'}")
+        reach = int((want < INF).sum())
+        print(f"  reachable from source: {reach}/{n}")
+
+
+if __name__ == "__main__":
+    main()

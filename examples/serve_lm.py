@@ -1,0 +1,46 @@
+"""Continuous-batching LM serving demo.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Serves a small model with the production Server (per-slot sequence depths,
+slot recycling) over a burst of batched requests and reports throughput.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import TransformerConfig
+from repro.models import transformer as tf
+from repro.serve.batcher import Request, Server
+
+CFG = TransformerConfig(
+    name="demo-serve", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+    head_dim=32, d_ff=512, vocab=1024, dtype="float32")
+
+
+def main():
+    params = tf.init_params(CFG, jax.random.PRNGKey(0))
+    srv = Server(CFG, params, batch_slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab, rng.integers(3, 9))
+                    .astype(np.int32),
+                    max_new_tokens=int(rng.integers(4, 12)))
+            for i in range(10)]
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.time()
+    done = srv.run_until_drained()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on 1 CPU core)")
+    for r in done[:4]:
+        print(f"  rid={r.rid} prompt_len={len(r.prompt)} out={r.out}")
+    assert len(done) == len(reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: distributed-BFS-centric multi-pod JAX training/inference framework.
+
+Reproduces and extends "Optimizations to the Parallel Breadth First Search
+on Distributed Memory" (Sharma & Zaidi, CS.DC 2020): 1-D vertex
+partitioning with owner-computes updates and direct all-to-all exchange,
+generalized into the owner-exchange primitive that also drives GNN halo
+exchange, MoE token dispatch and sharded embedding lookup.
+"""
+
+__version__ = "0.1.0"

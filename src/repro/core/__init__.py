@@ -1,0 +1,12 @@
+"""The paper's primary contribution: 1-D partitioned distributed BFS with
+optimized owner-exchange communication (Sharma & Zaidi, CS.DC 2020)."""
+
+from repro.core.bfs import BFSOptions, BFSStats, INF, bfs
+from repro.core.exchange import (DENSE_STRATEGIES, QUEUE_STRATEGIES,
+                                 exchange_dense, exchange_queue)
+from repro.core.partition import Partition1D, repartition
+
+__all__ = [
+    "BFSOptions", "BFSStats", "INF", "bfs", "Partition1D", "repartition",
+    "exchange_dense", "exchange_queue", "DENSE_STRATEGIES", "QUEUE_STRATEGIES",
+]

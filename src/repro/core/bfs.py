@@ -1,0 +1,298 @@
+"""Distributed level-synchronous BFS with 1-D partitioning (paper fig. 2).
+
+The engine is a single ``shard_map``-wrapped ``lax.while_loop``: every
+iteration is one BFS level — local expansion (computation step, paper
+§2.3) followed by an owner exchange (communication step) and the owner-side
+distance update.  All shapes are static; termination is a replicated
+``psum`` of the new-frontier population so every shard exits together.
+
+Modes (``BFSOptions.mode``):
+  * ``dense``  — bitmap frontier, candidate exchange via any strategy in
+    ``exchange.DENSE_STRATEGIES``.  Supports batched multi-source BFS
+    (S sources traversed simultaneously — the Graph500-style formulation
+    that keeps the MXU busy; see kernels/bsr_spmm).
+  * ``queue``  — the paper's sparse per-owner send buffers (S = 1).
+  * ``auto``   — beyond-paper direction-optimizing hybrid: per level picks
+    bottom-up (frontier huge), queue (frontier tiny) or dense top-down,
+    from replicated frontier statistics.  This is the TPU adaptation of
+    Beamer-style direction switching: on a systolic machine the win is in
+    *bytes on the wire*, not early-exit branchiness.
+
+The returned stats carry per-level analytic communication bytes so the
+benchmarks can reproduce the paper's scalability contrast (computation vs
+communication cost, §4) without real multi-host hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import exchange as ex
+from repro.core import frontier as fr
+from repro.core.partition import Partition1D
+
+if TYPE_CHECKING:  # graphs.formats imports core.partition; avoid the cycle
+    from repro.graphs.formats import ShardedGraph
+
+INF = jnp.int32(2 ** 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class BFSOptions:
+    mode: str = "dense"                       # dense | queue | auto
+    dense_exchange: str = "alltoall_direct"   # see exchange.DENSE_STRATEGIES
+    queue_exchange: str = "alltoall_direct"   # see exchange.QUEUE_STRATEGIES
+    local_update: bool = True                 # paper §5.1 opt (1)
+    dedupe: bool = True                       # drop dup targets pre-wire
+    queue_cap: int = 1024                     # ids per destination bucket
+    max_levels: int = 0                       # 0 -> derive from n
+    # auto-mode thresholds (fractions of global E / V):
+    queue_threshold: float = 1 / 64           # frontier edges below -> queue
+    bottom_up_threshold: float = 0.05         # frontier verts above -> bottom-up
+    use_kernel: bool = False                  # Pallas bsr_spmm expansion
+                                              # (dense mode, single shard)
+
+    def validate(self):
+        assert self.mode in ("dense", "queue", "auto"), self.mode
+        assert self.dense_exchange in ex.DENSE_STRATEGIES
+        assert self.queue_exchange in ex.QUEUE_STRATEGIES
+
+
+@dataclasses.dataclass
+class BFSStats:
+    levels: int
+    visited: int
+    comm_bytes: float          # analytic, summed over levels, per chip
+    overflowed: bool           # a queue level overflowed (result still exact:
+                               # engine falls back to dense for that level)
+    mode_counts: dict
+
+
+def _owned_update(dist, own_cand, level):
+    """Owner-computes rule: only unvisited vertices take the new level."""
+    unseen = dist == INF
+    new = (own_cand > 0) & unseen
+    dist = jnp.where(new, level, dist)
+    return dist, new.astype(jnp.uint8)
+
+
+def _make_shard_fn(part: Partition1D, e_total: int, s: int,
+                   axis, axes_sizes, opts: BFSOptions, max_levels: int,
+                   expand_fn=None):
+    """Builds the per-shard BFS body (runs under shard_map)."""
+    p, shard, n = part.p, part.shard_size, part.n
+    itemsize = 1  # uint8 masks on the wire
+    queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
+    bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part.n_logical))
+
+    def dense_level(frontier, dist, level, src_local, dst_global):
+        if expand_fn is not None:
+            cand = expand_fn(frontier)
+        else:
+            cand = fr.expand_dense(frontier, src_local, dst_global, n)
+        own = ex.exchange_dense(cand, axis, opts.dense_exchange)
+        dist, new = _owned_update(dist, own, level)
+        bytes_ = ex.dense_level_bytes(opts.dense_exchange, n, p, s, itemsize,
+                                      axes_sizes)
+        return dist, new, jnp.float32(bytes_)
+
+    def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
+        fglob = ex.allgather_frontier(frontier, axis)      # (n, S)
+        cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local, shard)
+        dist, new = _owned_update(dist, cand, level)
+        bytes_ = ex.bottomup_level_bytes(n, p, s, itemsize)
+        return dist, new, jnp.float32(bytes_)
+
+    def queue_level(frontier, dist, level, src_local, dst_global):
+        me = lax.axis_index(axis)
+        valid = dst_global >= 0
+        active = (frontier[src_local, 0] > 0) & valid
+        buckets, local_mask, _, overflow = fr.build_queue_buckets(
+            dst_global, active, part, me, opts.queue_cap,
+            local_update=opts.local_update, dedupe=opts.dedupe)
+        # Exactness guarantee: if any shard's bucket overflowed, run the
+        # whole level densely instead (the predicate is replicated, so all
+        # shards take the same branch and collectives stay collective).
+        overflow_any = lax.psum(overflow.astype(jnp.int32), axis) > 0
+
+        def sparse_branch():
+            recv = ex.exchange_queue(buckets, axis, opts.queue_exchange)
+            own = jnp.maximum(fr.apply_queue(recv, me, shard), local_mask)
+            d2, new = _owned_update(dist, own[:, None], level)
+            return d2, new, jnp.float32(
+                ex.queue_level_bytes(opts.queue_exchange, p, opts.queue_cap))
+
+        def dense_branch():
+            return dense_level(frontier, dist, level, src_local, dst_global)
+
+        d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
+        return d2, new, bytes_, overflow_any
+
+    def body(state, src_local, dst_global, in_src_global, in_dst_local,
+             valid_local):
+        dist, frontier, level, _, bytes_acc, overflowed, modes = state
+
+        if opts.mode == "dense":
+            dist, new, b = dense_level(frontier, dist, level, src_local,
+                                       dst_global)
+            modes = modes.at[0].add(1)
+            ovf = jnp.bool_(False)
+        elif opts.mode == "queue":
+            dist, new, b, ovf = queue_level(frontier, dist, level, src_local,
+                                            dst_global)
+            modes = modes.at[1].add(1)
+        else:  # auto: direction-optimizing hybrid
+            f_verts = lax.psum(frontier.sum(dtype=jnp.int32), axis)
+            f_edges_local = jnp.where(
+                dst_global >= 0, frontier[src_local, 0], 0).sum(dtype=jnp.int32)
+            f_edges = lax.psum(f_edges_local, axis)
+            big = f_verts > jnp.int32(bottom_up_cutoff)
+            tiny = f_edges < jnp.int32(queue_edge_cutoff)
+
+            def do_bottom_up():
+                d, nw, b = bottom_up_level(frontier, dist, level,
+                                           in_src_global, in_dst_local)
+                return d, nw, b, jnp.bool_(False), jnp.int32(2)
+
+            def do_queue():
+                d, nw, b, ovf = queue_level(frontier, dist, level, src_local,
+                                            dst_global)
+                return d, nw, b, ovf, jnp.int32(1)
+
+            def do_dense():
+                d, nw, b = dense_level(frontier, dist, level, src_local,
+                                       dst_global)
+                return d, nw, b, jnp.bool_(False), jnp.int32(0)
+
+            if s == 1:
+                dist, new, b, ovf, which = lax.cond(
+                    big, do_bottom_up,
+                    lambda: lax.cond(tiny, do_queue, do_dense))
+            else:
+                dist, new, b, ovf, which = lax.cond(big, do_bottom_up, do_dense)
+            modes = modes.at[which].add(1)
+
+        # Mask padding vertices (ids >= n_logical can never be visited).
+        new = new * valid_local[:, None].astype(new.dtype)
+        dist = jnp.where(valid_local[:, None], dist, INF)
+        active = lax.psum(new.sum(dtype=jnp.int32), axis) > 0
+        return (dist, new, level + 1, active, bytes_acc + b,
+                overflowed | ovf, modes)
+
+    def shard_fn(src_local, dst_global, in_src_global, in_dst_local,
+                 dist0, frontier0, valid_local):
+        state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
+                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32))
+
+        def cond(st):
+            return st[3] & (st[2] <= max_levels)
+
+        def body_fn(st):
+            return body(st, src_local, dst_global, in_src_global,
+                        in_dst_local, valid_local)
+
+        dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
+            cond, body_fn, state0)
+        return dist, level - 1, bytes_acc, overflowed, modes
+
+    return shard_fn
+
+
+def bfs(graph: "ShardedGraph", sources, mesh: Optional[Mesh] = None,
+        axis=None, opts: BFSOptions = BFSOptions()):
+    """Run distributed BFS from ``sources`` (int or sequence -> batched).
+
+    Returns (dist, stats): dist is (n_logical, S) int32 with INF for
+    unreachable vertices; stats is a BFSStats.
+    """
+    opts.validate()
+    part = graph.part
+    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    s = int(sources.shape[0])
+    if opts.mode == "queue":
+        assert s == 1, "queue frontier supports a single source"
+    p, shard, n = part.p, part.shard_size, part.n
+
+    if mesh is None:
+        dev = jax.devices()[:1]
+        mesh = Mesh(np.asarray(dev).reshape(1), ("bfs_p",))
+        axis = "bfs_p"
+        assert p == 1, "pass a mesh whose total size equals part.p"
+    axis = axis if axis is not None else tuple(mesh.axis_names)
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    axes_sizes = [mesh.shape[a] for a in axes]
+    assert int(np.prod(axes_sizes)) == p, (axes_sizes, p)
+
+    max_levels = opts.max_levels or part.n_logical
+
+    # initial state (host-side, then sharded by the jit partitioner)
+    dist0 = np.full((n, s), int(INF), dtype=np.int32)
+    frontier0 = np.zeros((n, s), dtype=np.uint8)
+    for j, sv in enumerate(sources):
+        dist0[sv, j] = 0
+        frontier0[sv, j] = 1
+    valid = (np.arange(n) < part.n_logical)
+
+    src_local, dst_global, in_src_global, in_dst_local = graph.flat()
+
+    expand_fn = None
+    if opts.use_kernel:
+        # Pallas bsr_spmm frontier expansion: block-CSR adjacency on the
+        # MXU (boolean semiring via sum + >0).  Single-shard dense mode —
+        # the multi-shard path keeps the segment-scatter expansion.
+        assert p == 1 and opts.mode == "dense", \
+            "use_kernel requires p == 1 and mode == 'dense'"
+        from repro.graphs.formats import block_sparse_adjacency
+        from repro.kernels.bsr_spmm import ops as spmm_ops
+        valid_e = dst_global >= 0
+        src_g = np.asarray(src_local)[valid_e]
+        dst_g = np.asarray(dst_global)[valid_e]
+        blocks, brr, bcc, n_pad_b = block_sparse_adjacency(
+            dst_g, src_g, n)  # transposed: candidates = A^T @ f
+        blocks_j = jnp.asarray(blocks)
+        br_j = jnp.asarray(brr)
+        bc_j = jnp.asarray(bcc)
+
+        def expand_fn(frontier):  # (n, S) uint8 -> (n, S) uint8
+            f = frontier
+            if n_pad_b > n:
+                f = jnp.pad(f, ((0, n_pad_b - n), (0, 0)))
+            cand = spmm_ops.frontier_expand(
+                blocks_j, br_j, bc_j, f, n_rows_pad=n_pad_b)
+            return cand[:n]
+
+    shard_fn = _make_shard_fn(part, graph.n_edges, s, axis,
+                              axes_sizes, opts, max_levels,
+                              expand_fn=expand_fn)
+
+    spec_edge = P(axis)
+    spec_vert = P(axis, None)
+    mapped = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(spec_edge, spec_edge, spec_edge, spec_edge,
+                  spec_vert, spec_vert, P(axis)),
+        out_specs=(spec_vert, P(), P(), P(), P()),
+        check_vma=False,
+    )
+    with mesh:
+        dist, levels, comm_bytes, overflowed, modes = jax.jit(mapped)(
+            jnp.asarray(src_local), jnp.asarray(dst_global),
+            jnp.asarray(in_src_global), jnp.asarray(in_dst_local),
+            jnp.asarray(dist0), jnp.asarray(frontier0), jnp.asarray(valid))
+    dist = np.asarray(dist)[: part.n_logical]
+    visited = int((dist < int(INF)).sum())
+    stats = BFSStats(
+        levels=int(levels), visited=visited,
+        comm_bytes=float(comm_bytes), overflowed=bool(overflowed),
+        mode_counts={"dense": int(modes[0]), "queue": int(modes[1]),
+                     "bottom_up": int(modes[2])},
+    )
+    return dist, stats

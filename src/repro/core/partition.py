@@ -1,0 +1,91 @@
+"""1-D block partitioning of the vertex set (paper §2.1).
+
+The paper distributes vertices of ``G(V, E)`` across ``p`` processors with a
+1-D partitioning: every vertex has exactly one *owner* processor, and only
+the owner may decide visitation and assign a BFS level (owner-computes rule,
+paper §2.3).  We use a contiguous *block* distribution — vertex ``v`` is
+owned by ``v // ceil(n/p)`` — which makes ``find_owner`` a single integer
+divide and keeps each shard's vertex ids contiguous so a shard's slice of
+any vertex-indexed dense array (distance vector, frontier bitmap, feature
+matrix) is a plain static slice.
+
+The same object is reused for every 1-D-partitioned structure in the
+framework: BFS distance vectors, GNN node features, and recsys embedding
+table rows (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = Union[np.ndarray, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition1D:
+    """Block 1-D partition of ``n_logical`` ids over ``p`` shards.
+
+    ``n`` is padded up so every shard owns exactly ``shard_size`` ids;
+    padding ids (``>= n_logical``) are valid to store but are never real
+    vertices.
+    """
+
+    n_logical: int
+    p: int
+
+    def __post_init__(self):
+        if self.n_logical <= 0 or self.p <= 0:
+            raise ValueError(f"bad partition ({self.n_logical=}, {self.p=})")
+
+    @property
+    def shard_size(self) -> int:
+        return -(-self.n_logical // self.p)  # ceil div
+
+    @property
+    def n(self) -> int:
+        """Padded global size (``p * shard_size``)."""
+        return self.shard_size * self.p
+
+    # --- owner / local id maps (work on python ints, numpy and jnp arrays) ---
+    def owner(self, v: Array) -> Array:
+        """``find_owner`` from the paper's algorithm (fig. 2, line 15)."""
+        return v // self.shard_size
+
+    def local_id(self, v: Array) -> Array:
+        return v - (v // self.shard_size) * self.shard_size
+
+    def global_id(self, shard: Array, local: Array) -> Array:
+        return shard * self.shard_size + local
+
+    def shard_start(self, shard: int) -> int:
+        return shard * self.shard_size
+
+    # --- numpy helpers used by the host-side graph builder ---
+    def counts_per_owner(self, v: np.ndarray) -> np.ndarray:
+        return np.bincount(np.asarray(self.owner(v)), minlength=self.p)
+
+    def pad_vertex_array(self, x: np.ndarray, fill=0) -> np.ndarray:
+        """Pad a length-``n_logical`` vertex-indexed array to length ``n``."""
+        if x.shape[0] == self.n:
+            return x
+        pad = [(0, self.n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        return np.pad(x, pad, constant_values=fill)
+
+    def valid_mask_local(self) -> np.ndarray:
+        """(p, shard_size) bool — True where the local slot is a real vertex."""
+        gids = np.arange(self.n).reshape(self.p, self.shard_size)
+        return gids < self.n_logical
+
+
+def repartition(part: Partition1D, new_p: int) -> Partition1D:
+    """Elastic rescale: same logical vertex set, new shard count.
+
+    Used by the elastic runtime when the number of healthy hosts changes
+    (train/elastic.py); all owner maps are pure functions of (n_logical, p)
+    so no state beyond the distance/feature arrays needs to move.
+    """
+    return Partition1D(part.n_logical, new_p)

@@ -1,0 +1,38 @@
+"""Serial numpy BFS oracle (the 'single machine' baseline of paper §2).
+
+Deliberately written against raw edge arrays with no shared code with the
+distributed engine, so tests compare two independent implementations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INF = 2 ** 30
+
+
+def bfs_reference(src: np.ndarray, dst: np.ndarray, n: int, sources) -> np.ndarray:
+    """Level-synchronous serial BFS. Returns (n, S) int32 distances."""
+    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    # CSR build
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s = np.asarray(src)[order], np.asarray(dst)[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src_s, minlength=n), out=indptr[1:])
+
+    out = np.full((n, sources.shape[0]), INF, dtype=np.int32)
+    for j, s0 in enumerate(sources):
+        dist = out[:, j]
+        dist[s0] = 0
+        frontier = [int(s0)]
+        level = 1
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in dst_s[indptr[u]:indptr[u + 1]]:
+                    if dist[v] == INF:
+                        dist[v] = level
+                        nxt.append(int(v))
+            frontier = nxt
+            level += 1
+    return out

@@ -1,0 +1,174 @@
+"""Synthetic batch builders: concrete numpy batches for smoke tests /
+examples, and ShapeDtypeStruct specs for the dry-run (no allocation).
+
+Every builder comes in two flavours with identical pytree structure:
+``*_batch`` (real arrays, reduced sizes ok) and ``*_specs`` (abstract).
+The dry-run contract is that ``input_specs()`` stand-ins are weak-type
+correct and shardable.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (GNNConfig, GNNShape, LMShape, RecsysConfig,
+                                RecsysShape, TransformerConfig)
+from repro.graphs.generators import erdos_renyi
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ------------------------------------------------------------------- LM
+def lm_train_batch(cfg: TransformerConfig, batch: int, seq: int, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, cfg.vocab, (batch, seq + 1),
+                                   dtype=np.int32)}
+
+
+def lm_train_specs(cfg: TransformerConfig, shape: LMShape):
+    return {"tokens": SDS((shape.global_batch, shape.seq_len + 1), jnp.int32)}
+
+
+def lm_prefill_specs(cfg: TransformerConfig, shape: LMShape):
+    return {"tokens": SDS((shape.global_batch, shape.seq_len), jnp.int32)}
+
+
+def lm_decode_specs(cfg: TransformerConfig, shape: LMShape):
+    from repro.models.transformer import init_cache
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    return {
+        "cache": cache,
+        "pos": SDS((), jnp.int32),
+        "last_token": SDS((shape.global_batch,), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------ GNN
+def _gnn_dims(cfg: GNNConfig, shape: GNNShape, pad: int = 512):
+    """Static padded (N, E) for the step input of each GNN mode."""
+    if shape.mode == "sampled":
+        n = shape.batch_nodes
+        e = 0
+        layer = shape.batch_nodes
+        for f in shape.fanout:
+            layer *= f
+            n += layer
+            e += layer
+        return _pad_to(n, pad), _pad_to(e, pad)
+    if shape.mode == "batched":
+        return (_pad_to(shape.n_nodes * shape.batch_graphs, pad),
+                _pad_to(shape.n_edges * shape.batch_graphs, pad))
+    return _pad_to(shape.n_nodes, pad), _pad_to(shape.n_edges, pad)
+
+
+def _gnn_target_fields(cfg: GNNConfig, shape: GNNShape, n: int, make):
+    """Task head differs per arch/mode; see models/gnn/models.loss_fn."""
+    out = {}
+    if cfg.kind == "gcn":
+        out["labels"] = make((n,), jnp.int32)
+    elif shape.mode == "batched":
+        out["graph_id"] = make((n,), jnp.int32)
+        out["graph_targets"] = make((shape.batch_graphs, cfg.d_out), jnp.float32)
+    else:
+        out["targets"] = make((n, cfg.d_out), jnp.float32)
+    return out
+
+
+def gnn_specs(cfg: GNNConfig, shape: GNNShape, pad: int = 512):
+    n, e = _gnn_dims(cfg, shape, pad)
+    make = lambda s, d: SDS(s, d)
+    batch = {
+        "node_feats": SDS((n, shape.d_feat), jnp.float32),
+        "edge_src": SDS((e,), jnp.int32),
+        "edge_dst": SDS((e,), jnp.int32),
+        "valid_nodes": SDS((n,), jnp.bool_),
+    }
+    if cfg.kind == "schnet":
+        batch["pos"] = SDS((n, 3), jnp.float32)
+    if cfg.kind in ("gatedgcn", "graphcast"):
+        batch["edge_feats"] = SDS((e, 4 if cfg.kind == "graphcast" else 1),
+                                  jnp.float32)
+    batch.update(_gnn_target_fields(cfg, shape, n,
+                                    lambda s, d=jnp.float32: SDS(s, d)))
+    if "labels" in batch:
+        batch["labels"] = SDS((n,), jnp.int32)
+    return batch
+
+
+def gnn_batch(cfg: GNNConfig, shape: GNNShape, seed=0, pad: int = 128):
+    """Concrete reduced-size batch: real random graph + features."""
+    rng = np.random.default_rng(seed)
+    n, e = _gnn_dims(cfg, shape, pad)
+    src, dst = erdos_renyi(n, avg_degree=min(8, max(2, e // max(n, 1))),
+                           seed=seed)
+    e_used = min(src.shape[0], e)
+    es = np.zeros((e,), np.int32)
+    ed = np.full((e,), -1, np.int32)
+    es[:e_used] = src[:e_used]
+    ed[:e_used] = dst[:e_used]
+    batch = {
+        "node_feats": rng.standard_normal((n, shape.d_feat)).astype(np.float32),
+        "edge_src": es, "edge_dst": ed,
+        "valid_nodes": np.ones((n,), bool),
+    }
+    if cfg.kind == "schnet":
+        batch["pos"] = rng.standard_normal((n, 3)).astype(np.float32)
+    if cfg.kind == "gatedgcn":
+        batch["edge_feats"] = rng.standard_normal((e, 1)).astype(np.float32)
+    if cfg.kind == "graphcast":
+        batch["edge_feats"] = rng.standard_normal((e, 4)).astype(np.float32)
+    if cfg.kind == "gcn":
+        batch["labels"] = rng.integers(0, cfg.d_out, (n,)).astype(np.int32)
+    elif shape.mode == "batched":
+        batch["graph_id"] = np.minimum(
+            np.arange(n) // max(shape.n_nodes, 1),
+            shape.batch_graphs - 1).astype(np.int32)
+        batch["graph_targets"] = rng.standard_normal(
+            (shape.batch_graphs, cfg.d_out)).astype(np.float32)
+    else:
+        batch["targets"] = rng.standard_normal((n, cfg.d_out)).astype(np.float32)
+    return batch
+
+
+# --------------------------------------------------------------- recsys
+def recsys_specs(cfg: RecsysConfig, shape: RecsysShape):
+    if shape.step == "retrieval":
+        return {
+            "sparse": SDS((1, cfg.n_sparse), jnp.int32),
+            "cand_ids": SDS((shape.n_candidates,), jnp.int32),
+        }
+    batch = {
+        "sparse": SDS((shape.batch, cfg.n_sparse), jnp.int32),
+        "dense": SDS((shape.batch, cfg.n_dense), jnp.float32),
+    }
+    if shape.step == "train":
+        batch["label"] = SDS((shape.batch,), jnp.int32)
+    return batch
+
+
+def recsys_batch(cfg: RecsysConfig, batch_size: int, step: str = "train",
+                 n_candidates: int = 0, seed=0):
+    rng = np.random.default_rng(seed)
+    if step == "retrieval":
+        return {
+            "sparse": rng.integers(0, cfg.vocab_per_field,
+                                   (1, cfg.n_sparse)).astype(np.int32),
+            "cand_ids": rng.integers(0, cfg.vocab_per_field,
+                                     (n_candidates,)).astype(np.int32),
+        }
+    out = {
+        "sparse": rng.integers(0, cfg.vocab_per_field,
+                               (batch_size, cfg.n_sparse)).astype(np.int32),
+        "dense": rng.standard_normal((batch_size, cfg.n_dense)).astype(np.float32),
+    }
+    if step == "train":
+        out["label"] = rng.integers(0, 2, (batch_size,)).astype(np.int32)
+    return out

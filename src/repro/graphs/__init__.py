@@ -1,0 +1,6 @@
+from repro.graphs.formats import (ShardedGraph, block_sparse_adjacency,
+                                  csr_from_coo, shard_graph, shard_node_array)
+from repro.graphs.generators import (GENERATORS, batched_molecules,
+                                     dedupe_edges, erdos_renyi, generate,
+                                     rmat, small_world, star_graph,
+                                     to_undirected)

@@ -1,0 +1,168 @@
+"""Partitioned, statically-shaped graph containers for SPMD consumption.
+
+JAX/XLA requires static shapes, and TPU SPMD requires every shard to hold
+the same-shaped block.  A ``ShardedGraph`` therefore stores, for each of the
+``p`` shards, a fixed-capacity COO edge block padded with sentinel edges
+(``dst == -1``).  Out-edges are partitioned by ``owner(src)`` (the paper's
+1-D partitioning: the owner of a vertex expands it) and, for the
+direction-optimizing bottom-up pass, in-edges are partitioned by
+``owner(dst)``.
+
+JAX sparse is BCOO-only; all message-passing/traversal over these blocks is
+expressed as gather + ``segment``-scatter ops (or the Pallas ``bsr_spmm``
+kernel for the blocked hot path) — see kernel_taxonomy §GNN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partition import Partition1D
+
+_ALIGN = 128  # pad per-shard edge capacity to a lane-aligned multiple
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass
+class ShardedGraph:
+    """1-D partitioned graph in padded per-shard COO blocks.
+
+    Attributes (all numpy; ``.jnp()`` views convert lazily):
+      part: the vertex partition.
+      src_local:  (p, e_cap) int32 — local id of edge source within shard.
+      dst_global: (p, e_cap) int32 — global id of edge target; -1 = padding.
+      in_src_global / in_dst_local: same for the in-edge (transposed)
+        partitioning, used by bottom-up BFS and GNN aggregation.
+      n_edges: true (unpadded) directed edge count.
+    """
+
+    part: Partition1D
+    src_local: np.ndarray
+    dst_global: np.ndarray
+    in_src_global: np.ndarray
+    in_dst_local: np.ndarray
+    n_edges: int
+
+    @property
+    def p(self) -> int:
+        return self.part.p
+
+    @property
+    def e_cap(self) -> int:
+        return self.src_local.shape[1]
+
+    @property
+    def in_e_cap(self) -> int:
+        return self.in_src_global.shape[1]
+
+    def flat(self):
+        """Arrays reshaped to (p * cap,) so shard_map can slice dim 0."""
+        return (
+            self.src_local.reshape(-1),
+            self.dst_global.reshape(-1),
+            self.in_src_global.reshape(-1),
+            self.in_dst_local.reshape(-1),
+        )
+
+    def degrees(self) -> np.ndarray:
+        """In-degree per (padded) global vertex."""
+        deg = np.zeros(self.part.n, dtype=np.int64)
+        d = self.dst_global[self.dst_global >= 0]
+        np.add.at(deg, d, 1)
+        return deg
+
+
+def _bucket(key_owner: np.ndarray, p: int, arrays, e_cap: int, fills):
+    """Stable-sort ``arrays`` by owner and pack into (p, e_cap) blocks."""
+    order = np.argsort(key_owner, kind="stable")
+    counts = np.bincount(key_owner, minlength=p)
+    out = [np.full((p, e_cap), f, dtype=np.int32) for f in fills]
+    start = 0
+    offs = np.zeros(p + 1, dtype=np.int64)
+    np.cumsum(counts, out=offs[1:])
+    for j in range(p):
+        sel = order[offs[j]:offs[j + 1]]
+        k = sel.shape[0]
+        if k > e_cap:
+            raise ValueError(f"shard {j} has {k} edges > capacity {e_cap}")
+        for o, a in zip(out, arrays):
+            o[j, :k] = a[sel]
+    return out, counts
+
+
+def shard_graph(src: np.ndarray, dst: np.ndarray, n: int, p: int,
+                e_cap: int | None = None) -> ShardedGraph:
+    """Partition a COO edge list across ``p`` shards (paper §2.1).
+
+    ``e_cap`` defaults to the max per-shard edge count rounded up to 128.
+    For a star graph this is Θ(n) on the hub's shard — the same imbalance
+    the paper observes (fig. 3); callers can inspect ``degrees()``.
+    """
+    part = Partition1D(n, p)
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.size:
+        assert src.max() < n and dst.max() < n and src.min() >= 0 and dst.min() >= 0
+
+    own_src = np.asarray(part.owner(src))
+    own_dst = np.asarray(part.owner(dst))
+    max_out = int(np.bincount(own_src, minlength=p).max()) if src.size else 0
+    max_in = int(np.bincount(own_dst, minlength=p).max()) if src.size else 0
+    cap_out = e_cap or max(_pad_to(max(max_out, 1), _ALIGN), _ALIGN)
+    cap_in = e_cap or max(_pad_to(max(max_in, 1), _ALIGN), _ALIGN)
+
+    (s_loc, d_glob), _ = _bucket(
+        own_src, p, [np.asarray(part.local_id(src)), dst], cap_out, fills=(0, -1))
+    (in_s_glob, in_d_loc), _ = _bucket(
+        own_dst, p, [src, np.asarray(part.local_id(dst))], cap_in, fills=(-1, 0))
+
+    return ShardedGraph(
+        part=part,
+        src_local=s_loc, dst_global=d_glob,
+        in_src_global=in_s_glob, in_dst_local=in_d_loc,
+        n_edges=int(src.size),
+    )
+
+
+def shard_node_array(x: np.ndarray, part: Partition1D, fill=0.0) -> np.ndarray:
+    """Pad a (n_logical, ...) vertex array to (part.n, ...) for sharding."""
+    return part.pad_vertex_array(np.asarray(x), fill=fill)
+
+
+def csr_from_coo(src: np.ndarray, dst: np.ndarray, n: int):
+    """Host-side CSR (indptr, indices) sorted by src — used by the neighbor
+    sampler and the blocked-adjacency builder for the Pallas kernel."""
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order], dst[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src_s, minlength=n), out=indptr[1:])
+    return indptr, dst_s.astype(np.int64)
+
+
+def block_sparse_adjacency(src: np.ndarray, dst: np.ndarray, n: int,
+                           block: int = 128):
+    """Blocked 0/1 adjacency for the ``bsr_spmm`` Pallas kernel.
+
+    Returns (blocks, block_rows, block_cols): ``blocks[k]`` is a dense
+    (block, block) f32 tile of A[block_rows[k]*B :, block_cols[k]*B :].
+    Only nonempty tiles are materialized (block-CSR, row-major order) —
+    this is the TPU-native storage for the frontier-expansion hot loop
+    (DESIGN.md §Hardware-adaptation).
+    """
+    nb = -(-n // block)
+    n_pad = nb * block
+    br = src // block
+    bc = dst // block
+    key = br * nb + bc
+    uniq, inv = np.unique(key, return_inverse=True)
+    k = uniq.shape[0]
+    blocks = np.zeros((k, block, block), dtype=np.float32)
+    blocks[inv, src % block, dst % block] = 1.0
+    block_rows = (uniq // nb).astype(np.int32)
+    block_cols = (uniq % nb).astype(np.int32)
+    return blocks, block_rows, block_cols, n_pad

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three modules: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd dispatching wrapper) and ref.py (pure-jnp oracle used by the
+models off-TPU and by the allclose test sweeps).
+"""

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the block-sparse SpMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr_spmm.kernel import DEFAULT_BLOCK, bsr_spmm
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(blocks, block_rows, block_cols, x, *, n_rows_pad,
+         block: int = DEFAULT_BLOCK, interpret: bool | None = None):
+    """Block-sparse A @ X. Uses the Pallas kernel (interpret mode off-TPU)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return bsr_spmm(blocks, block_rows, block_cols, x, n_rows_pad=n_rows_pad,
+                    block=block, interpret=interp)
+
+
+def frontier_expand(blocks, block_rows, block_cols, frontier, *, n_rows_pad,
+                    block: int = DEFAULT_BLOCK, interpret: bool | None = None):
+    """Batched BFS frontier expansion: (A @ F) > 0 over the MXU.
+
+    frontier: (n_cols_pad, S) uint8 — S simultaneous sources.  For S < 128
+    the lane dimension is padded; batching sources to a multiple of 128 is
+    what makes the TPU formulation profitable (DESIGN.md).
+    """
+    y = spmm(blocks, block_rows, block_cols, frontier.astype(jnp.float32),
+             n_rows_pad=n_rows_pad, block=block, interpret=interpret)
+    return (y > 0).astype(jnp.uint8)
+
+
+def spmm_reference(blocks, block_rows, block_cols, x, *, n_rows_pad):
+    return bsr_spmm_ref(blocks, block_rows, block_cols, x,
+                        n_rows_pad=n_rows_pad)

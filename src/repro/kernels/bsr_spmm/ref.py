@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the block-sparse SpMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bsr_spmm_ref(blocks: jnp.ndarray, block_rows: jnp.ndarray,
+                 block_cols: jnp.ndarray, x: jnp.ndarray, *,
+                 n_rows_pad: int) -> jnp.ndarray:
+    """Dense-per-block einsum + segment-sum scatter. O(K·B·d) memory."""
+    k, b, _ = blocks.shape
+    n, d = x.shape
+    xb = x.reshape(n // b, b, d)
+    contrib = jnp.einsum("kab,kbd->kad", blocks.astype(jnp.float32),
+                         xb[block_cols].astype(jnp.float32))
+    y = jax.ops.segment_sum(contrib, block_rows,
+                            num_segments=n_rows_pad // b)
+    return y.reshape(n_rows_pad, d)
+
+
+def frontier_expand_ref(blocks, block_rows, block_cols, frontier, *,
+                        n_rows_pad):
+    """Boolean-semiring BFS expansion oracle: candidates = (A @ F) > 0."""
+    y = bsr_spmm_ref(blocks, block_rows, block_cols,
+                     frontier.astype(jnp.float32), n_rows_pad=n_rows_pad)
+    return (y > 0).astype(jnp.uint8)

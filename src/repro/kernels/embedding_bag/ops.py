@@ -1,0 +1,29 @@
+"""Jit'd public EmbeddingBag wrappers (kernel on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_sum
+from repro.kernels.embedding_bag.ref import (embedding_bag_mean_ref,
+                                             embedding_bag_sum_ref)
+
+
+def embedding_bag(indices, table, *, mode: str = "sum",
+                  interpret: bool | None = None, use_kernel: bool = True):
+    """EmbeddingBag(sum|mean) over (B, L) bags of rows of (V, D) table."""
+    if not use_kernel:
+        if mode == "sum":
+            return embedding_bag_sum_ref(indices, table)
+        if mode == "mean":
+            return embedding_bag_mean_ref(indices, table)
+        raise ValueError(mode)
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    s = embedding_bag_sum(indices, table, interpret=interp)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        cnt = jnp.maximum((indices >= 0).sum(axis=1, keepdims=True), 1)
+        return (s / cnt).astype(table.dtype)
+    raise ValueError(mode)

@@ -1,0 +1,19 @@
+"""Pure-jnp EmbeddingBag oracle: take + mask + sum (also the portable
+fallback path the recsys model uses off-TPU)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_sum_ref(indices: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """indices: (B, L) int32, -1 pads; table: (V, D). Returns (B, D)."""
+    valid = (indices >= 0)[..., None]
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0)  # (B, L, D)
+    return jnp.where(valid, rows, 0).sum(axis=1).astype(table.dtype)
+
+
+def embedding_bag_mean_ref(indices: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    s = embedding_bag_sum_ref(indices, table)
+    cnt = jnp.maximum((indices >= 0).sum(axis=1, keepdims=True), 1)
+    return (s / cnt).astype(table.dtype)

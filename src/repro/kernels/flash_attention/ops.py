@@ -1,0 +1,30 @@
+"""Public attention entry point: Pallas kernel on TPU-shaped problems,
+oracle fallback for decode/odd shapes."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_kernel: bool | None = None, interpret: bool | None = None,
+              block_q: int = 128, block_k: int = 128):
+    """Dispatch between the flash kernel and the jnp oracle.
+
+    Kernel requires Sq/Skv divisible by the block sizes after clamping;
+    decode (Sq == 1) always takes the oracle path.
+    """
+    b, hq, sq, dh = q.shape
+    skv = k.shape[2]
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    kernel_ok = sq % bq == 0 and skv % bk == 0 and sq > 1
+    if use_kernel is None:
+        use_kernel = kernel_ok
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=bq, block_k=bk, interpret=interp)

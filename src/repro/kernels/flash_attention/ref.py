@@ -1,0 +1,33 @@
+"""Pure-jnp attention oracle (materialized scores) with GQA/causal/window."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh). fp32 softmax."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)  # rows with no visible key -> all-zero
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.where(l == 0, 1.0, l),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and extract roofline terms.  MUST be run as its own process (the two
+lines above pin the device count before any jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+
+No arrays are ever materialized: params come from eval_shape, inputs are
+ShapeDtypeStructs, and .lower().compile() proves the sharding + memory plan.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.base import ARCH_IDS, get_arch  # noqa: E402
+from repro.launch import shardings as sh  # noqa: E402
+from repro.launch.flops_est import model_flops  # noqa: E402
+from repro.launch.hlo_stats import analyze, collective_bytes  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_axes  # noqa: E402
+from repro.launch.steps import build_bundle  # noqa: E402
+from repro.models import sharding_hints  # noqa: E402
+
+
+def lower_owner_gnn(arch_id: str, shape_name: str, *, multi_pod: bool,
+                    donate: bool = True):
+    """Owner-exchange GraphCast cell (paper-technique path; §Perf)."""
+    import jax.numpy as jnp  # noqa: F401
+    from repro.core.partition import Partition1D
+    from repro.launch.steps import _make_state, _train_wrap
+    from repro.models.gnn import dist_graphcast as dg
+    from repro.optim.adamw import AdamWConfig
+
+    spec = get_arch(arch_id)
+    from repro.configs.base import get_shape
+    shape = get_shape(spec, shape_name)
+    cfg = spec.config
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = mesh_axes(mesh)
+    p = mesh.size
+
+    def pad(x, m=64):
+        return -(-int(x) // m) * m
+
+    e_cap = pad(shape.n_edges / p * 1.25)
+    r_cap = pad(min(e_cap, e_cap / p * 1.5 + 64))
+    loss_fn = dg.make_loss_fn(cfg, mesh, ax.flat)
+    fn = _train_wrap(loss_fn, AdamWConfig())
+
+    params_shape = jax.eval_shape(
+        lambda k: dg.init_params(cfg, shape.d_feat, k), jax.random.PRNGKey(0))
+    state_shape = jax.eval_shape(_make_state, params_shape)
+    from jax.sharding import PartitionSpec as P
+    pspecs = jax.tree.map(lambda _: P(), params_shape)
+    sspecs = {"params": pspecs,
+              "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+    batch_shape = dg.routing_specs(shape.n_nodes, p, shape.d_feat, cfg,
+                                   r_cap, e_cap)
+    bspecs = dg.routing_batch_specs(ax.flat)
+
+    jitted = jax.jit(fn, in_shardings=(sh.to_named(sspecs, mesh),
+                                       sh.to_named(bspecs, mesh)),
+                     donate_argnums=(0,) if donate else ())
+    with mesh:
+        t0 = time.time()
+        compiled = jitted.lower(state_shape, batch_shape).compile()
+        dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    roof = analyze(compiled, p, model_flops_override=0.0)
+    meta = {
+        "arch": f"{arch_id}+owner", "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": p,
+        "compile_s": round(dt, 1),
+        "bytes_per_device": int(mem.temp_size_in_bytes
+                                + mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        "r_cap": r_cap, "e_cap": e_cap,
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in roof.row().items()},
+    }
+    return compiled, meta
+
+
+def _batch_specs(bundle, mesh):
+    if bundle.family == "lm":
+        return sh.lm_batch_specs(bundle.cfg, bundle.shape, mesh)
+    if bundle.family == "gnn":
+        return sh.gnn_batch_specs(bundle.input_specs(), mesh)
+    return sh.recsys_batch_specs(bundle.cfg, bundle.shape, mesh)
+
+
+def _param_specs(bundle, params_shape, mesh, lm_mode="tp"):
+    if bundle.family == "lm":
+        return sh.lm_param_specs(bundle.cfg, mesh, mode=lm_mode)
+    if bundle.family == "gnn":
+        return sh.gnn_param_specs(params_shape, mesh)
+    return sh.recsys_param_specs(bundle.cfg, mesh)
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               donate: bool = True, zero1: bool = True, fsdp: bool = True,
+               pad: int = 512, microbatches: int = 1, seq_shard: bool = True,
+               lm_mode: str = "tp"):
+    """Lower + compile one cell; returns (compiled, meta dict)."""
+    spec = get_arch(arch_id)
+    bundle = build_bundle(spec, shape_name, pad=pad,
+                          microbatches=microbatches)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+
+    params_shape = jax.eval_shape(bundle.init_params, jax.random.PRNGKey(0))
+    pspecs = _param_specs(bundle, params_shape, mesh, lm_mode=lm_mode)
+    bspecs = _batch_specs(bundle, mesh)
+    batch_shape = bundle.input_specs()
+    ax = mesh_axes(mesh)
+    pure_fsdp = lm_mode == "fsdp" and bundle.family == "lm"
+    if pure_fsdp and bundle.step_kind == "train":
+        from jax.sharding import PartitionSpec as P
+        if bundle.shape.global_batch % mesh.size == 0:
+            bspecs = {"tokens": P(ax.flat, None)}
+
+    pspecs_final = pspecs
+    if bundle.step_kind == "train":
+        state_shape = jax.eval_shape(
+            lambda ps: bundle.make_state(ps), params_shape)
+        use_fsdp = fsdp and bundle.family == "lm"
+        if use_fsdp:
+            pspecs_final = sh.fsdp_specs(
+                pspecs, params_shape, mesh,
+                dp_axes=ax.flat if pure_fsdp else None)
+        sspecs = sh.state_specs(pspecs_final, params_shape, mesh,
+                                zero1=zero1, fsdp=False)
+        in_shardings = (sh.to_named(sspecs, mesh), sh.to_named(bspecs, mesh))
+        args = (state_shape, batch_shape)
+        donate_args = (0,) if donate else ()
+    else:
+        in_shardings = (sh.to_named(pspecs, mesh), sh.to_named(bspecs, mesh))
+        args = (params_shape, batch_shape)
+        donate_args = (1,) if (donate and bundle.step_kind == "decode") else ()
+
+    jitted = jax.jit(bundle.fn, in_shardings=in_shardings,
+                     donate_argnums=donate_args)
+    with mesh, sharding_hints.hints(
+            mesh, ax.flat if pure_fsdp else ax.dp, ax.model, ax.flat,
+            seq_shard=seq_shard and not pure_fsdp,
+            param_specs=pspecs_final if bundle.step_kind == "train" else None):
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        dt = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = analyze(compiled, chips, model_flops(bundle))
+    coll = collective_bytes(compiled.as_text())
+    meta = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "compile_s": round(dt, 1),
+        "bytes_per_device": int(mem.temp_size_in_bytes
+                                + mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "collectives": {k: v for k, v in coll.items() if v},
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in roof.row().items()},
+    }
+    return compiled, meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--lm-mode", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--gnn-exchange", default="gspmd",
+                    choices=["gspmd", "owner"])
+    ap.add_argument("--no-donate", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch_id in ARCH_IDS:
+            spec = get_arch(arch_id)
+            for shp in spec.shapes:
+                cells.append((arch_id, shp.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    rows, failures = [], []
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch_id}/{shape_name}/{'multi' if mp else 'single'}"
+            try:
+                if args.gnn_exchange == "owner":
+                    compiled, meta = lower_owner_gnn(
+                        arch_id, shape_name, multi_pod=mp,
+                        donate=not args.no_donate)
+                else:
+                    compiled, meta = lower_cell(
+                        arch_id, shape_name, multi_pod=mp,
+                        donate=not args.no_donate, zero1=not args.no_zero1,
+                        fsdp=not args.no_fsdp,
+                        microbatches=args.microbatches,
+                        seq_shard=not args.no_seq_shard,
+                        lm_mode=args.lm_mode)
+                rows.append(meta)
+                print(f"OK   {tag:60s} compile={meta['compile_s']:7.1f}s "
+                      f"mem/dev={meta['bytes_per_device']/2**30:6.2f}GiB "
+                      f"bottleneck={meta['bottleneck']:10s} "
+                      f"t=({meta['t_compute_s']:.2e},{meta['t_memory_s']:.2e},"
+                      f"{meta['t_collective_s']:.2e})s", flush=True)
+                del compiled
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append({"cell": tag, "error": f"{type(e).__name__}: {e}"})
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "failures": failures}, f, indent=1)
+        print(f"wrote {args.out}: {len(rows)} ok, {len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

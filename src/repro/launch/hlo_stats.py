@@ -1,0 +1,127 @@
+"""Roofline-term extraction from compiled executables.
+
+``cost_analysis`` gives HLO FLOPs and bytes accessed; collective traffic is
+not in there, so we parse the post-SPMD optimized HLO text and sum the
+output-shape bytes of every collective op.  Hardware model: TPU v5e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- TPU v5e per-chip constants (targets; runtime here is CPU) ---
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+                "collective-permute")
+
+# result type(s) then op name, e.g.:
+#   %ar = bf16[128,4096]{1,0} all-reduce(...)
+#   %tup = (f32[4]{0}, f32[8]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|all-to-all|"
+    r"reduce-scatter|collective-permute-start|collective-permute)\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of collective output bytes, by op kind (whole-program, i.e. the
+    per-device SPMD program: sizes are already per-shard)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        out[op] += _shape_bytes(type_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per-device HLO FLOPs
+    hbm_bytes: float          # per-device bytes accessed
+    coll_bytes: float         # per-device collective bytes
+    chips: int
+    model_flops: float = 0.0  # 6*N*D-style useful-work estimate (global)
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        if self.model_flops and self.flops:
+            return self.model_flops / (self.flops * self.chips)
+        return float("nan")
+
+    def row(self):
+        return {
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_chip": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "useful_flops_ratio": self.useful_ratio,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0,
+            model_flops_override=None) -> Roofline:
+    """Roofline terms.  FLOPs and collective bytes are LOOP-AWARE (HLO
+    while bodies weighted by trip count — hlo_parse); cost_analysis counts
+    loop bodies once and is kept only as a floor.  HBM bytes are scaled by
+    the flops correction ratio (same loop undercount applies)."""
+    from repro.launch.hlo_parse import loop_aware_stats
+    if model_flops_override is not None:
+        model_flops = model_flops_override
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca_flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    st = loop_aware_stats(compiled.as_text())
+    flops = max(ca_flops, st["dot_flops"])
+    if ca_flops > 0 and flops > ca_flops:
+        hbm *= flops / ca_flops  # loop-corrected estimate
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=st["coll_total"],
+                    chips=chips, model_flops=model_flops)

@@ -1,0 +1,48 @@
+"""Serving launcher: continuous batching over a chosen LM arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_34b --reduced \
+        --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import transformer as tf
+from repro.serve.batcher import Request, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.reduced if args.reduced else spec.config
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    srv = Server(cfg, params, batch_slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        srv.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+            max_new_tokens=args.max_new_tokens))
+    t0 = time.time()
+    done = srv.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"{len(done)} requests, {toks} tokens, {dt:.2f}s "
+          f"({toks/max(dt,1e-9):.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""PartitionSpec assignment for every family's params, state and batches.
+
+Strategy (baseline; §Perf iterates on it per-cell):
+  * LM: Megatron-style tensor parallel over ``model`` (attention heads when
+    head count divides the axis, otherwise the contracting dim), MoE expert
+    parallel over ``model``, batch over ``data`` (+``pod``), vocab-sharded
+    embedding.  Optimizer moments additionally sharded over ``data``
+    (ZeRO-1) on the first divisible dimension.
+  * GNN/BFS: 1-D vertex partitioning over ALL mesh axes flattened — the
+    paper's partitioning, applied to node/edge arrays; model params are
+    small and replicated.
+  * RecSys: embedding-table rows 1-D partitioned over ``model`` (the
+    owner-exchange technique), batch over data axes.
+
+Decode caches shard batch over ``data`` when divisible and always shard the
+sequence dim over ``model`` (sequence-parallel KV) — for long_500k (B=1)
+the sequence dim takes every axis.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TransformerConfig
+from repro.launch.mesh import Axes, mesh_axes
+
+
+def _size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(n: int, mesh, axes) -> bool:
+    return n % _size(mesh, axes) == 0
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg: TransformerConfig, mesh, mode: str = "tp") -> dict:
+    """mode='tp': Megatron tensor parallel over the model axis (+FSDP
+    storage added by fsdp_specs).  mode='fsdp': no tensor parallelism —
+    weights replicated for compute, storage sharded over ALL axes, batch
+    over all axes (pure ZeRO-3)."""
+    ax = mesh_axes(mesh)
+    m = ax.model
+    if mode == "fsdp":
+        def rep(tree):
+            return jax.tree.map(lambda _: None, tree)
+        blocks = []
+        for spec in cfg.pattern:
+            b = {"attn": {k: P() for k in
+                          (["wq", "wk", "wv", "wo"]
+                           + (["bq", "bk", "bv"] if cfg.qkv_bias else []))},
+                 "ln1": P(), "ln2": P()}
+            if spec.moe and cfg.moe is not None:
+                moe = {"router": P(), "w_gate": P(m, None, None),
+                       "w_up": P(m, None, None), "w_down": P(m, None, None)}
+                if cfg.moe.shared_experts:
+                    moe["shared"] = {"w_gate": P(), "w_up": P(),
+                                     "w_down": P()}
+                b["moe"] = moe
+            else:
+                b["mlp"] = {"w_gate": P(), "w_up": P(), "w_down": P()}
+            blocks.append(b)
+        out = {"embed": P(), "blocks": blocks, "final_norm": P()}
+        if not cfg.tie_embeddings:
+            out["unembed"] = P()
+        return out
+    hq_ok = _div(cfg.n_heads, mesh, m)
+    hkv_ok = _div(cfg.n_kv_heads, mesh, m)
+
+    def attn_specs(has_bias):
+        s = {
+            # heads over model when divisible, else contract D (row-parallel)
+            "wq": P(None, None, m, None) if hq_ok else P(None, m, None, None),
+            "wk": P(None, None, m, None) if hkv_ok else P(None, m, None, None),
+            "wv": P(None, None, m, None) if hkv_ok else P(None, m, None, None),
+            "wo": P(None, m, None, None) if hq_ok else P(None, None, None, m),
+        }
+        if has_bias:
+            s["bq"] = P(None, m, None) if hq_ok else P(None, None, None)
+            s["bk"] = P(None, m, None) if hkv_ok else P(None, None, None)
+            s["bv"] = P(None, m, None) if hkv_ok else P(None, None, None)
+        return s
+
+    blocks = []
+    for spec in cfg.pattern:
+        b = {"attn": attn_specs(cfg.qkv_bias),
+             "ln1": P(None, None), "ln2": P(None, None)}
+        if spec.moe and cfg.moe is not None:
+            moe = {
+                "router": P(None, None, None),  # tiny; shard_map wants it whole
+                "w_gate": P(None, m, None, None),
+                "w_up": P(None, m, None, None),
+                "w_down": P(None, m, None, None),
+            }
+            if cfg.moe.shared_experts:
+                moe["shared"] = {"w_gate": P(None, None, m),
+                                 "w_up": P(None, None, m),
+                                 "w_down": P(None, m, None)}
+            b["moe"] = moe
+        else:
+            b["mlp"] = {"w_gate": P(None, None, m), "w_up": P(None, None, m),
+                        "w_down": P(None, m, None)}
+        blocks.append(b)
+
+    out = {
+        # input table: D-sharded so the token gather never all-gathers V
+        "embed": P(None, m) if _div(cfg.d_model, mesh, m) else P(None, None),
+        "blocks": blocks,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        # output head: V-sharded so CE/logits stay vocab-partitioned
+        out["unembed"] = (P(m, None) if _div(cfg.vocab, mesh, m)
+                          else P(None, None))
+    else:
+        out["embed"] = P(m, None) if _div(cfg.vocab, mesh, m) else P(None, None)
+    return out
+
+
+def lm_batch_specs(cfg: TransformerConfig, shape, mesh) -> dict:
+    ax = mesh_axes(mesh)
+    dp = ax.dp
+    if shape.step in ("train", "prefill"):
+        bspec = dp if _div(shape.global_batch, mesh, dp) else None
+        return {"tokens": P(bspec, None)}
+    # decode: cache (G, B, Hkv, Smax, Dh)
+    b_ok = _div(shape.global_batch, mesh, dp)
+    seq_axes = (ax.model,) if b_ok else tuple([*dp, ax.model])
+    cache_spec = P(None, dp if b_ok else None, None, seq_axes, None)
+    return {
+        "cache": [{"k": cache_spec, "v": cache_spec} for _ in cfg.pattern],
+        "pos": P(),
+        "last_token": P(dp if b_ok else None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GNN — 1-D vertex partition over all axes (the paper's partitioning)
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(params_shape, mesh) -> dict:
+    return jax.tree.map(lambda _: P(), params_shape)
+
+
+def gnn_batch_specs(batch_specs: dict, mesh) -> dict:
+    ax = mesh_axes(mesh)
+    flat = ax.flat
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "graph_targets":
+            out[k] = P(None, None)
+        elif v.ndim == 1:
+            out[k] = P(flat if v.shape[0] % _size(mesh, flat) == 0 else None)
+        else:
+            rest = (None,) * (v.ndim - 1)
+            out[k] = P(flat if v.shape[0] % _size(mesh, flat) == 0 else None,
+                       *rest)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RecSys — row-partitioned tables (owner-exchange), data-parallel batch
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(cfg, mesh) -> dict:
+    ax = mesh_axes(mesh)
+    m = ax.model
+    row = m if _div(cfg.total_rows, mesh, m) else None
+    return {
+        "table": P(row, None),
+        "lin_table": P(row, None),
+        "lin_dense": P(None),
+        "bias": P(),
+        "mlp": [{"w": P(None, None), "b": P(None)}
+                for _ in range(len(cfg.mlp_dims) + 1)],
+    }
+
+
+def recsys_batch_specs(cfg, shape, mesh) -> dict:
+    ax = mesh_axes(mesh)
+    dp = ax.dp
+    if shape.step == "retrieval":
+        c_ok = _div(shape.n_candidates, mesh, dp)
+        return {"sparse": P(None, None), "cand_ids": P(dp if c_ok else None)}
+    b = dp if _div(shape.batch, mesh, dp) else None
+    out = {"sparse": P(b, None), "dense": P(b, None)}
+    if shape.step == "train":
+        out["label"] = P(b)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# optimizer state: ZeRO-1 (moments extra-sharded over data)
+# ---------------------------------------------------------------------------
+
+def zero1_spec(param_spec: P, shape: tuple, mesh, dp) -> P:
+    """Extend a param spec by sharding the first free divisible dim over
+    the data axes (classic optimizer-state sharding).  No-op if the spec
+    already uses a data axis (e.g. FSDP-sharded storage)."""
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    if any(a in used for a in dp):
+        return param_spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % _size(mesh, dp) == 0 and dim > 0:
+            entries[i] = dp
+            return P(*entries)
+    return param_spec
+
+
+def fsdp_specs(param_specs, params_shape, mesh, min_size: int = 2 ** 20,
+               dp_axes=None):
+    """FSDP: shard weight *storage* over the data axes on the first free
+    divisible dim (small leaves stay as-is).  GSPMD all-gathers weights at
+    use and transposes the gather to a reduce-scatter for gradients — the
+    standard ZeRO-3 dataflow, expressed purely via placement.  Pass
+    ``dp_axes`` to shard storage over a wider axis set (pure-FSDP mode)."""
+    ax = mesh_axes(mesh)
+    dp = tuple(dp_axes) if dp_axes else ax.dp
+
+    def one(sp, sh):
+        import numpy as np
+        if int(np.prod(sh.shape)) * 2 < min_size:
+            return sp
+        return zero1_spec(sp, sh.shape, mesh, dp)
+
+    return jax.tree.map(one, param_specs, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(param_specs, params_shape, mesh, *, zero1: bool = True,
+                fsdp: bool = False):
+    """Specs for {'params', 'opt': {'m','v','step'}} train state."""
+    ax = mesh_axes(mesh)
+    if fsdp:
+        param_specs = fsdp_specs(param_specs, params_shape, mesh)
+    if not zero1:
+        mv = param_specs
+    else:
+        mv = jax.tree.map(
+            lambda sp, sh: zero1_spec(sp, sh.shape, mesh, ax.dp),
+            param_specs, params_shape,
+            is_leaf=lambda x: isinstance(x, P))
+    return {"params": param_specs,
+            "opt": {"m": mv, "v": mv, "step": P()}}
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,210 @@
+"""Unified step builder: (architecture x shape) -> jittable step + specs.
+
+Everything downstream — smoke tests, the trainer, the multi-pod dry-run,
+the roofline benches — gets its step function and abstract input specs from
+``build_bundle``, so there is exactly one definition of what each of the 40
+assigned cells computes.
+
+Step kinds per family:
+  lm      train (fwd+bwd+AdamW) | prefill | decode
+  gnn     train (all four shape modes)
+  recsys  train | serve | retrieval
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchSpec, GNNShape, LMShape, RecsysShape,
+                                TransformerConfig, get_shape)
+from repro.data import synthetic as syn
+from repro.models import transformer as tf
+from repro.models.gnn import models as gnn
+from repro.models.recsys import deepfm
+from repro.models import sharding_hints as hints
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+
+
+@dataclasses.dataclass
+class StepBundle:
+    arch_id: str
+    family: str
+    step_kind: str           # train | prefill | decode | serve | retrieval
+    cfg: Any
+    shape: Any
+    init_params: Callable    # key -> params
+    make_state: Callable     # params -> state (train) or params (serve)
+    fn: Callable             # (state, batch) -> outputs
+    input_specs: Callable    # () -> batch pytree of ShapeDtypeStruct
+    make_batch: Callable     # (seed) -> concrete batch (smoke/examples)
+
+
+def reduce_shape(shape, family: str):
+    """Tiny same-structure shape for CPU smoke tests."""
+    if family == "lm":
+        return LMShape(shape.name, shape.step, seq_len=32,
+                       global_batch=2)
+    if family == "gnn":
+        kw = dict(name=shape.name, mode=shape.mode)
+        if shape.mode == "sampled":
+            return GNNShape(**kw, n_nodes=64, n_edges=256, d_feat=12,
+                            batch_nodes=8, fanout=(3, 2))
+        if shape.mode == "batched":
+            return GNNShape(**kw, n_nodes=10, n_edges=24, d_feat=12,
+                            batch_graphs=4)
+        return GNNShape(**kw, n_nodes=200, n_edges=800, d_feat=12)
+    if family == "recsys":
+        return RecsysShape(shape.name, shape.step, batch=64,
+                           n_candidates=256 if shape.step == "retrieval" else 0)
+    raise ValueError(family)
+
+
+def _train_wrap(loss_fn, opt_cfg: AdamWConfig, microbatches: int = 1):
+    """fwd+bwd+AdamW step; with microbatches > 1 the batch is split on its
+    leading axis and gradients accumulate in fp32 across a scan — activation
+    memory scales with B/microbatches while keeping the same global batch
+    (the standard grad-accumulation lever; see EXPERIMENTS.md §Perf)."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(state["params"], batch)
+            grads = hints.constrain_grads(grads)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def micro(carry, b):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state["params"], b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                    g_acc, g)
+                return (g_acc, l_acc + l / microbatches), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0)), mb)
+            grads = hints.constrain_grads(grads)
+        new_p, new_opt, m = apply_updates(opt_cfg, state["params"], grads,
+                                          state["opt"])
+        return {"params": new_p, "opt": new_opt}, {"loss": loss, **m}
+    return step
+
+
+def _make_state(params):
+    return {"params": params, "opt": init_state(params)}
+
+
+# ---------------------------------------------------------------------------
+
+def _lm_bundle(spec: ArchSpec, shape: LMShape, cfg: TransformerConfig,
+               opt_cfg: AdamWConfig, microbatches: int = 1) -> StepBundle:
+    if shape.step == "train":
+        fn = _train_wrap(
+            lambda p, b: tf.lm_loss(cfg, p, b["tokens"]), opt_cfg,
+            microbatches=microbatches)
+        return StepBundle(
+            spec.arch_id, "lm", "train", cfg, shape,
+            init_params=lambda key: tf.init_params(cfg, key),
+            make_state=_make_state, fn=fn,
+            input_specs=lambda: syn.lm_train_specs(cfg, shape),
+            make_batch=lambda seed=0: syn.lm_train_batch(
+                cfg, shape.global_batch, shape.seq_len, seed))
+
+    if shape.step == "prefill":
+        def fn(params, batch):
+            logits, cache, _ = tf.prefill(cfg, params, batch["tokens"],
+                                          max_len=shape.seq_len)
+            return logits, cache
+        return StepBundle(
+            spec.arch_id, "lm", "prefill", cfg, shape,
+            init_params=lambda key: tf.init_params(cfg, key),
+            make_state=lambda p: p, fn=fn,
+            input_specs=lambda: syn.lm_prefill_specs(cfg, shape),
+            make_batch=lambda seed=0: {
+                "tokens": syn.lm_train_batch(
+                    cfg, shape.global_batch, shape.seq_len - 1,
+                    seed)["tokens"]})
+
+    # decode: one new token against a seq_len-deep KV cache
+    def fn(params, batch):
+        return tf.decode_step(cfg, params, batch["cache"], batch["pos"],
+                              batch["last_token"])
+
+    def make_batch(seed=0):
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        cache = tf.init_cache(cfg, shape.global_batch, shape.seq_len)
+        return {"cache": cache,
+                "pos": jnp.int32(shape.seq_len - 1),
+                "last_token": rng.integers(
+                    0, cfg.vocab, (shape.global_batch,)).astype("int32")}
+
+    return StepBundle(
+        spec.arch_id, "lm", "decode", cfg, shape,
+        init_params=lambda key: tf.init_params(cfg, key),
+        make_state=lambda p: p, fn=fn,
+        input_specs=lambda: syn.lm_decode_specs(cfg, shape),
+        make_batch=make_batch)
+
+
+def _gnn_bundle(spec: ArchSpec, shape: GNNShape, cfg,
+                opt_cfg: AdamWConfig, pad: int) -> StepBundle:
+    fn = _train_wrap(lambda p, b: gnn.loss_fn(cfg, p, b), opt_cfg)
+    return StepBundle(
+        spec.arch_id, "gnn", "train", cfg, shape,
+        init_params=lambda key: gnn.init_params(cfg, shape.d_feat, key),
+        make_state=_make_state, fn=fn,
+        input_specs=lambda: syn.gnn_specs(cfg, shape, pad=pad),
+        make_batch=lambda seed=0: syn.gnn_batch(cfg, shape, seed=seed,
+                                                pad=min(pad, 128)))
+
+
+def _recsys_bundle(spec: ArchSpec, shape: RecsysShape, cfg,
+                   opt_cfg: AdamWConfig) -> StepBundle:
+    if shape.step == "train":
+        fn = _train_wrap(lambda p, b: deepfm.loss_fn(cfg, p, b), opt_cfg)
+        make_state = _make_state
+        kind = "train"
+    elif shape.step == "serve":
+        fn = lambda params, batch: deepfm.serve_step(cfg, params, batch)
+        make_state = lambda p: p
+        kind = "serve"
+    else:
+        fn = lambda params, batch: deepfm.retrieval_step(cfg, params, batch)
+        make_state = lambda p: p
+        kind = "retrieval"
+    return StepBundle(
+        spec.arch_id, "recsys", kind, cfg, shape,
+        init_params=lambda key: deepfm.init_params(cfg, key),
+        make_state=make_state, fn=fn,
+        input_specs=lambda: syn.recsys_specs(cfg, shape),
+        make_batch=lambda seed=0: syn.recsys_batch(
+            cfg, shape.batch, step=shape.step,
+            n_candidates=shape.n_candidates, seed=seed))
+
+
+def build_bundle(spec: ArchSpec, shape_or_name, *, reduced: bool = False,
+                 opt_cfg: AdamWConfig = AdamWConfig(), pad: int = 512,
+                 microbatches: int = 1) -> StepBundle:
+    shape = (get_shape(spec, shape_or_name)
+             if isinstance(shape_or_name, str) else shape_or_name)
+    cfg = spec.reduced if reduced else spec.config
+    if reduced:
+        shape = reduce_shape(shape, spec.family)
+        pad = min(pad, 64)
+        microbatches = min(microbatches, 2)
+    if spec.family == "lm":
+        return _lm_bundle(spec, shape, cfg, opt_cfg, microbatches)
+    if spec.family == "gnn":
+        return _gnn_bundle(spec, shape, cfg, opt_cfg, pad)
+    if spec.family == "recsys":
+        return _recsys_bundle(spec, shape, cfg, opt_cfg)
+    raise ValueError(spec.family)

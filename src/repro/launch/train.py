@@ -1,0 +1,57 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gcn_cora \
+        --shape full_graph_sm --steps 50 --reduced
+
+On a TPU cluster this binary is started once per host (JAX distributed
+initialization via JAX_COORDINATOR/etc.), builds the production mesh over
+the global device set, and drives the same Trainer; on this CPU container
+``--reduced`` runs the smoke-scale configs end-to-end.  ``--compression``
+enables the cross-pod gradient compressor.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import get_arch
+from repro.launch.steps import build_bundle
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU container)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "topk"])
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps)
+    bundle = build_bundle(spec, args.shape, reduced=args.reduced,
+                          opt_cfg=opt_cfg, microbatches=args.microbatches)
+    assert bundle.step_kind == "train", \
+        f"{args.shape} is a {bundle.step_kind} cell; use launch.serve"
+
+    tcfg = TrainerConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir,
+                         grad_compression=args.compression)
+    trainer = Trainer(bundle, tcfg, opt_cfg=opt_cfg)
+    trainer.run()
+    for m in trainer.metrics_log:
+        print(m)
+    if trainer.straggler_events:
+        print(f"straggler events: {trainer.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Shared neural-net layers: norms, RoPE, chunked online-softmax attention.
+
+Attention note: the Pallas flash kernel (kernels/flash_attention) is the
+TPU hot path and is validated in interpret mode; the functions here are the
+*portable* XLA implementation used inside the jitted train/serve steps so
+the multi-pod dry-run lowers on any backend.  ``chunked_attention`` is an
+online-softmax scan over KV chunks — same O(S) memory recipe as flash, so
+a 32k-token prefill never materializes an (S, S) score matrix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, H, S, Dh); positions: (S,) shared or (B, S) per-sequence
+    (continuous batching serves sequences at different depths)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    if positions.ndim == 1:
+        cos, sin = jnp.cos(ang)[None, None], jnp.sin(ang)[None, None]
+    else:  # (B, S, half) -> broadcast over heads
+        cos, sin = jnp.cos(ang)[:, None], jnp.sin(ang)[:, None]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------- chunked flash-style attn
+def _attn_mask(q_pos, k_pos, valid_len, causal, window):
+    mask = k_pos[None, :] < valid_len
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    if window > 0:
+        mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+    return mask
+
+
+def _attn_fwd_scan(q, k, v, q_offset, kv_len, causal, window, chunk):
+    """Online-softmax forward; returns (out, m, l) with softmax stats."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = dh ** -0.5
+    nc = skv // chunk
+
+    qg = q.reshape(b, hkv, group, sq, dh)
+    kc = jnp.moveaxis(k.reshape(b, hkv, nc, chunk, dh), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, hkv, nc, chunk, dh), 2, 0)
+    per_batch = (hasattr(q_offset, "ndim") and q_offset.ndim == 1) or \
+                (kv_len is not None and hasattr(kv_len, "ndim")
+                 and kv_len.ndim == 1)
+    if per_batch:  # continuous batching: each sequence at its own depth
+        q_off = jnp.asarray(q_offset) * jnp.ones((b,), jnp.int32)
+        q_pos = q_off[:, None] + jnp.arange(sq)[None, :]       # (B, Sq)
+        vl = (jnp.asarray(skv if kv_len is None else kv_len)
+              * jnp.ones((b,), jnp.int32))[:, None]            # (B, 1)
+    else:
+        q_pos = q_offset + jnp.arange(sq)
+        vl = skv if kv_len is None else kv_len
+
+    def step(carry, xs):
+        m, l, acc = carry
+        j, k_j, v_j = xs
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qg.astype(jnp.float32),
+                       k_j.astype(jnp.float32)) * scale
+        k_pos = j * chunk + jnp.arange(chunk)
+        if per_batch:
+            mask = k_pos[None, None, :] < vl[:, :, None]       # (B, 1, C)
+            mask = jnp.broadcast_to(mask, (b, sq, chunk))
+            if causal:
+                mask = mask & (q_pos[:, :, None] >= k_pos[None, None, :])
+            if window > 0:
+                mask = mask & ((q_pos[:, :, None] - k_pos[None, None, :])
+                               < window)
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
+        else:
+            mask = _attn_mask(q_pos, k_pos, vl, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = s.max(-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m > NEG_INF / 2, jnp.exp(m - m_new), 0.0)
+        l_new = alpha * l + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhgqc,bhcd->bhgqd", p,
+                                           v_j.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (jnp.arange(nc), kc, vc))
+    out = acc / jnp.where(l == 0, 1.0, l)
+    return out.reshape(b, hq, sq, dh).astype(q.dtype), m, l
+
+
+def _make_flash_train(causal: bool, window: int, chunk: int):
+    """custom_vjp flash attention for the TRAIN path (no cache): the
+    backward recomputes per-chunk scores from (q, k, v, out, m, l) instead
+    of letting scan save every (Sq x chunk) probability tensor — O(S·Dh)
+    residuals instead of O(S^2) (the FlashAttention backward, adapted to an
+    XLA scan; see EXPERIMENTS.md §Perf for the memory delta)."""
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _, _ = _attn_fwd_scan(q, k, v, 0, None, causal, window, chunk)
+        return out
+
+    def fwd(q, k, v):
+        out, m, l = _attn_fwd_scan(q, k, v, 0, None, causal, window, chunk)
+        return out, (q, k, v, out, m, l)
+
+    def bwd(res, do):
+        q, k, v, out, m, l = res
+        b, hq, sq, dh = q.shape
+        _, hkv, skv, _ = k.shape
+        group = hq // hkv
+        scale = dh ** -0.5
+        nc = skv // chunk
+        qg = q.reshape(b, hkv, group, sq, dh).astype(jnp.float32)
+        dog = do.reshape(b, hkv, group, sq, dh).astype(jnp.float32)
+        og = out.reshape(b, hkv, group, sq, dh).astype(jnp.float32)
+        delta = (dog * og).sum(-1, keepdims=True)          # (B,Hkv,G,Sq,1)
+        l_safe = jnp.where(l == 0, 1.0, l)
+        kc = jnp.moveaxis(k.reshape(b, hkv, nc, chunk, dh), 2, 0)
+        vc = jnp.moveaxis(v.reshape(b, hkv, nc, chunk, dh), 2, 0)
+        q_pos = jnp.arange(sq)
+
+        def step(dq, xs):
+            j, k_j, v_j = xs
+            s = jnp.einsum("bhgqd,bhcd->bhgqc", qg,
+                           k_j.astype(jnp.float32)) * scale
+            k_pos = j * chunk + jnp.arange(chunk)
+            mask = _attn_mask(q_pos, k_pos, skv, causal, window)
+            p = jnp.exp(s - m) / l_safe
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            dv_j = jnp.einsum("bhgqc,bhgqd->bhcd", p, dog)
+            dp = jnp.einsum("bhgqd,bhcd->bhgqc", dog,
+                            v_j.astype(jnp.float32))
+            ds = p * (dp - delta) * scale
+            dq = dq + jnp.einsum("bhgqc,bhcd->bhgqd", ds,
+                                 k_j.astype(jnp.float32))
+            dk_j = jnp.einsum("bhgqc,bhgqd->bhcd", ds, qg)
+            return dq, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((b, hkv, group, sq, dh), jnp.float32)
+        dq, (dk, dv) = lax.scan(step, dq0, (jnp.arange(nc), kc, vc))
+        dk = jnp.moveaxis(dk, 0, 2).reshape(b, hkv, skv, dh)
+        dv = jnp.moveaxis(dv, 0, 2).reshape(b, hkv, skv, dh)
+        return (dq.reshape(b, hq, sq, dh).astype(q.dtype),
+                dk.astype(k.dtype), dv.astype(v.dtype))
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def decode_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                     q_offset=0, kv_len=None):
+    """Single-token attention over a (possibly sequence-sharded) cache.
+
+    Direct masked einsum, fp32 softmax: scores are only (B, Hq, Sq, Skv),
+    so no chunking is needed, partial scores stay local to each KV shard
+    and GSPMD's softmax/combine all-reduces carry (B, Hq, Sq)-sized
+    payloads — versus the chunk-scan path whose per-step cache slicing
+    re-layouts the whole cache across shards (the gemma3/long_500k
+    collective hillclimb, EXPERIMENTS.md §Perf)."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = dh ** -0.5
+    qg = q.reshape(b, hkv, group, sq, dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    per_batch = getattr(q_offset, "ndim", 0) == 1 or \
+        getattr(kv_len, "ndim", 0) == 1
+    k_pos = jnp.arange(skv)
+    if per_batch:
+        q_off = jnp.asarray(q_offset) * jnp.ones((b,), jnp.int32)
+        q_pos = q_off[:, None] + jnp.arange(sq)[None, :]         # (B, Sq)
+        vl = (jnp.asarray(skv if kv_len is None else kv_len)
+              * jnp.ones((b,), jnp.int32))
+        mask = k_pos[None, None, :] < vl[:, None, None]
+        if causal:
+            mask = mask & (q_pos[:, :, None] >= k_pos[None, None, :])
+        if window > 0:
+            mask = mask & ((q_pos[:, :, None] - k_pos[None, None, :])
+                           < window)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        q_pos = q_offset + jnp.arange(sq)
+        vl = skv if kv_len is None else kv_len
+        mask = _attn_mask(q_pos, k_pos, vl, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(m > NEG_INF / 2, p, 0.0)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p / jnp.where(l == 0, 1.0, l),
+                   v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      chunk: int = 1024, q_offset=0, kv_len=None):
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh), Hq % Hkv == 0.
+    q_offset: global position of q[0] (decode: current length - Sq).
+    kv_len: number of valid cache entries (traced ok); None -> Skv.
+
+    The train path (no cache: q_offset == 0, kv_len None) routes through a
+    custom-VJP flash implementation with an O(S·Dh)-residual backward.
+    Short-query paths (decode) route to the direct einsum.
+    """
+    skv = k.shape[2]
+    sq = q.shape[2]
+    if sq <= 8:  # decode: scores are (B,H,Sq,Skv) — no chunking needed
+        return decode_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, kv_len=kv_len)
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    if kv_len is None and isinstance(q_offset, int) and q_offset == 0:
+        return _make_flash_train(causal, window, chunk)(q, k, v)
+    out, _, _ = _attn_fwd_scan(q, k, v, q_offset, kv_len, causal, window,
+                               chunk)
+    return out
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None):
+    """Mean token CE in fp32. logits (..., V); labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

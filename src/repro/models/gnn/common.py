@@ -1,0 +1,104 @@
+"""Shared GNN substrate: segment-op message passing + MLP blocks.
+
+JAX sparse is BCOO-only, so all message passing here is explicit
+gather-by-edge-index + ``jax.ops.segment_sum``/``segment_max`` scatter —
+the same owner-computes dataflow as the BFS engine, expressed over feature
+vectors instead of frontier bits (DESIGN.md §Arch-applicability).  Under
+pjit the node/edge arrays are 1-D partitioned exactly like BFS vertices.
+
+GraphBatch (dict of arrays, padded static shapes):
+  node_feats (N, F) f32      valid_nodes (N,) bool
+  edge_src, edge_dst (E,) int32 (-1 padding on dst)
+  edge_feats (E, Fe) f32 | None     pos (N, 3) | None
+  graph_id (N,) int32 (batched mode) | None
+  targets / labels per task
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_src(x: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
+    return x[jnp.maximum(src, 0)]
+
+
+def edge_mask(dst: jnp.ndarray) -> jnp.ndarray:
+    return (dst >= 0)
+
+
+def aggregate(messages: jnp.ndarray, dst: jnp.ndarray, n: int,
+              op: str = "sum") -> jnp.ndarray:
+    """Scatter edge messages to destination nodes. messages: (E, D)."""
+    m = edge_mask(dst)[:, None].astype(messages.dtype)
+    idx = jnp.where(edge_mask(dst), dst, n)  # pad row
+    summed = jax.ops.segment_sum(messages * m, idx, num_segments=n + 1)[:n]
+    if op == "sum":
+        return summed
+    if op == "mean":
+        deg = jax.ops.segment_sum(m[:, 0], idx, num_segments=n + 1)[:n]
+        return summed / jnp.maximum(deg, 1.0)[:, None]
+    if op == "max":
+        neg = jnp.where(edge_mask(dst)[:, None], messages, -jnp.inf)
+        mx = jax.ops.segment_max(neg, idx, num_segments=n + 1)[:n]
+        return jnp.where(jnp.isfinite(mx), mx, 0.0)
+    raise ValueError(op)
+
+
+def degrees(src, dst, n):
+    m = edge_mask(dst).astype(jnp.float32)
+    idx_d = jnp.where(edge_mask(dst), dst, n)
+    idx_s = jnp.where(edge_mask(dst), src, n)
+    deg_in = jax.ops.segment_sum(m, idx_d, num_segments=n + 1)[:n]
+    deg_out = jax.ops.segment_sum(m, idx_s, num_segments=n + 1)[:n]
+    return deg_out, deg_in
+
+
+# ------------------------------------------------------------------- MLPs
+def init_mlp(key, dims, dtype=jnp.float32, bias: bool = True):
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(ks):
+        w = (jax.random.normal(k, (dims[i], dims[i + 1]))
+             * dims[i] ** -0.5).astype(dtype)
+        layers.append({"w": w, "b": jnp.zeros((dims[i + 1],), dtype)}
+                      if bias else {"w": w})
+    return layers
+
+
+def apply_mlp(layers, x, act=jax.nn.relu, final_act: bool = False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + (l.get("b", 0.0))
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_layer_norm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_layer_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+            ).astype(x.dtype)
+
+
+def node_mse(pred, targets, valid):
+    err = ((pred - targets) ** 2).mean(-1)
+    w = valid.astype(jnp.float32)
+    return (err * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def graph_pool(x, graph_id, n_graphs, op="sum"):
+    if op == "sum":
+        return jax.ops.segment_sum(x, graph_id, num_segments=n_graphs)
+    if op == "mean":
+        s = jax.ops.segment_sum(x, graph_id, num_segments=n_graphs)
+        c = jax.ops.segment_sum(jnp.ones_like(graph_id, jnp.float32),
+                                graph_id, num_segments=n_graphs)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    raise ValueError(op)

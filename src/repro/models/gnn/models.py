@@ -1,0 +1,240 @@
+"""The four assigned GNN architectures over the shared segment-op substrate.
+
+  gcn       — Kipf-Welling spectral conv, symmetric normalization.
+  gatedgcn  — Bresson-Laurent edge-gated MPNN (LayerNorm in place of
+              BatchNorm: batch statistics don't shard cleanly; noted in
+              DESIGN.md §Hardware-adaptation).
+  schnet    — continuous-filter convolution over RBF-expanded distances.
+  graphcast — encoder / 16-layer interaction-network processor / decoder.
+
+All expose init_params(cfg, d_feat, key) and forward(cfg, params, batch),
+plus a family-level loss_fn used by train_step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import common as C
+from repro.models import sharding_hints as hints
+
+
+def _ckpt(fn):
+    """Per-layer rematerialization: full-graph GNN backward otherwise saves
+    every (E, D) edge tensor for all layers (241 GiB/device at ogb_products
+    before this; EXPERIMENTS.md §Perf)."""
+    return jax.checkpoint(fn)
+
+
+# ----------------------------------------------------------------- GCN
+def gcn_init(cfg: GNNConfig, d_feat: int, key):
+    dims = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {"layers": [C.init_mlp(k, dims[i:i + 2]) for i, k in enumerate(ks)]}
+
+
+def gcn_forward(cfg: GNNConfig, params, batch):
+    h = batch["node_feats"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = h.shape[0]
+    deg_out, deg_in = C.degrees(src, dst, n)
+    if cfg.norm == "sym":
+        w = jax.lax.rsqrt(jnp.maximum(deg_out, 1.0))[jnp.maximum(src, 0)] * \
+            jax.lax.rsqrt(jnp.maximum(deg_in, 1.0))[jnp.maximum(dst, 0)]
+    else:
+        w = jnp.ones_like(src, jnp.float32)
+    def layer_fn(layer, h, last):
+        h = hints.constrain_rows(h)
+        h = C.apply_mlp([layer[0]], h)           # XW
+        msg = C.gather_src(h, src) * w[:, None]
+        h = C.aggregate(msg, dst, n, op="sum")
+        if cfg.aggregator == "mean" and cfg.norm != "sym":
+            h = h / jnp.maximum(deg_in, 1.0)[:, None]
+        return h if last else jax.nn.relu(h)
+
+    for i, layer in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        h = _ckpt(lambda l, x: layer_fn(l, x, last))(layer, h)
+    return h
+
+
+# ------------------------------------------------------------- GatedGCN
+def gatedgcn_init(cfg: GNNConfig, d_feat: int, key, d_edge: int = 1):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 6)
+        layers.append({
+            "U": C.init_mlp(kk[0], (d, d)), "V": C.init_mlp(kk[1], (d, d)),
+            "A": C.init_mlp(kk[2], (d, d)), "B": C.init_mlp(kk[3], (d, d)),
+            "E": C.init_mlp(kk[4], (d, d)),
+            "ln_h": C.init_layer_norm(d), "ln_e": C.init_layer_norm(d),
+        })
+    return {
+        "in_h": C.init_mlp(ks[-3], (d_feat, d)),
+        "in_e": C.init_mlp(ks[-2], (d_edge, d)),
+        "out": C.init_mlp(ks[-1], (d, cfg.d_out)),
+        "layers": layers,
+    }
+
+
+def gatedgcn_forward(cfg: GNNConfig, params, batch):
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = batch["node_feats"].shape[0]
+    h = C.apply_mlp(params["in_h"], batch["node_feats"])
+    ef = batch.get("edge_feats")
+    if ef is None:
+        ef = jnp.ones((src.shape[0], 1), jnp.float32)
+    e = C.apply_mlp(params["in_e"], ef)
+    def layer_fn(layer, h, e):
+        h, e = hints.constrain_rows(h), hints.constrain_rows(e)
+        hi = C.gather_src(h, src)
+        hj = h[jnp.maximum(dst, 0)]
+        e_new = (C.apply_mlp([layer["A"][0]], e) +
+                 C.apply_mlp([layer["B"][0]], hi) +
+                 C.apply_mlp([layer["E"][0]], hj))
+        eta = jax.nn.sigmoid(e_new)
+        num = C.aggregate(eta * C.apply_mlp([layer["V"][0]], hi), dst, n, "sum")
+        den = C.aggregate(eta, dst, n, "sum")
+        h_new = C.apply_mlp([layer["U"][0]], h) + num / (den + 1e-6)
+        h = h + jax.nn.relu(C.apply_layer_norm(layer["ln_h"], h_new))
+        e = e + jax.nn.relu(C.apply_layer_norm(layer["ln_e"], e_new))
+        return h, e
+
+    for layer in params["layers"]:
+        h, e = _ckpt(layer_fn)(layer, h, e)
+    return C.apply_mlp(params["out"], h)
+
+
+# --------------------------------------------------------------- SchNet
+def _ssp(x):  # shifted softplus, SchNet's activation
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def schnet_init(cfg: GNNConfig, d_feat: int, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    inter = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 4)
+        inter.append({
+            "filter": C.init_mlp(kk[0], (cfg.rbf, d, d)),
+            "w_in": C.init_mlp(kk[1], (d, d), bias=False),
+            "post": C.init_mlp(kk[2], (d, d, d)),
+        })
+    return {
+        "embed": C.init_mlp(ks[-2], (d_feat, d)),
+        "inter": inter,
+        "out": C.init_mlp(ks[-1], (d, d // 2, cfg.d_out)),
+    }
+
+
+def schnet_forward(cfg: GNNConfig, params, batch):
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    pos = batch["pos"]
+    n = pos.shape[0]
+    h = C.apply_mlp(params["embed"], batch["node_feats"])
+    # RBF expansion of interatomic distances
+    d_ij = jnp.linalg.norm(pos[jnp.maximum(src, 0)] - pos[jnp.maximum(dst, 0)]
+                           + 1e-12, axis=-1)
+    mu = jnp.linspace(0.0, cfg.cutoff, cfg.rbf)
+    gamma = 10.0 / cfg.cutoff
+    rbf = jnp.exp(-gamma * (d_ij[:, None] - mu[None, :]) ** 2)   # (E, rbf)
+    # smooth cutoff (cosine), zero past cfg.cutoff
+    cut = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d_ij / cfg.cutoff, 0, 1)) + 1.0)
+    def layer_fn(blk, h):
+        h = hints.constrain_rows(h)
+        w = C.apply_mlp(blk["filter"], hints.constrain_rows(rbf),
+                        act=_ssp, final_act=True)
+        w = w * cut[:, None]
+        msg = C.apply_mlp(blk["w_in"], C.gather_src(h, src)) * w
+        agg = C.aggregate(msg, dst, n, "sum")
+        return h + C.apply_mlp(blk["post"], agg, act=_ssp)
+
+    for blk in params["inter"]:
+        h = _ckpt(layer_fn)(blk, h)
+    return C.apply_mlp(params["out"], h, act=_ssp)
+
+
+# ------------------------------------------------------------ GraphCast
+def graphcast_init(cfg: GNNConfig, d_feat: int, key, d_edge: int = 4):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 2)
+        layers.append({
+            "edge_mlp": C.init_mlp(kk[0], (3 * d, d, d)),
+            "node_mlp": C.init_mlp(kk[1], (2 * d, d, d)),
+            "ln_e": C.init_layer_norm(d), "ln_h": C.init_layer_norm(d),
+        })
+    return {
+        "enc_h": C.init_mlp(ks[-3], (d_feat, d, d)),
+        "enc_e": C.init_mlp(ks[-2], (d_edge, d, d)),
+        "dec": C.init_mlp(ks[-1], (d, d, cfg.n_vars)),
+        "layers": layers,
+    }
+
+
+def graphcast_forward(cfg: GNNConfig, params, batch):
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = batch["node_feats"].shape[0]
+    h = C.apply_mlp(params["enc_h"], batch["node_feats"])
+    ef = batch.get("edge_feats")
+    if ef is None:
+        ef = jnp.ones((src.shape[0], 4), jnp.float32)
+    e = C.apply_mlp(params["enc_e"], ef)
+    def layer_fn(layer, h, e):
+        # interaction-network block (GraphCast processor, sum aggregation)
+        h, e = hints.constrain_rows(h), hints.constrain_rows(e)
+        e_in = jnp.concatenate([e, C.gather_src(h, src),
+                                h[jnp.maximum(dst, 0)]], axis=-1)
+        e = e + C.apply_layer_norm(layer["ln_e"],
+                                   C.apply_mlp(layer["edge_mlp"], e_in))
+        agg = C.aggregate(e, dst, n, cfg.aggregator)
+        h_in = jnp.concatenate([h, agg], axis=-1)
+        h = h + C.apply_layer_norm(layer["ln_h"],
+                                   C.apply_mlp(layer["node_mlp"], h_in))
+        return h, e
+
+    for layer in params["layers"]:
+        h, e = _ckpt(layer_fn)(layer, h, e)
+    return C.apply_mlp(params["dec"], h)
+
+
+# ------------------------------------------------------------- dispatch
+_INIT = {"gcn": gcn_init, "gatedgcn": gatedgcn_init, "schnet": schnet_init,
+         "graphcast": graphcast_init}
+_FWD = {"gcn": gcn_forward, "gatedgcn": gatedgcn_forward,
+        "schnet": schnet_forward, "graphcast": graphcast_forward}
+
+
+def init_params(cfg: GNNConfig, d_feat: int, key):
+    return _INIT[cfg.kind](cfg, d_feat, key)
+
+
+def forward(cfg: GNNConfig, params, batch):
+    return _FWD[cfg.kind](cfg, params, batch)
+
+
+def loss_fn(cfg: GNNConfig, params, batch):
+    pred = forward(cfg, params, batch)
+    valid = batch["valid_nodes"]
+    if "labels" in batch:  # node classification (gcn-cora)
+        logits = pred.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+        nll = lse - ll
+        w = valid.astype(jnp.float32)
+        loss = (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+        return loss, {"loss": loss}
+    if batch.get("graph_id") is not None:  # graph-level regression (molecule)
+        pooled = C.graph_pool(pred * valid[:, None], batch["graph_id"],
+                              batch["graph_targets"].shape[0], "sum")
+        loss = ((pooled - batch["graph_targets"]) ** 2).mean()
+        return loss, {"loss": loss}
+    loss = C.node_mse(pred, batch["targets"], valid)
+    return loss, {"loss": loss}

@@ -1,0 +1,169 @@
+"""Ambient sharding hints for model code.
+
+Model code is mesh-agnostic; the launcher opts into GSPMD constraint
+injection by calling ``set_hints(mesh, dp, model)`` before tracing.  With
+hints unset every ``constrain*`` is the identity, so smoke tests and
+single-device runs never touch device state.
+
+The key hint is *sequence-sharded activations* between transformer blocks
+(Megatron sequence parallelism): residual activations live sharded over the
+``model`` axis and GSPMD inserts the all-gather/reduce-scatter pairs around
+attention/FFN.  This is what turns O(layers·B·S·D) checkpoint residuals
+from ~54 GiB/device into ~3 GiB/device at the train_4k shapes
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "dp": None, "model": None, "flat": None,
+          "seq_shard": True, "param_specs": None}
+
+
+def set_hints(mesh, dp, model, flat=None, seq_shard=True, param_specs=None):
+    _STATE.update(mesh=mesh, dp=tuple(dp) if dp else None, model=model,
+                  flat=tuple(flat) if flat else None, seq_shard=seq_shard,
+                  param_specs=param_specs)
+
+
+def clear_hints():
+    _STATE.update(mesh=None, dp=None, model=None, flat=None,
+                  param_specs=None)
+
+
+@contextlib.contextmanager
+def hints(mesh, dp, model, flat=None, seq_shard=True, param_specs=None):
+    set_hints(mesh, dp, model, flat, seq_shard, param_specs)
+    try:
+        yield
+    finally:
+        clear_hints()
+
+
+def enabled() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def _constrain(x, spec: P):
+    if not enabled():
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_STATE["mesh"], spec))
+
+
+def constrain_tokens_3d(h):
+    """(B, S, D) residual stream: batch over dp, sequence over model."""
+    if not enabled():
+        return h
+    b, s, _ = h.shape
+    dp, m = _STATE["dp"], _STATE["model"]
+    mesh = _STATE["mesh"]
+    import numpy as np
+    dp_ok = b % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    s_ok = (_STATE["seq_shard"] and m not in dp
+            and s % mesh.shape[m] == 0)
+    return _constrain(h, P(dp if dp_ok else None, m if s_ok else None, None))
+
+
+def constrain_logits_3d(x):
+    """(B, S_chunk, V) logits: batch over dp, vocab over model — keeps the
+    embed gradient vocab-sharded instead of letting GSPMD replicate the
+    (V, D) fp32 accumulator (a 15 GiB/device saving at gemma3/train_4k)."""
+    if not enabled():
+        return x
+    b, _, v = x.shape
+    dp, m = _STATE["dp"], _STATE["model"]
+    mesh = _STATE["mesh"]
+    import numpy as np
+    dp_ok = b % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    v_ok = m not in dp and v % mesh.shape[m] == 0
+    return _constrain(x, P(dp if dp_ok else None, None, m if v_ok else None))
+
+
+def constrain_expert_buffer(x):
+    """(E, C, D) MoE buffers: experts over model."""
+    if not enabled():
+        return x
+    m = _STATE["model"]
+    mesh = _STATE["mesh"]
+    e_ok = x.shape[0] % mesh.shape[m] == 0
+    return _constrain(x, P(m if e_ok else None, None, None))
+
+
+def constrain_vocab_table(w):
+    """(V, D) head table inside the loss chunk: vocab over model.  The
+    constraint's transpose pins the GRADIENT accumulator to the same
+    sharding, preventing a replicated (V, D) fp32 carry in the loss scan."""
+    if not enabled():
+        return w
+    m = _STATE["model"]
+    mesh = _STATE["mesh"]
+    if m in (_STATE["dp"] or ()):  # pure-FSDP: no vocab TP
+        return w
+    v_ok = w.shape[0] % mesh.shape[m] == 0
+    return _constrain(w, P(m if v_ok else None, None))
+
+
+def constrain_heads_4d(x):
+    """(B, H, S, Dh) attention tensors: batch over dp, heads over model
+    (when divisible).  Prevents GSPMD from trading the batch sharding away
+    when resolving the S-sharded-activation x H-sharded-weight conflict."""
+    if not enabled():
+        return x
+    b, h = x.shape[0], x.shape[1]
+    dp, m = _STATE["dp"], _STATE["model"]
+    mesh = _STATE["mesh"]
+    import numpy as np
+    dp_ok = b % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    h_ok = h % mesh.shape[m] == 0
+    return _constrain(x, P(dp if dp_ok else None, m if h_ok else None,
+                           None, None))
+
+
+def constrain_rows(x):
+    """(rows, ...) vertex/edge-partitioned arrays (GNN/BFS): rows over the
+    flattened mesh — the paper's 1-D partitioning.  Keeps per-layer node and
+    edge tensors sharded instead of letting gathers replicate them."""
+    if not enabled() or _STATE["flat"] is None:
+        return x
+    flat = _STATE["flat"]
+    mesh = _STATE["mesh"]
+    import numpy as np
+    ok = x.shape[0] % int(np.prod([mesh.shape[a] for a in flat])) == 0
+    if not ok:
+        return x
+    return _constrain(x, P(flat, *([None] * (x.ndim - 1))))
+
+
+def constrain_grads(grads):
+    """Pin gradients to the parameter *storage* sharding before the
+    optimizer.  Without this GSPMD may instead all-gather the fp32 moments
+    to the gradient layout — six hoisted 7.5 GiB all-gathers at
+    qwen/train_4k (EXPERIMENTS.md §Perf) — rather than reduce-scattering
+    the (smaller, bf16) gradients."""
+    specs = _STATE.get("param_specs")
+    if not enabled() or specs is None:
+        return grads
+    import jax
+    return jax.tree.map(lambda g, sp: _constrain(g, sp), grads, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_tokens_full(h):
+    """(B, S, D) at block entry: batch over dp, sequence GATHERED (None).
+    Paired with ``constrain_tokens_3d`` on block outputs this pins the
+    Megatron-SP schedule — one all-gather at entry, one reduce-scatter at
+    exit — instead of GSPMD's per-projection resharding (~5x collective
+    reduction at qwen/train_4k; EXPERIMENTS.md §Perf)."""
+    if not enabled() or not _STATE["seq_shard"]:
+        return h
+    b = h.shape[0]
+    dp = _STATE["dp"]
+    mesh = _STATE["mesh"]
+    import numpy as np
+    dp_ok = b % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    return _constrain(h, P(dp if dp_ok else None, None, None))

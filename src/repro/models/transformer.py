@@ -1,0 +1,297 @@
+"""LM-family transformer: dense / MoE / GQA / local-global, scan-over-groups.
+
+Layer stacking: the repeating layer *pattern* (e.g. Gemma-3's 5 local + 1
+global, Llama-4's dense/MoE alternation) is unrolled inside the scan body
+and the scan runs over ``n_layers / period`` groups.  This keeps the HLO a
+single while-loop regardless of depth — an 80-layer Qwen compiles as fast
+as a 2-layer smoke model — which is what makes 80 dry-run lowerings per
+sweep tractable.
+
+Steps exposed (all pure functions of (params, batch)):
+  * ``lm_loss``      — next-token CE for train_step,
+  * ``prefill``      — logits + populated KV cache,
+  * ``decode_step``  — one token for every sequence in the batch given the
+    cache (the ``decode_32k`` / ``long_500k`` serve step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import LayerSpec, TransformerConfig
+from repro.layers.core import (chunked_attention, cross_entropy, rms_norm,
+                               rope, swiglu)
+from repro.models import moe as moe_lib
+from repro.models import sharding_hints as hints
+
+
+def _dtype(cfg: TransformerConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    dt = _dtype(cfg)
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_groups
+    keys = jax.random.split(key, len(cfg.pattern) + 2)
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape) * fan_in ** -0.5).astype(dt)
+
+    blocks = []
+    for t, spec in enumerate(cfg.pattern):
+        kt = jax.random.split(keys[t], 12)
+        attn = {
+            "wq": dense(kt[0], (g, d, hq, dh), d),
+            "wk": dense(kt[1], (g, d, hkv, dh), d),
+            "wv": dense(kt[2], (g, d, hkv, dh), d),
+            "wo": dense(kt[3], (g, hq, dh, d), hq * dh),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = jnp.zeros((g, hq, dh), dt)
+            attn["bk"] = jnp.zeros((g, hkv, dh), dt)
+            attn["bv"] = jnp.zeros((g, hkv, dh), dt)
+        block = {
+            "attn": attn,
+            "ln1": jnp.zeros((g, d), dt),
+            "ln2": jnp.zeros((g, d), dt),
+        }
+        if spec.moe and cfg.moe is not None:
+            block["moe"] = jax.vmap(
+                lambda k_: moe_lib.init_moe_params(k_, d, cfg.moe, dt))(
+                    jax.random.split(kt[4], g))
+        else:
+            block["mlp"] = {
+                "w_gate": dense(kt[5], (g, d, cfg.d_ff), d),
+                "w_up": dense(kt[6], (g, d, cfg.d_ff), d),
+                "w_down": dense(kt[7], (g, cfg.d_ff, d), cfg.d_ff),
+            }
+        blocks.append(block)
+
+    out = {
+        "embed": dense(keys[-2], (cfg.vocab, d), d),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        # untied output head: lets the input table shard over D (gather
+        # stays local) and the head table over V (CE stays vocab-sharded)
+        out["unembed"] = dense(keys[-1], (cfg.vocab, d), d)
+    return out
+
+
+def _head(params):
+    return params.get("unembed", params["embed"])
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_apply(cfg: TransformerConfig, spec: LayerSpec, p: dict,
+                h: jnp.ndarray, positions, *, cache=None, cache_pos=None):
+    """h: (B, S, D). cache: dict(k, v) of (B, Hkv, Smax, Dh) or None."""
+    q = jnp.einsum("bsd,dhe->bhse", h, p["wq"])
+    k = jnp.einsum("bsd,dhe->bhse", h, p["wk"])
+    v = jnp.einsum("bsd,dhe->bhse", h, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        o = chunked_attention(q, k, v, causal=True, window=spec.window,
+                              chunk=cfg.attn_chunk)
+        new_cache = {"k": k, "v": v}
+    elif getattr(cache_pos, "ndim", 0) == 1:
+        # per-sequence positions (continuous batching): scatter each
+        # sequence's new kv row at its own depth
+        bidx = jnp.arange(h.shape[0])
+        ck = cache["k"].at[bidx, :, cache_pos].set(k[:, :, 0, :])
+        cv = cache["v"].at[bidx, :, cache_pos].set(v[:, :, 0, :])
+        o = chunked_attention(q, ck, cv, causal=True, window=spec.window,
+                              chunk=cfg.attn_chunk, q_offset=cache_pos,
+                              kv_len=cache_pos + 1)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+        o = chunked_attention(q, ck, cv, causal=True, window=spec.window,
+                              chunk=cfg.attn_chunk, q_offset=cache_pos,
+                              kv_len=cache_pos + h.shape[1])
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bhse,hed->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def _block_apply(cfg, spec, p, h, positions, cache=None, cache_pos=None):
+    a, new_cache = _attn_apply(cfg, spec, p["attn"],
+                               rms_norm(h, p["ln1"], cfg.norm_eps),
+                               positions, cache=cache, cache_pos=cache_pos)
+    h = h + hints.constrain_tokens_3d(a)
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    aux = {}
+    if "moe" in p:
+        b, s, d = x.shape
+        y, aux = moe_lib.moe_apply(p["moe"], x.reshape(b * s, d), cfg.moe)
+        y = y.reshape(b, s, d)
+    else:
+        y = swiglu(x, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return h + hints.constrain_tokens_3d(y), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _train_block(cfg, spec, p, h, positions):
+    """Block body for training, optionally rematerialized: with
+    remat='block' the backward pass recomputes attention/FFN internals
+    instead of saving per-chunk softmax intermediates — O(layers) residuals
+    instead of O(layers * S^2 / chunk) (the 300 GiB/device -> ~3 GiB/device
+    step recorded in EXPERIMENTS.md §Perf)."""
+    def body(p_, h_):
+        h_ = hints.constrain_tokens_3d(h_)
+        out, _, aux = _block_apply(cfg, spec, p_, h_, positions)
+        out = hints.constrain_tokens_3d(out)
+        return out, aux.get("lb_loss", jnp.float32(0)) if aux else jnp.float32(0)
+
+    if cfg.remat == "none":
+        return body(p, h)
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(body, policy=policy)(p, h)
+
+
+def trunk(cfg: TransformerConfig, params: dict, tokens: jnp.ndarray):
+    """tokens (B, S) -> final hidden states (B, S, D) + moe aux."""
+    h = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    lb_total = jnp.float32(0)
+
+    def group_body(carry, group_params):
+        h, lb = carry
+        for t, spec in enumerate(cfg.pattern):
+            h, lb_t = _train_block(cfg, spec, group_params[t], h, positions)
+            lb = lb + lb_t
+        return (h, lb), None
+
+    (h, lb_total), _ = lax.scan(group_body, (h, lb_total), params["blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, {"lb_loss": lb_total / max(cfg.n_layers, 1)}
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: jnp.ndarray):
+    """tokens (B, S) -> logits (B, S, V); no cache (small-model paths)."""
+    h, aux = trunk(cfg, params, tokens)
+    logits = jnp.einsum("bsd,vd->bsv", h, _head(params))
+    return logits, aux
+
+
+def lm_loss(cfg: TransformerConfig, params: dict, tokens: jnp.ndarray,
+            lb_coef: float = 0.01, loss_chunk: int = 512):
+    """tokens (B, S+1): next-token CE + MoE balance loss.
+
+    The vocab projection + CE run CHUNKED over the sequence inside a
+    rematerialized scan, so the (B, S, V) fp32 logits tensor is never
+    materialized (peak is (B, chunk, V/model) — the 49 GiB -> ~6 GiB/device
+    step at train_4k shapes, EXPERIMENTS.md §Perf)."""
+    h, aux = trunk(cfg, params, tokens[:, :-1])
+    labels = tokens[:, 1:]
+    b, s, d = h.shape
+    ck = min(loss_chunk, s)
+    assert s % ck == 0, (s, ck)
+    nc = s // ck
+    hc = jnp.moveaxis(h.reshape(b, nc, ck, d), 1, 0)        # (nc, B, ck, D)
+    lc = jnp.moveaxis(labels.reshape(b, nc, ck), 1, 0)      # (nc, B, ck)
+
+    head_w = hints.constrain_vocab_table(_head(params))
+
+    def chunk_nll(h_c, l_c):
+        logits = jnp.einsum("bsd,vd->bsv", h_c, head_w)
+        logits = hints.constrain_logits_3d(logits).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return (lse - ll).sum()
+
+    def body(tot, xs):
+        h_c, l_c = xs
+        return tot + jax.checkpoint(chunk_nll)(h_c, l_c), None
+
+    total, _ = lax.scan(body, jnp.float32(0), (hc, lc))
+    ce = total / (b * s)
+    return ce + lb_coef * aux["lb_loss"], {"ce": ce, **aux}
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> list:
+    """KV cache: one (G, B, Hkv, Smax, Dh) pair per pattern position."""
+    dt = _dtype(cfg)
+    shape = (cfg.n_groups, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return [{"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+            for _ in cfg.pattern]
+
+
+def prefill(cfg: TransformerConfig, params: dict, tokens: jnp.ndarray,
+            max_len: int):
+    """Run the prompt, return (last-token logits, cache, length)."""
+    b, s = tokens.shape
+    h = params["embed"][tokens]
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len)
+
+    def group_body(h, xs):
+        group_params, caches_in = xs
+        new_caches = []
+        for t, spec in enumerate(cfg.pattern):
+            h, nc, _ = _block_apply(
+                cfg, spec, group_params[t], h, positions,
+                cache={"k": caches_in[t]["k"], "v": caches_in[t]["v"]},
+                cache_pos=0)
+            new_caches.append(nc)
+        return h, new_caches
+
+    h, cache = lax.scan(group_body, h, (params["blocks"], cache))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], _head(params))
+    return logits, cache, s
+
+
+def decode_step(cfg: TransformerConfig, params: dict, cache: list,
+                pos, last_token: jnp.ndarray):
+    """One serve step: append one token per sequence.
+
+    cache leaves are (G, B, Hkv, Smax, Dh); pos is the current length
+    (traced scalar); last_token (B,). Returns (logits (B, V), new cache).
+    """
+    h = params["embed"][last_token][:, None, :]          # (B, 1, D)
+    if getattr(pos, "ndim", 0) == 1:
+        positions = pos[:, None] + jnp.arange(1)[None, :]  # (B, 1) per-seq
+    else:
+        positions = pos + jnp.arange(1)
+
+    def group_body(h, xs):
+        group_params, caches_in = xs
+        new_caches = []
+        for t, spec in enumerate(cfg.pattern):
+            h, nc, _ = _block_apply(
+                cfg, spec, group_params[t], h, positions,
+                cache=caches_in[t], cache_pos=pos)
+            new_caches.append(nc)
+        return h, new_caches
+
+    h, new_cache = lax.scan(group_body, h, (params["blocks"], cache))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, 0], _head(params))
+    return logits, new_cache

@@ -1,0 +1,106 @@
+"""Continuous-batching serving loop over the framework's decode step.
+
+Orca/vLLM-style scheduling on this framework's own cells: a fixed-size
+decode batch whose slots are at *independent* sequence depths (the decode
+step takes per-slot positions; each slot's KV rows land at its own depth
+and attention masks per-slot lengths).  Finished slots are recycled for
+queued requests without draining the batch.
+
+Prefill here feeds prompt tokens through the decode step slot-locally
+(token at a time); large-batch prompt ingestion is the separate
+``prefill_32k`` cell.  Greedy sampling; deterministic by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (L,) int32
+    max_new_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, cfg, params, *, batch_slots: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.n_slots = batch_slots
+        self.max_len = max_len
+        self.cache = tf.init_cache(cfg, batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, dtype=np.int32)   # per-slot depth
+        self._last_tok = np.zeros(batch_slots, dtype=np.int32)
+        self._decode = jax.jit(
+            lambda p, c, pos, tok: tf.decode_step(cfg, p, c, pos, tok))
+        self._queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    # --------------------------------------------------------------- core
+    def _advance(self, active_mask: np.ndarray):
+        """One decode step; slots advance at their own positions.  Inactive
+        slots re-write their current position with their current token —
+        a self-overwrite no-op — and their outputs are discarded."""
+        pos = jnp.asarray(self.pos)
+        tok = jnp.asarray(self._last_tok)
+        logits, self.cache = self._decode(self.params, self.cache, pos, tok)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        self.pos = np.where(active_mask, self.pos + 1, self.pos)
+        return nxt
+
+    def _admit(self):
+        for i in range(self.n_slots):
+            r = self.slots[i]
+            if (r is None or r.done) and self._queue:
+                req = self._queue.pop(0)
+                self.slots[i] = req
+                self.pos[i] = 0
+                # slot-local prefill: stream prompt tokens through decode,
+                # advancing only this slot
+                mask = np.zeros(self.n_slots, bool)
+                mask[i] = True
+                for tok in req.prompt:
+                    self._last_tok[i] = int(tok)
+                    self._advance(mask)
+                self._last_tok[i] = int(req.prompt[-1])
+
+    def step(self):
+        """Admit + one decode step for every live slot; returns finished."""
+        self._admit()
+        live = np.array([r is not None and not r.done for r in self.slots])
+        if not live.any():
+            return []
+        nxt = self._advance(live)
+        finished = []
+        for i in np.where(live)[0]:
+            r = self.slots[i]
+            r.out.append(int(nxt[i]))
+            self._last_tok[i] = int(nxt[i])
+            if (len(r.out) >= r.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                r.done = True
+                finished.append(r)
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self._queue and all(
+                    s is None or s.done for s in self.slots):
+                break
+        return done

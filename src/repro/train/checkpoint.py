@@ -1,0 +1,131 @@
+"""Checkpoint manager: atomic, versioned, resumable, keep-last-k.
+
+Layout:  <dir>/step_<n>/  manifest.json + one .npy per pytree leaf.
+Writes go to a temp directory and are renamed into place, so a failure
+mid-save can never corrupt the latest checkpoint (restart safety, the
+fault-tolerance contract the trainer relies on).  On a real multi-host
+cluster each process would write only its addressable shards to a shared
+filesystem; this single-process implementation fully materializes leaves
+(numpy) — the manifest format is identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import numpy as np
+
+import jax
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state) -> str:
+        if self._thread is not None:
+            self._thread.join()  # one outstanding async save at a time
+            self._thread = None
+        # snapshot to host memory synchronously (cheap vs device compute)
+        flat, _ = _flatten_with_paths(state)
+        host = [(k, np.asarray(v)) for k, v in flat]
+
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+        return os.path.join(self.dir, f"step_{step}")
+
+    def _write(self, step: int, host_leaves):
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for i, (key, arr) in enumerate(host_leaves):
+            fname = f"leaf_{i:05d}.npy"
+            logical = str(arr.dtype)
+            if logical == "bfloat16":  # not a native numpy dtype: store raw
+                np.save(os.path.join(tmp, fname), arr.view(np.uint16))
+            else:
+                np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": fname, "shape": list(arr.shape),
+                 "dtype": logical})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: int | None = None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  Returns (state, step) with numpy leaves."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = _flatten_with_paths(like)
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+        leaves = []
+        for key, ref in flat:
+            e = by_key[key]
+            arr = np.load(os.path.join(path, e["file"]))
+            if e["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            assert tuple(arr.shape) == tuple(ref.shape), (key, arr.shape,
+                                                          ref.shape)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves), step

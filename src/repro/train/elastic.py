@@ -1,0 +1,49 @@
+"""Elastic scaling: re-shard live state when the healthy-device set changes.
+
+Two levels:
+  * array/state level — ``reshard_state`` re-places a pytree under a new
+    mesh + spec assignment (jax.device_put handles the all-to-all); this is
+    what the trainer calls after a checkpoint restore onto fewer/more pods.
+  * BFS/graph level — the 1-D partition is a pure function of (n, p), so
+    rescaling is ``repartition`` + re-bucketing the edge blocks; distance
+    vectors re-slice (paper §2.1's partitioning makes this trivial — a key
+    operational property the paper doesn't state but the design gives us).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core.partition import Partition1D
+from repro.graphs.formats import ShardedGraph, shard_graph
+
+
+def reshard_state(state, new_mesh, new_specs):
+    """Re-place every leaf under the new mesh/spec (host-mediated when the
+    device sets are disjoint; direct device-to-device otherwise)."""
+    from repro.launch.shardings import to_named
+    shardings = to_named(new_specs, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings)
+
+
+def repartition_graph(g: ShardedGraph, new_p: int) -> ShardedGraph:
+    """Rebuild per-shard edge blocks for a new shard count."""
+    src_l, dst_g, _, _ = g.flat()
+    valid = dst_g >= 0
+    # reconstruct global COO from the out-edge blocks
+    shard_ids = np.repeat(np.arange(g.p), g.e_cap)
+    src_global = np.asarray(
+        g.part.global_id(shard_ids, src_l))[valid]
+    dst_global = np.asarray(dst_g)[valid]
+    return shard_graph(src_global, dst_global, g.part.n_logical, new_p)
+
+
+def repartition_vertex_array(x: np.ndarray, old: Partition1D,
+                             new: Partition1D) -> np.ndarray:
+    """Re-pad a (old.n, ...) vertex array for the new partition."""
+    assert old.n_logical == new.n_logical
+    logical = np.asarray(x)[: old.n_logical]
+    return new.pad_vertex_array(logical)

@@ -1,0 +1,78 @@
+"""Subprocess harness: analytic byte model vs HLO-parsed collective bytes.
+
+Compiles each exchange strategy on 8 forced host devices, parses the
+optimized HLO for collective ops, and checks the per-chip received-byte
+model in core/exchange.py against what XLA actually emits.  This pins the
+paper-reproduction numbers (benchmarks/run.py tables) to compiler ground
+truth.  Exits nonzero on mismatch.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import functools  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.core import exchange as ex  # noqa: E402
+from repro.launch.hlo_stats import collective_bytes  # noqa: E402
+
+
+def compile_and_parse(fn, in_specs, out_specs, arg_shapes, mesh):
+    mapped = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+    lowered = jax.jit(mapped).lower(*arg_shapes)
+    return collective_bytes(lowered.compile().as_text())
+
+
+def main():
+    devs = jax.devices()
+    mesh = Mesh(np.asarray(devs).reshape(8), ("p",))
+    p = 8
+    n, s = 4096, 4
+    cap = 256
+    ok = True
+
+    for strategy in ex.DENSE_STRATEGIES:
+        fn = functools.partial(ex.exchange_dense, axis="p", strategy=strategy)
+        got = compile_and_parse(
+            fn, P(None, None), P("p", None),
+            (jax.ShapeDtypeStruct((n, s), jnp.uint8),), mesh)
+        want = ex.dense_level_bytes(strategy, n, p, s, 1, axes_sizes=[p])
+        # HLO counts the op's OUTPUT bytes once per device; relate the two:
+        # all-gather output = p*n*s (received (p-1)/p of it); all-to-all
+        # output = n*s; reduce-scatter output = n*s/p (bf16 -> 2B items).
+        rel = got["total"] / max(want, 1)
+        line = (f"dense/{strategy:16s} model={want:>12.0f}B "
+                f"hlo_total={got['total']:>12.0f}B ratio={rel:6.3f} {got}")
+        print(line)
+        # sanity: the model must be within ~2.5x of HLO accounting and the
+        # ORDERING must hold (baseline >> direct)
+        ok &= 0.2 < rel < 2.6
+    base = ex.dense_level_bytes("allgather_merge", n, p, s, 1)
+    opt = ex.dense_level_bytes("alltoall_direct", n, p, s, 1)
+    ok &= base / opt > p * 0.9  # paper claim: baseline grows ~linearly in p
+
+    for strategy in ex.QUEUE_STRATEGIES:
+        fn = functools.partial(ex.exchange_queue, axis="p", strategy=strategy)
+        got = compile_and_parse(
+            fn, P(None, None), P(None, None),
+            (jax.ShapeDtypeStruct((p, cap), jnp.int32),), mesh)
+        want = ex.queue_level_bytes(strategy, p, cap)
+        rel = got["total"] / max(want, 1)
+        print(f"queue/{strategy:16s} model={want:>12.0f}B "
+              f"hlo_total={got['total']:>12.0f}B ratio={rel:6.3f}")
+        ok &= 0.2 < rel < 2.6
+
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

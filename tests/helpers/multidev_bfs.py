@@ -1,0 +1,96 @@
+"""Subprocess harness: distributed BFS correctness on 8 forced host devices.
+
+Run as: python tests/helpers/multidev_bfs.py
+Exits nonzero on any mismatch. Kept out of the normal pytest process so the
+rest of the suite sees a single device (per the dry-run isolation rule).
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.core import BFSOptions, bfs  # noqa: E402
+from repro.core.ref import bfs_reference  # noqa: E402
+from repro.graphs import generate, shard_graph  # noqa: E402
+
+
+def check(name, graph_kind, n, opts, sources, mesh, axis, seed=0, **gkw):
+    src, dst = generate(graph_kind, n, seed=seed, **gkw)
+    p = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
+    g = shard_graph(src, dst, n, p)
+    want = bfs_reference(src, dst, n, sources)
+    got, stats = bfs(g, sources, mesh=mesh, axis=axis, opts=opts)
+    ok = np.array_equal(got, want)
+    frac = float((got == want).mean())
+    print(f"{name:55s} levels={stats.levels:3d} visited={stats.visited:6d} "
+          f"bytes={stats.comm_bytes:.2e} modes={stats.mode_counts} "
+          f"ovf={stats.overflowed} -> {'OK' if ok else f'MISMATCH ({frac:.4f})'}")
+    return ok
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == 8, devs
+    mesh2d = Mesh(np.asarray(devs).reshape(2, 4), ("data", "model"))
+    mesh1d = Mesh(np.asarray(devs).reshape(8), ("p",))
+
+    ok = True
+    n = 3000
+    srcs = [0]
+    # every dense strategy, flat and tuple axes
+    for strat in ("allgather_merge", "alltoall_direct", "reduce_scatter",
+                  "hierarchical"):
+        o = BFSOptions(mode="dense", dense_exchange=strat)
+        ok &= check(f"dense/{strat}/er/1d", "erdos_renyi", n, o, srcs,
+                    mesh1d, "p", avg_degree=8)
+        ok &= check(f"dense/{strat}/er/2d-tuple", "erdos_renyi", n, o, srcs,
+                    mesh2d, ("data", "model"), avg_degree=8)
+    # batched multi-source dense
+    o = BFSOptions(mode="dense")
+    ok &= check("dense/multi-source(S=5)/smallworld", "small_world", n, o,
+                [0, 7, 123, 999, 2500], mesh1d, "p", k=6, beta=0.1)
+    # queue strategies, with/without paper opts
+    for strat in ("allgather_merge", "alltoall_direct"):
+        for lu in (False, True):
+            o = BFSOptions(mode="queue", queue_exchange=strat,
+                           local_update=lu, dedupe=lu, queue_cap=2048)
+            ok &= check(f"queue/{strat}/lu={int(lu)}/er", "erdos_renyi", n, o,
+                        srcs, mesh1d, "p", avg_degree=8)
+    # queue overflow -> dense fallback still exact
+    o = BFSOptions(mode="queue", queue_cap=8)
+    ok &= check("queue/overflow-fallback/er", "erdos_renyi", 1500, o, srcs,
+                mesh1d, "p", avg_degree=10)
+    # star graph (worst-case imbalance), queue + dense
+    ok &= check("dense/star", "star", 2048, BFSOptions(mode="dense"), srcs,
+                mesh2d, ("data", "model"))
+    ok &= check("queue/star", "star", 2048,
+                BFSOptions(mode="queue", queue_cap=4096), srcs, mesh1d, "p")
+    # auto (direction-optimizing) on all three paper graph families
+    for kind, kw in (("erdos_renyi", dict(avg_degree=8)),
+                     ("small_world", dict(k=6, beta=0.05)), ("star", {})):
+        o = BFSOptions(mode="auto", queue_cap=4096)
+        ok &= check(f"auto/{kind}", kind, n, o, srcs, mesh2d,
+                    ("data", "model"), **kw)
+    # rmat (scale-free, like the social graphs of paper §1)
+    ok &= check("auto/rmat", "rmat", 2048, BFSOptions(mode="auto", queue_cap=8192),
+                srcs, mesh1d, "p", edge_factor=8)
+    # disconnected graph: unreachable stay INF
+    src, dst = generate("erdos_renyi", 600, seed=3, avg_degree=2)
+    g = shard_graph(src, dst, 600, 8)
+    want = bfs_reference(src, dst, 600, [0])
+    got, _ = bfs(g, [0], mesh=mesh1d, axis="p", opts=BFSOptions(mode="dense"))
+    ok &= np.array_equal(got, want)
+    print(f"{'dense/disconnected-INF':55s} -> {'OK' if np.array_equal(got, want) else 'MISMATCH'}")
+
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

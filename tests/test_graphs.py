@@ -1,0 +1,128 @@
+"""Graph generators + partitioned formats."""
+
+import numpy as np
+import pytest
+
+from repro.core.partition import Partition1D
+from repro.graphs import (block_sparse_adjacency, csr_from_coo, dedupe_edges,
+                          erdos_renyi, generate, rmat, shard_graph,
+                          small_world, star_graph)
+
+
+def _degrees(src, n):
+    return np.bincount(src, minlength=n)
+
+
+def test_star_shape():
+    src, dst = star_graph(100)
+    assert src.shape[0] == 2 * 99  # symmetrized
+    deg = _degrees(src, 100)
+    assert deg[0] == 99 and (deg[1:] == 1).all()
+
+
+def test_erdos_renyi_degree_and_symmetry():
+    n = 2000
+    src, dst = erdos_renyi(n, avg_degree=10, seed=0)
+    deg = _degrees(src, n)
+    assert abs(deg.mean() - 10) < 1.0
+    # symmetrized: edge set closed under reversal
+    e = set(zip(src.tolist(), dst.tolist()))
+    assert all((d, s) in e for s, d in list(e)[:500])
+
+
+def test_small_world_no_self_loops_no_dupes():
+    src, dst = small_world(500, k=6, beta=0.3, seed=1)
+    assert (src != dst).all()
+    key = src * 500 + dst
+    assert np.unique(key).shape[0] == key.shape[0]
+
+
+def test_rmat_heavy_tail():
+    src, dst = rmat(scale=11, edge_factor=8, seed=0)
+    deg = _degrees(src, 1 << 11)
+    assert deg.max() > 8 * deg[deg > 0].mean() / 4  # skewed
+
+
+def test_dedupe_edges():
+    src = np.array([0, 0, 1, 2, 2])
+    dst = np.array([1, 1, 1, 3, 3])
+    s, d = dedupe_edges(src, dst, 4)
+    assert s.shape[0] == 2  # (0,1) and (2,3); (1,1) self-loop dropped
+
+
+def test_shard_graph_partitions_all_edges():
+    n, p = 1000, 8
+    src, dst = erdos_renyi(n, avg_degree=6, seed=4)
+    g = shard_graph(src, dst, n, p)
+    assert g.src_local.shape[0] == p
+    # every real edge appears exactly once in the out-edge blocks
+    cnt = int((g.dst_global >= 0).sum())
+    assert cnt == src.shape[0] == g.n_edges
+    # local ids are in range and reconstruct global sources per shard
+    part = g.part
+    for j in range(p):
+        mask = g.dst_global[j] >= 0
+        assert (g.src_local[j][mask] < part.shard_size).all()
+    # in-edge blocks cover the same edge multiset
+    assert int((g.in_src_global >= 0).sum()) == src.shape[0]
+
+
+def test_shard_graph_degrees_match():
+    n, p = 512, 4
+    src, dst = small_world(n, k=4, beta=0.1, seed=7)
+    g = shard_graph(src, dst, n, p)
+    want = np.zeros(g.part.n, dtype=np.int64)
+    np.add.at(want, dst, 1)
+    np.testing.assert_array_equal(g.degrees(), want)
+
+
+def test_csr_from_coo():
+    src = np.array([2, 0, 1, 0])
+    dst = np.array([3, 1, 2, 2])
+    indptr, idx = csr_from_coo(src, dst, 4)
+    assert indptr.tolist() == [0, 2, 3, 4, 4]
+    assert sorted(idx[0:2].tolist()) == [1, 2]
+
+
+def test_block_sparse_adjacency_roundtrip():
+    n = 300
+    src, dst = erdos_renyi(n, avg_degree=5, seed=9)
+    blocks, br, bc, n_pad = block_sparse_adjacency(src, dst, n, block=128)
+    assert n_pad % 128 == 0
+    dense = np.zeros((n_pad, n_pad), np.float32)
+    for k in range(blocks.shape[0]):
+        dense[br[k]*128:(br[k]+1)*128, bc[k]*128:(bc[k]+1)*128] = blocks[k]
+    want = np.zeros((n_pad, n_pad), np.float32)
+    want[src, dst] = 1.0
+    np.testing.assert_array_equal(dense, want)
+
+
+def test_generate_dispatch_and_unknown():
+    src, dst = generate("star", 10)
+    assert src.shape[0] == 18
+    with pytest.raises(KeyError):
+        generate("nope", 10)
+
+
+def test_graph_property_partition_conservation():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(8, 400), p=st.integers(1, 16),
+           avg=st.floats(1.0, 8.0), seed=st.integers(0, 99))
+    def prop(n, p, avg, seed):
+        src, dst = erdos_renyi(n, avg_degree=avg, seed=seed)
+        if src.size == 0:
+            return
+        g = shard_graph(src, dst, n, p)
+        # invariant: no edge lost or duplicated by partitioning
+        assert int((g.dst_global >= 0).sum()) == src.shape[0]
+        # invariant: every out-edge block only holds edges owned by it
+        part = Partition1D(n, p)
+        for j in range(p):
+            m = g.dst_global[j] >= 0
+            gids = part.global_id(j, g.src_local[j][m])
+            assert (np.asarray(part.owner(gids)) == j).all()
+
+    prop()

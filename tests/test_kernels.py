@@ -1,0 +1,175 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graphs import block_sparse_adjacency, erdos_renyi
+from repro.kernels.bsr_spmm import ops as spmm_ops
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref, frontier_expand_ref
+from repro.kernels.embedding_bag import ops as bag_ops
+from repro.kernels.embedding_bag.ref import (embedding_bag_mean_ref,
+                                             embedding_bag_sum_ref)
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- bsr_spmm
+@pytest.mark.parametrize("n,avg_deg,d", [
+    (256, 4, 128), (384, 8, 64), (512, 3, 256), (128, 16, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spmm_matches_ref(n, avg_deg, d, dtype):
+    src, dst = erdos_renyi(n, avg_degree=avg_deg, seed=n + d)
+    blocks, br, bc, n_pad = block_sparse_adjacency(src, dst, n, block=128)
+    x = jax.random.normal(jax.random.fold_in(KEY, n + d), (n_pad, d), dtype)
+    got = spmm_ops.spmm(jnp.asarray(blocks), jnp.asarray(br), jnp.asarray(bc),
+                        x, n_rows_pad=n_pad, interpret=True)
+    want = bsr_spmm_ref(jnp.asarray(blocks), jnp.asarray(br), jnp.asarray(bc),
+                        x, n_rows_pad=n_pad)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=rtol)
+
+
+def test_bsr_spmm_matches_dense_matmul():
+    n = 300
+    src, dst = erdos_renyi(n, avg_degree=6, seed=1)
+    blocks, br, bc, n_pad = block_sparse_adjacency(src, dst, n, block=128)
+    x = jax.random.normal(KEY, (n_pad, 128), jnp.float32)
+    got = spmm_ops.spmm(jnp.asarray(blocks), jnp.asarray(br), jnp.asarray(bc),
+                        x, n_rows_pad=n_pad, interpret=True)
+    a = np.zeros((n_pad, n_pad), np.float32)
+    a[src, dst] = 1.0
+    np.testing.assert_allclose(np.asarray(got), a @ np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("s", [1, 8, 128])
+def test_frontier_expand_kernel_is_bfs_level(s):
+    n = 256
+    src, dst = erdos_renyi(n, avg_degree=5, seed=7)
+    blocks, br, bc, n_pad = block_sparse_adjacency(src, dst, n, block=128)
+    f = np.zeros((n_pad, s), np.uint8)
+    rng = np.random.default_rng(0)
+    for j in range(s):
+        f[rng.integers(0, n), j] = 1
+    got = spmm_ops.frontier_expand(jnp.asarray(blocks), jnp.asarray(br),
+                                   jnp.asarray(bc), jnp.asarray(f),
+                                   n_rows_pad=n_pad, interpret=True)
+    want = frontier_expand_ref(jnp.asarray(blocks), jnp.asarray(br),
+                               jnp.asarray(bc), jnp.asarray(f),
+                               n_rows_pad=n_pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # cross-check against explicit neighbor expansion
+    for j in range(min(s, 4)):
+        seeds = np.where(f[:, j])[0]
+        nbrs = set(dst[np.isin(src, seeds)].tolist())
+        got_set = set(np.where(np.asarray(got)[:, j])[0].tolist())
+        assert got_set == nbrs
+
+
+# ------------------------------------------------------------ embedding_bag
+@pytest.mark.parametrize("b,l,v,d", [
+    (8, 4, 64, 128), (16, 1, 32, 256), (4, 13, 128, 128), (32, 3, 1000, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sum(b, l, v, d, dtype):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, b * l + v))
+    table = jax.random.normal(k1, (v, d), dtype)
+    idx = jax.random.randint(k2, (b, l), -1, v)  # includes -1 pads
+    got = bag_ops.embedding_bag(idx, table, mode="sum", interpret=True)
+    want = embedding_bag_sum_ref(idx, table)
+    rtol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol,
+                               atol=rtol)
+
+
+def test_embedding_bag_mean_and_all_padded():
+    table = jnp.ones((16, 8), jnp.float32) * jnp.arange(16)[:, None]
+    idx = jnp.array([[0, 2, -1], [-1, -1, -1]], jnp.int32)
+    got = bag_ops.embedding_bag(idx, table, mode="mean", interpret=True)
+    want = embedding_bag_mean_ref(idx, table)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    assert np.asarray(got)[1].sum() == 0  # empty bag -> zeros
+
+
+def test_embedding_bag_property_sum_of_rows():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(1, 8), l=st.integers(1, 6), v=st.integers(2, 40),
+           seed=st.integers(0, 999))
+    def prop(b, l, v, seed):
+        rng = np.random.default_rng(seed)
+        table = jnp.asarray(rng.standard_normal((v, 16)), jnp.float32)
+        idx = jnp.asarray(rng.integers(-1, v, (b, l)), jnp.int32)
+        got = np.asarray(bag_ops.embedding_bag(idx, table, interpret=True))
+        tn, xn = np.asarray(table), np.asarray(idx)
+        for i in range(b):
+            rows = [tn[j] for j in xn[i] if j >= 0]
+            want = np.sum(rows, axis=0) if rows else np.zeros(16, np.float32)
+            np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
+
+    prop()
+
+
+# ---------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("b,hq,hkv,sq,dh", [
+    (1, 4, 4, 256, 64),    # MHA
+    (2, 8, 2, 128, 64),    # GQA 4:1
+    (1, 8, 1, 256, 128),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, hq, hkv, sq, dh, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, b + hq + sq), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sq, dh), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sq, dh), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    rtol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 384, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 384, 64), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_small_blocks_equivalence():
+    """Block size must not change the result (online softmax exactness)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    a = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, block_q=128, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

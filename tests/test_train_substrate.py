@@ -1,0 +1,208 @@
+"""Training substrate: checkpoint/restart, fault injection, compression,
+elastic resharding."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.launch.steps import build_bundle
+from repro.optim.adamw import AdamWConfig
+from repro.train import compress as comp
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import (repartition_graph, repartition_vertex_array,
+                                 reshard_state)
+from repro.train.trainer import Trainer, TrainerConfig, make_compressed_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _state_tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.zeros(4, jnp.bfloat16)},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state_tree()
+    mgr.save(10, st)
+    restored, step = mgr.restore(st)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        assert str(np.asarray(a).dtype) == str(b.dtype)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state_tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, st)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    st = _state_tree()
+    mgr.save(5, st)
+    mgr.wait()
+    _, step = mgr.restore(st)
+    assert step == 5
+
+
+def test_checkpoint_atomicity_partial_write(tmp_path):
+    """A stray .tmp dir (simulated crash mid-save) must be invisible."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    st = _state_tree()
+    mgr.save(1, st)
+    os.makedirs(os.path.join(str(tmp_path), "step_2.tmp"))
+    assert mgr.latest_step() == 1
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    spec = get_arch("gcn_cora")
+    b = build_bundle(spec, "full_graph_sm", reduced=True)
+    t = Trainer(b, TrainerConfig(num_steps=6, ckpt_every=2, log_every=2,
+                                 ckpt_dir=str(tmp_path)))
+    state = t.run()
+    assert t.mgr.latest_step() == 6
+    losses = [m["loss"] for m in t.metrics_log if "loss" in m]
+    assert losses and all(np.isfinite(l) for l in losses)
+
+
+def test_trainer_survives_injected_fault(tmp_path):
+    """Crash at step 4 -> trainer restores from checkpoint and completes,
+    and the post-restart batches replay deterministically."""
+    spec = get_arch("gcn_cora")
+    b = build_bundle(spec, "full_graph_sm", reduced=True)
+    crashed = {"done": False}
+
+    def fault(step):
+        if step == 4 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    t = Trainer(b, TrainerConfig(num_steps=8, ckpt_every=2, log_every=1,
+                                 ckpt_dir=str(tmp_path)), fault_hook=fault)
+    t.run()
+    events = [m for m in t.metrics_log if m.get("event") == "restart"]
+    assert len(events) == 1 and events[0]["restored_step"] <= 4
+    assert t.mgr.latest_step() == 8
+
+    # a clean run must reach the same final loss (deterministic replay)
+    t2 = Trainer(b, TrainerConfig(num_steps=8, ckpt_every=2, log_every=1,
+                                  ckpt_dir=str(tmp_path) + "_clean"))
+    t2.run()
+    last = [m["loss"] for m in t.metrics_log if "loss" in m][-1]
+    last2 = [m["loss"] for m in t2.metrics_log if "loss" in m][-1]
+    assert np.isclose(last, last2, rtol=1e-5), (last, last2)
+
+
+def test_trainer_resume_from_checkpoint(tmp_path):
+    spec = get_arch("gcn_cora")
+    b = build_bundle(spec, "full_graph_sm", reduced=True)
+    t1 = Trainer(b, TrainerConfig(num_steps=4, ckpt_every=2,
+                                  ckpt_dir=str(tmp_path)))
+    t1.run()
+    t2 = Trainer(b, TrainerConfig(num_steps=8, ckpt_every=2,
+                                  ckpt_dir=str(tmp_path)))
+    t2.run(resume=True)
+    assert t2.mgr.latest_step() == 8
+
+
+# ------------------------------------------------------------ compression
+def test_compress_bf16_roundtrip_close():
+    g = {"a": jnp.linspace(-3, 3, 1000, dtype=jnp.float32)}
+    cg = comp.compress_bf16(g)
+    np.testing.assert_allclose(np.asarray(cg["a"]), np.asarray(g["a"]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_compress_topk_error_feedback_conserves_mass():
+    g = {"a": jnp.asarray(np.random.default_rng(0).standard_normal(256),
+                          jnp.float32)}
+    ef = comp.init_error_feedback(g)
+    sent, ef2 = comp.compress_topk(g, ef, k_frac=0.25)
+    # sent + residual == original
+    np.testing.assert_allclose(
+        np.asarray(sent["a"], np.float32) + np.asarray(ef2["a"]),
+        np.asarray(g["a"]), rtol=1e-6, atol=1e-6)
+    nz = int((np.asarray(sent["a"]) != 0).sum())
+    assert nz <= 0.3 * 256
+
+
+def test_compressed_training_still_converges():
+    """topk-compressed steps must still fit a tiny regression problem."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    w_true = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    y = x @ w_true
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = jnp.mean((pred - batch["y"]) ** 2)
+        return l, {}
+
+    opt = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0)
+    for method in ("none", "bf16", "topk"):
+        make_state, step = make_compressed_train_step(loss_fn, opt, method,
+                                                      k_frac=0.25)
+        state = make_state({"w": jnp.zeros(8, jnp.float32)})
+        jstep = jax.jit(step)
+        first = last = None
+        for i in range(60):
+            state, m = jstep(state, {"x": x, "y": y})
+            if first is None:
+                first = float(m["loss"])
+            last = float(m["loss"])
+        assert last < first * 0.2, (method, first, last)
+
+
+def test_wire_bytes_model():
+    g = {"a": jnp.zeros((1000,), jnp.float32)}
+    assert comp.wire_bytes(g, "none") == 4000
+    assert comp.wire_bytes(g, "bf16") == 2000
+    assert comp.wire_bytes(g, "topk", 1 / 10) == 800
+
+
+# ---------------------------------------------------------------- elastic
+def test_elastic_repartition_graph_preserves_bfs():
+    from repro.core import BFSOptions, bfs
+    from repro.core.ref import bfs_reference
+    from repro.graphs import generate, shard_graph
+    n = 600
+    src, dst = generate("erdos_renyi", n, seed=5, avg_degree=6)
+    g4 = shard_graph(src, dst, n, 4)
+    g2 = repartition_graph(g4, 2)
+    assert g2.p == 2 and g2.n_edges == g4.n_edges
+    want = bfs_reference(src, dst, n, [0])
+    # run on 1 device with p=1 derived again (engine-level check)
+    g1 = repartition_graph(g4, 1)
+    got, _ = bfs(g1, [0], opts=BFSOptions(mode="dense"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_elastic_vertex_array_roundtrip():
+    from repro.core.partition import Partition1D
+    old, new = Partition1D(100, 8), Partition1D(100, 3)
+    x = np.arange(old.n, dtype=np.float32)
+    y = repartition_vertex_array(x, old, new)
+    assert y.shape[0] == new.n
+    np.testing.assert_array_equal(y[:100], x[:100])
+
+
+def test_elastic_reshard_state_identity():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1)
+    state = _state_tree()
+    specs = jax.tree.map(lambda x: P(*([None] * np.ndim(x))), state)
+    out = reshard_state(state, mesh, specs)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
