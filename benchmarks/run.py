@@ -1,6 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and emits a ``BENCH_*.json``
+(``--out``, default ``BENCH_results.json``) recording, for every
+engine-measured workload, *compile* wall time and *per-run* execute time
+separately — the amortization ledger of the plan→compile→run lifecycle
+(one compile per (graph, options, mesh), then device-only traversals).
 
 Paper tables reproduced:
   * fig3/fig4  — star-graph strong scaling (p = 8/16/32)
@@ -21,18 +25,20 @@ curves (§4.2).
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 
 import jax
 
-from repro.core import BFSOptions, bfs
+from repro.core import BFSOptions, plan
 from repro.core import exchange as ex
 from repro.graphs import generate, shard_graph
 from repro.launch.hlo_stats import ICI_BW
 
 _ROWS = []
+_ENGINE_TIMINGS = {}   # bench key -> {compile_s, per_run_s, ...}
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -41,13 +47,27 @@ def row(name: str, us: float, derived: str = ""):
 
 
 def _measure_bfs(kind, n, opts, sources=(0,), seed=0, reps=3, **gkw):
+    """Compile one engine, then time device-only traversals.
+
+    Returns (per_run_s, stats, n_edges); compile wall time is recorded
+    in the JSON ledger under ``bfs/<kind>/n=<n>/...``.
+    """
     src, dst = generate(kind, n, seed=seed, **gkw)
     g = shard_graph(src, dst, n, p=1)
-    dist, stats = bfs(g, list(sources), opts=opts)  # warmup/compile
+    t0 = time.time()
+    engine = plan(g, opts, num_sources=len(sources)).compile()
+    compile_s = time.time() - t0
+    res = engine.run(list(sources))  # warmup (first dispatch)
     t0 = time.time()
     for _ in range(reps):
-        dist, stats = bfs(g, list(sources), opts=opts)
+        res = engine.run(list(sources))
     dt = (time.time() - t0) / reps
+    stats = res.stats()
+    key = (f"bfs/{kind}/n={n}/mode={opts.mode}/S={len(sources)}"
+           f"/ex={opts.dense_exchange}/lu={int(opts.local_update)}")
+    _ENGINE_TIMINGS[key] = {
+        "compile_s": compile_s, "per_run_s": dt, "levels": stats.levels,
+    }
     return dt, stats, src.shape[0]
 
 
@@ -140,6 +160,45 @@ def bench_direction_optimizing():
             f"comm_bytes={stats.comm_bytes:.0f}")
 
 
+def bench_engine_amortization():
+    """The API-lifecycle result on the paper's erdos_renyi_100k workload:
+    one-shot plan+compile+run per traversal (what the old ``bfs()``
+    entrypoint cost) vs compile-once ``engine.run`` over fresh sources.
+    The per-traversal time excluding compile is the serving-path number."""
+    n = 100_000
+    src, dst = generate("erdos_renyi", n, seed=0, avg_degree=16.0)
+    g = shard_graph(src, dst, n, p=1)
+    opts = BFSOptions(mode="dense")
+
+    t0 = time.time()
+    engine = plan(g, opts, num_sources=1).compile()
+    compile_s = time.time() - t0
+    t0 = time.time()
+    engine.run([0])
+    first_run_s = time.time() - t0
+
+    reps = 5
+    t0 = time.time()
+    for s in range(1, reps + 1):       # fresh source per run: no retrace
+        engine.run([s * 7])
+    per_run_s = (time.time() - t0) / reps
+    assert engine.trace_count == engine.compile_traces
+
+    t0 = time.time()
+    plan(g, opts, num_sources=1).compile().run([0])  # seed-style one-shot
+    one_shot_s = time.time() - t0
+
+    row("engine_amortized/erdos_renyi_100k", per_run_s * 1e6,
+        f"compile_us={compile_s*1e6:.0f};first_run_us={first_run_s*1e6:.0f};"
+        f"one_shot_us={one_shot_s*1e6:.0f};"
+        f"speedup_vs_one_shot={one_shot_s/per_run_s:.1f}x")
+    _ENGINE_TIMINGS["amortization/erdos_renyi_100k"] = {
+        "compile_s": compile_s, "first_run_s": first_run_s,
+        "per_run_s": per_run_s, "one_shot_s": one_shot_s,
+        "speedup_vs_one_shot": one_shot_s / per_run_s,
+    }
+
+
 def bench_multi_source_throughput():
     """Batched multi-source BFS (the MXU formulation): us per source."""
     n = 30_000
@@ -207,16 +266,43 @@ BENCHES = [
     bench_sec51_exchange_volume,
     bench_sec52_local_update,
     bench_direction_optimizing,
+    bench_engine_amortization,
     bench_multi_source_throughput,
     bench_kernels,
     bench_roofline_table,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_results.json",
+                    help="JSON ledger path (compile vs per-run split)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench function names")
+    args = ap.parse_args(argv)
+
+    if args.only and args.out == ap.get_default("out"):
+        # don't let a filtered run clobber the full default ledger
+        args.out = f"BENCH_results.{args.only}.json"
+
     print("name,us_per_call,derived")
     for b in BENCHES:
+        if args.only and args.only not in b.__name__:
+            continue
         b()
+
+    ledger = {
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in _ROWS],
+        "engine_timings": _ENGINE_TIMINGS,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    with open(args.out, "w") as f:
+        json.dump(ledger, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out} ({len(_ROWS)} rows, "
+          f"{len(_ENGINE_TIMINGS)} engine timings)", flush=True)
 
 
 if __name__ == "__main__":

@@ -3,14 +3,17 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Runs the 1-D-partitioned engine in every frontier mode on a small-world,
-an Erdős-Rényi and a star graph, validates against the serial oracle, and
-prints the per-mode communication volumes — the paper's §5 story in one
-screen.
+an Erdős-Rényi and a star graph through the compile-once lifecycle
+(``plan(...).compile()`` then ``engine.run(source)``), validates against
+the serial oracle, and prints the per-mode communication volumes — the
+paper's §5 story in one screen.  Each engine is reused for a second
+traversal from a different source to show that fresh sources are
+device-only work (zero retraces).
 """
 
 import numpy as np
 
-from repro.core import BFSOptions, bfs
+from repro.core import BFSOptions, plan
 from repro.core.ref import INF, bfs_reference
 from repro.graphs import generate, shard_graph
 
@@ -23,18 +26,21 @@ def main():
         src, dst = generate(kind, n, seed=0, **kw)
         g = shard_graph(src, dst, n, p=1)
         want = bfs_reference(src, dst, n, [0])
+        want2 = bfs_reference(src, dst, n, [n // 2])
         print(f"\n== {kind}: n={n} directed_edges={src.shape[0]} ==")
         for mode in ("dense", "queue", "auto"):
             for strat in (("allgather_merge", "baseline [2]"),
                           ("alltoall_direct", "paper-optimized")):
                 opts = BFSOptions(mode=mode, dense_exchange=strat[0],
-                                  queue_exchange=strat[0]
-                                  if strat[0] in ("allgather_merge",
-                                                  "alltoall_direct")
-                                  else "alltoall_direct",
+                                  queue_exchange=strat[0],
                                   queue_cap=1 << 14)
-                dist, stats = bfs(g, [0], opts=opts)
-                ok = np.array_equal(dist, want)
+                engine = plan(g, opts).compile()
+                res = engine.run([0])
+                stats = res.stats()
+                ok = np.array_equal(res.dist_host, want)
+                # reuse: new source, same executable, no retrace
+                ok &= np.array_equal(engine.run([n // 2]).dist_host, want2)
+                ok &= engine.trace_count == engine.compile_traces
                 print(f"  mode={mode:6s} exchange={strat[1]:16s} "
                       f"levels={stats.levels:3d} "
                       f"visited={stats.visited:6d} "

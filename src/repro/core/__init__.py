@@ -1,12 +1,26 @@
 """The paper's primary contribution: 1-D partitioned distributed BFS with
-optimized owner-exchange communication (Sharma & Zaidi, CS.DC 2020)."""
+optimized owner-exchange communication (Sharma & Zaidi, CS.DC 2020).
 
-from repro.core.bfs import BFSOptions, BFSStats, INF, bfs
+Public lifecycle: ``plan(graph, opts, mesh) -> BFSPlan -> .compile() ->
+BFSEngine -> .run(sources) / .run_async(sources) -> BFSResult``.  The
+one-shot ``bfs()`` remains as a deprecated wrapper over that lifecycle.
+"""
+
+from repro.core.bfs import (BFSOptions, BFSStats, INF, bfs,
+                            validate_sources)
+from repro.core.engine import (BFSEngine, BFSPlan, BFSResult, BFSRunStats,
+                               plan)
 from repro.core.exchange import (DENSE_STRATEGIES, QUEUE_STRATEGIES,
-                                 exchange_dense, exchange_queue)
+                                 ExchangeStrategy, exchange_dense,
+                                 exchange_queue, get_exchange,
+                                 register_exchange, unregister_exchange)
 from repro.core.partition import Partition1D, repartition
 
 __all__ = [
-    "BFSOptions", "BFSStats", "INF", "bfs", "Partition1D", "repartition",
-    "exchange_dense", "exchange_queue", "DENSE_STRATEGIES", "QUEUE_STRATEGIES",
+    "BFSOptions", "BFSStats", "INF", "bfs", "validate_sources",
+    "BFSEngine", "BFSPlan", "BFSResult", "BFSRunStats", "plan",
+    "Partition1D", "repartition",
+    "exchange_dense", "exchange_queue", "ExchangeStrategy",
+    "register_exchange", "unregister_exchange", "get_exchange",
+    "DENSE_STRATEGIES", "QUEUE_STRATEGIES",
 ]

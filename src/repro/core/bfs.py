@@ -1,16 +1,26 @@
 """Distributed level-synchronous BFS with 1-D partitioning (paper fig. 2).
 
-The engine is a single ``shard_map``-wrapped ``lax.while_loop``: every
-iteration is one BFS level — local expansion (computation step, paper
+The traversal kernel is a single ``shard_map``-wrapped ``lax.while_loop``:
+every iteration is one BFS level — local expansion (computation step, paper
 §2.3) followed by an owner exchange (communication step) and the owner-side
 distance update.  All shapes are static; termination is a replicated
 ``psum`` of the new-frontier population so every shard exits together.
 
+This module holds the *kernel*: options, per-shard loop body builder and
+source validation.  The public lifecycle lives in ``core/engine.py``::
+
+    plan(graph, opts, mesh) -> BFSPlan -> .compile() -> BFSEngine -> .run()
+
+``bfs()`` below is the deprecated one-shot wrapper over that lifecycle; it
+keeps an engine cache per graph so legacy call sites no longer recompile
+on every traversal.
+
 Modes (``BFSOptions.mode``):
-  * ``dense``  — bitmap frontier, candidate exchange via any strategy in
-    ``exchange.DENSE_STRATEGIES``.  Supports batched multi-source BFS
-    (S sources traversed simultaneously — the Graph500-style formulation
-    that keeps the MXU busy; see kernels/bsr_spmm).
+  * ``dense``  — bitmap frontier, candidate exchange via any strategy
+    registered under ``exchange.register_exchange("dense", ...)``.
+    Supports batched multi-source BFS (S sources traversed simultaneously
+    — the Graph500-style formulation that keeps the MXU busy; see
+    kernels/bsr_spmm).
   * ``queue``  — the paper's sparse per-owner send buffers (S = 1).
   * ``auto``   — beyond-paper direction-optimizing hybrid: per level picks
     bottom-up (frontier huge), queue (frontier tiny) or dense top-down,
@@ -26,14 +36,13 @@ communication cost, §4) without real multi-host hardware.
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import TYPE_CHECKING, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import exchange as ex
 from repro.core import frontier as fr
@@ -42,7 +51,7 @@ from repro.core.partition import Partition1D
 if TYPE_CHECKING:  # graphs.formats imports core.partition; avoid the cycle
     from repro.graphs.formats import ShardedGraph
 
-INF = jnp.int32(2 ** 30)
+INF = fr.INF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,19 +70,69 @@ class BFSOptions:
                                               # (dense mode, single shard)
 
     def validate(self):
-        assert self.mode in ("dense", "queue", "auto"), self.mode
-        assert self.dense_exchange in ex.DENSE_STRATEGIES
-        assert self.queue_exchange in ex.QUEUE_STRATEGIES
+        if self.mode not in ("dense", "queue", "auto"):
+            raise ValueError(f"unknown BFS mode {self.mode!r}; "
+                             "expected dense | queue | auto")
+        # get_exchange raises a ValueError naming the registered strategies
+        ex.get_exchange("dense", self.dense_exchange)
+        ex.get_exchange("queue", self.queue_exchange)
+        if self.queue_cap <= 0:
+            raise ValueError(f"queue_cap must be positive ({self.queue_cap})")
+        if self.max_levels < 0:
+            raise ValueError(f"max_levels must be >= 0 ({self.max_levels})")
 
 
 @dataclasses.dataclass
 class BFSStats:
+    """Host-side summary of one traversal (legacy / ``bfs()`` interface).
+
+    The engine API splits this into static plan metadata
+    (``BFSPlan.describe()``) and per-run device stats (``BFSRunStats``,
+    a pytree that stays on device until ``.block()``); this container is
+    what ``BFSResult.stats()`` materializes for host consumers.
+    """
+
     levels: int
     visited: int
     comm_bytes: float          # analytic, summed over levels, per chip
     overflowed: bool           # a queue level overflowed (result still exact:
                                # engine falls back to dense for that level)
     mode_counts: dict
+
+
+def validate_sources(sources, n_logical: int,
+                     max_sources: Optional[int] = None) -> np.ndarray:
+    """Validate BFS source ids; returns them as a 1-D int64 array.
+
+    Rejects ids outside ``[0, n_logical)`` and duplicates with a clear
+    ValueError (previously ``dist0[sv, j]`` either crashed cryptically or
+    silently wrapped on negative ids).
+    """
+    arr = np.atleast_1d(np.asarray(sources))
+    if arr.ndim != 1:
+        raise ValueError(f"sources must be a scalar or 1-D sequence, "
+                         f"got shape {arr.shape}")
+    if arr.size == 0:
+        raise ValueError("sources must contain at least one vertex id")
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(f"sources must be integer vertex ids, "
+                         f"got dtype {arr.dtype}")
+    arr = arr.astype(np.int64)
+    bad = arr[(arr < 0) | (arr >= n_logical)]
+    if bad.size:
+        raise ValueError(f"source ids {bad.tolist()} outside "
+                         f"[0, {n_logical})")
+    uniq, counts = np.unique(arr, return_counts=True)
+    dup = uniq[counts > 1]
+    if dup.size:
+        raise ValueError(f"duplicate source ids {dup.tolist()}; each "
+                         "column of a batched traversal needs a distinct "
+                         "source")
+    if max_sources is not None and arr.size > max_sources:
+        raise ValueError(f"{arr.size} sources exceed the engine's "
+                         f"compiled capacity of {max_sources}; build a "
+                         "plan with a larger num_sources")
+    return arr
 
 
 def _owned_update(dist, own_cand, level):
@@ -86,23 +145,30 @@ def _owned_update(dist, own_cand, level):
 
 def _make_shard_fn(part: Partition1D, e_total: int, s: int,
                    axis, axes_sizes, opts: BFSOptions, max_levels: int,
-                   expand_fn=None):
-    """Builds the per-shard BFS body (runs under shard_map)."""
+                   dense_strategy: ex.ExchangeStrategy,
+                   queue_strategy: ex.ExchangeStrategy,
+                   expand_fn=None, on_trace=None):
+    """Builds the per-shard BFS body (runs under shard_map).
+
+    Exchange strategies arrive pre-resolved from the registry (plan time),
+    so the loop body never consults strategy names.  ``on_trace`` is
+    invoked once per trace — engines use it to prove compile-once reuse.
+    """
     p, shard, n = part.p, part.shard_size, part.n
     itemsize = 1  # uint8 masks on the wire
     queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
     bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part.n_logical))
+    dense_bytes = dense_strategy.bytes_model(n, p, s, itemsize, axes_sizes)
+    queue_bytes = queue_strategy.bytes_model(p, opts.queue_cap, 4)
 
     def dense_level(frontier, dist, level, src_local, dst_global):
         if expand_fn is not None:
             cand = expand_fn(frontier)
         else:
             cand = fr.expand_dense(frontier, src_local, dst_global, n)
-        own = ex.exchange_dense(cand, axis, opts.dense_exchange)
+        own = dense_strategy.impl(cand, axis)
         dist, new = _owned_update(dist, own, level)
-        bytes_ = ex.dense_level_bytes(opts.dense_exchange, n, p, s, itemsize,
-                                      axes_sizes)
-        return dist, new, jnp.float32(bytes_)
+        return dist, new, jnp.float32(dense_bytes)
 
     def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
         fglob = ex.allgather_frontier(frontier, axis)      # (n, S)
@@ -124,11 +190,10 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         overflow_any = lax.psum(overflow.astype(jnp.int32), axis) > 0
 
         def sparse_branch():
-            recv = ex.exchange_queue(buckets, axis, opts.queue_exchange)
+            recv = queue_strategy.impl(buckets, axis)
             own = jnp.maximum(fr.apply_queue(recv, me, shard), local_mask)
             d2, new = _owned_update(dist, own[:, None], level)
-            return d2, new, jnp.float32(
-                ex.queue_level_bytes(opts.queue_exchange, p, opts.queue_cap))
+            return d2, new, jnp.float32(queue_bytes)
 
         def dense_branch():
             return dense_level(frontier, dist, level, src_local, dst_global)
@@ -189,6 +254,8 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
 
     def shard_fn(src_local, dst_global, in_src_global, in_dst_local,
                  dist0, frontier0, valid_local):
+        if on_trace is not None:
+            on_trace()
         state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
                   jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32))
 
@@ -208,91 +275,40 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
 
 def bfs(graph: "ShardedGraph", sources, mesh: Optional[Mesh] = None,
         axis=None, opts: BFSOptions = BFSOptions()):
-    """Run distributed BFS from ``sources`` (int or sequence -> batched).
+    """One-shot BFS from ``sources`` (int or sequence -> batched).
+
+    .. deprecated::
+        ``bfs()`` is a thin wrapper over the compile-once lifecycle —
+        ``plan(graph, opts, mesh).compile().run(sources)`` — kept for
+        existing call sites.  It memoizes one engine per
+        (graph, opts, mesh, axis, S) so repeated calls amortize the
+        compile, but new code should hold a ``BFSEngine`` directly (and
+        use ``run_async`` for pipelined dispatch).
 
     Returns (dist, stats): dist is (n_logical, S) int32 with INF for
     unreachable vertices; stats is a BFSStats.
     """
-    opts.validate()
-    part = graph.part
-    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
-    s = int(sources.shape[0])
-    if opts.mode == "queue":
-        assert s == 1, "queue frontier supports a single source"
-    p, shard, n = part.p, part.shard_size, part.n
+    from repro.core import engine as _engine  # deferred: engine imports us
 
-    if mesh is None:
-        dev = jax.devices()[:1]
-        mesh = Mesh(np.asarray(dev).reshape(1), ("bfs_p",))
-        axis = "bfs_p"
-        assert p == 1, "pass a mesh whose total size equals part.p"
-    axis = axis if axis is not None else tuple(mesh.axis_names)
-    axes = axis if isinstance(axis, tuple) else (axis,)
-    axes_sizes = [mesh.shape[a] for a in axes]
-    assert int(np.prod(axes_sizes)) == p, (axes_sizes, p)
+    warnings.warn(
+        "repro.core.bfs.bfs() is deprecated; use "
+        "plan(graph, opts, mesh=...).compile().run(sources)",
+        DeprecationWarning, stacklevel=2)
+    src_arr = validate_sources(sources, graph.part.n_logical)
+    s = int(src_arr.shape[0])
 
-    max_levels = opts.max_levels or part.n_logical
-
-    # initial state (host-side, then sharded by the jit partitioner)
-    dist0 = np.full((n, s), int(INF), dtype=np.int32)
-    frontier0 = np.zeros((n, s), dtype=np.uint8)
-    for j, sv in enumerate(sources):
-        dist0[sv, j] = 0
-        frontier0[sv, j] = 1
-    valid = (np.arange(n) < part.n_logical)
-
-    src_local, dst_global, in_src_global, in_dst_local = graph.flat()
-
-    expand_fn = None
-    if opts.use_kernel:
-        # Pallas bsr_spmm frontier expansion: block-CSR adjacency on the
-        # MXU (boolean semiring via sum + >0).  Single-shard dense mode —
-        # the multi-shard path keeps the segment-scatter expansion.
-        assert p == 1 and opts.mode == "dense", \
-            "use_kernel requires p == 1 and mode == 'dense'"
-        from repro.graphs.formats import block_sparse_adjacency
-        from repro.kernels.bsr_spmm import ops as spmm_ops
-        valid_e = dst_global >= 0
-        src_g = np.asarray(src_local)[valid_e]
-        dst_g = np.asarray(dst_global)[valid_e]
-        blocks, brr, bcc, n_pad_b = block_sparse_adjacency(
-            dst_g, src_g, n)  # transposed: candidates = A^T @ f
-        blocks_j = jnp.asarray(blocks)
-        br_j = jnp.asarray(brr)
-        bc_j = jnp.asarray(bcc)
-
-        def expand_fn(frontier):  # (n, S) uint8 -> (n, S) uint8
-            f = frontier
-            if n_pad_b > n:
-                f = jnp.pad(f, ((0, n_pad_b - n), (0, 0)))
-            cand = spmm_ops.frontier_expand(
-                blocks_j, br_j, bc_j, f, n_rows_pad=n_pad_b)
-            return cand[:n]
-
-    shard_fn = _make_shard_fn(part, graph.n_edges, s, axis,
-                              axes_sizes, opts, max_levels,
-                              expand_fn=expand_fn)
-
-    spec_edge = P(axis)
-    spec_vert = P(axis, None)
-    mapped = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(spec_edge, spec_edge, spec_edge, spec_edge,
-                  spec_vert, spec_vert, P(axis)),
-        out_specs=(spec_vert, P(), P(), P(), P()),
-        check_vma=False,
-    )
-    with mesh:
-        dist, levels, comm_bytes, overflowed, modes = jax.jit(mapped)(
-            jnp.asarray(src_local), jnp.asarray(dst_global),
-            jnp.asarray(in_src_global), jnp.asarray(in_dst_local),
-            jnp.asarray(dist0), jnp.asarray(frontier0), jnp.asarray(valid))
-    dist = np.asarray(dist)[: part.n_logical]
-    visited = int((dist < int(INF)).sum())
-    stats = BFSStats(
-        levels=int(levels), visited=visited,
-        comm_bytes=float(comm_bytes), overflowed=bool(overflowed),
-        mode_counts={"dense": int(modes[0]), "queue": int(modes[1]),
-                     "bottom_up": int(modes[2])},
-    )
-    return dist, stats
+    cache = graph.__dict__.setdefault("_bfs_engines", {})
+    axis_key = tuple(axis) if isinstance(axis, (list, tuple)) else axis
+    key = (opts, mesh, axis_key, s)
+    eng = cache.get(key)
+    if eng is None:
+        eng = _engine.plan(graph, opts, mesh=mesh, axis=axis,
+                           num_sources=s).compile()
+        # Bound the per-graph cache (FIFO): option sweeps over one graph
+        # must not accumulate executables without limit.  The big device
+        # buffers are shared per (mesh, axis) regardless (engine.py).
+        if len(cache) >= 8:
+            cache.pop(next(iter(cache)))
+        cache[key] = eng
+    res = eng.run(src_arr)
+    return res.dist_host, res.stats()

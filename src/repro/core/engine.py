@@ -1,0 +1,367 @@
+"""Compile-once BFS lifecycle: ``plan() -> BFSPlan -> compile() -> BFSEngine``.
+
+The paper's headline result is cutting *per-traversal* communication cost,
+so the API must not give the win back at the call boundary.  The lifecycle
+separates the three cost tiers explicitly:
+
+  * ``plan(graph, opts, mesh)``   — host-side validation and static-shape
+    derivation: checks options, resolves exchange strategies from the
+    registry (core/exchange.py), normalizes the mesh/axis, fixes the
+    source-batch capacity S.  Cheap; pure metadata (``BFSPlan``).
+  * ``BFSPlan.compile()``         — builds the ``shard_map``-wrapped
+    while-loop once and AOT-lowers it via ``jax.jit(...).lower().compile()``
+    with the ``dist`` buffer donated; uploads the graph's edge blocks to
+    device.  Paid once per (graph, opts, mesh, S).
+  * ``BFSEngine.run(sources)``    — per traversal.  Source injection is a
+    device-side scatter from an ``(S,)`` int32 array
+    (frontier.init_dist_frontier), so fresh source sets never retrace and
+    never materialize host ``(n, S)`` arrays.  ``run_async`` returns
+    un-blocked device arrays for pipelined dispatch; stats stay on device
+    (``BFSRunStats`` pytree) until ``.block()``/``.stats()``.
+
+Every later scaling feature (2-D partitioning, multi-graph caching, the
+serve-layer traversal endpoint) plugs into this seam.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import exchange as ex
+from repro.core import frontier as fr
+from repro.core.bfs import (BFSOptions, BFSStats, INF, _make_shard_fn,
+                            validate_sources)
+from repro.core.compat import shard_map
+
+if TYPE_CHECKING:
+    from repro.graphs.formats import ShardedGraph
+
+
+# ---------------------------------------------------------------------------
+# Per-run stats: a device pytree — no host sync until .block()/.to_host()
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BFSRunStats:
+    """Per-traversal statistics as device scalars (a JAX pytree).
+
+    Static plan facts (p, S, strategies, byte model, ...) live in
+    ``BFSPlan.describe()``; only values produced by the traversal itself
+    are here, so pipelined ``run_async`` dispatch never blocks on stats.
+    """
+
+    levels: jax.Array          # () int32
+    comm_bytes: jax.Array      # () float32, analytic per-chip
+    overflowed: jax.Array      # () bool
+    mode_counts: jax.Array     # (3,) int32: dense, queue, bottom_up levels
+
+    def block(self) -> "BFSRunStats":
+        jax.block_until_ready((self.levels, self.comm_bytes,
+                               self.overflowed, self.mode_counts))
+        return self
+
+    def to_host(self) -> dict:
+        return {
+            "levels": int(self.levels),
+            "comm_bytes": float(self.comm_bytes),
+            "overflowed": bool(self.overflowed),
+            "mode_counts": {"dense": int(self.mode_counts[0]),
+                            "queue": int(self.mode_counts[1]),
+                            "bottom_up": int(self.mode_counts[2])},
+        }
+
+
+jax.tree_util.register_dataclass(
+    BFSRunStats,
+    data_fields=["levels", "comm_bytes", "overflowed", "mode_counts"],
+    meta_fields=[])
+
+
+@dataclasses.dataclass
+class BFSResult:
+    """One traversal's outputs; device-resident until explicitly synced.
+
+    ``dist`` is the padded global (n, S) int32 distance matrix (sharded
+    over the mesh); ``dist_host`` slices it to the logical vertex range
+    and the actually-requested source columns.
+    """
+
+    dist: jax.Array
+    run_stats: BFSRunStats
+    n_logical: int
+    n_sources: int             # actual requested sources (<= compiled S)
+
+    def block(self) -> "BFSResult":
+        jax.block_until_ready(self.dist)
+        self.run_stats.block()
+        return self
+
+    @property
+    def dist_host(self) -> np.ndarray:
+        """Host view of the distances; the D2H copy is made once and
+        cached (stats() and callers both read it)."""
+        if not hasattr(self, "_dist_host"):
+            self._dist_host = np.asarray(
+                self.dist)[: self.n_logical, : self.n_sources]
+        return self._dist_host
+
+    def stats(self) -> BFSStats:
+        """Materialize legacy host-side stats (syncs device -> host)."""
+        h = self.run_stats.to_host()
+        visited = int((self.dist_host < int(INF)).sum())
+        return BFSStats(levels=h["levels"], visited=visited,
+                        comm_bytes=h["comm_bytes"],
+                        overflowed=h["overflowed"],
+                        mode_counts=h["mode_counts"])
+
+
+# ---------------------------------------------------------------------------
+# Plan: validated static metadata for one (graph, opts, mesh, S) traversal
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BFSPlan:
+    graph: "ShardedGraph"
+    opts: BFSOptions
+    mesh: Mesh
+    axis: object               # str or tuple of mesh axis names
+    axes_sizes: tuple
+    num_sources: int           # compiled source-batch capacity S
+    max_levels: int
+    dense_strategy: ex.ExchangeStrategy
+    queue_strategy: ex.ExchangeStrategy
+
+    def describe(self) -> dict:
+        """Static plan metadata (the non-per-run half of the old BFSStats)."""
+        part = self.graph.part
+        return {
+            "mode": self.opts.mode,
+            "dense_exchange": self.dense_strategy.name,
+            "queue_exchange": self.queue_strategy.name,
+            "p": part.p,
+            "n": part.n,
+            "n_logical": part.n_logical,
+            "shard_size": part.shard_size,
+            "e_cap": self.graph.e_cap,
+            "in_e_cap": self.graph.in_e_cap,
+            "num_sources": self.num_sources,
+            "max_levels": self.max_levels,
+            "axes": self.axis if isinstance(self.axis, tuple) else (self.axis,),
+            "axes_sizes": self.axes_sizes,
+            "dense_level_bytes": self.dense_strategy.bytes_model(
+                part.n, part.p, self.num_sources, 1, self.axes_sizes),
+        }
+
+    def compile(self) -> "BFSEngine":
+        return BFSEngine(self)
+
+
+def plan(graph: "ShardedGraph", opts: BFSOptions = BFSOptions(), *,
+         mesh: Optional[Mesh] = None, axis=None,
+         num_sources: int = 1) -> BFSPlan:
+    """Validate options/topology and derive the static traversal shapes.
+
+    ``num_sources`` fixes the compiled source-batch capacity S; a compiled
+    engine accepts any 1..S sources per run without retracing.
+    """
+    opts.validate()
+    part = graph.part
+    if num_sources < 1:
+        raise ValueError(f"num_sources must be >= 1 ({num_sources})")
+    if opts.mode == "queue" and num_sources != 1:
+        raise ValueError("queue frontier supports a single source "
+                         f"(num_sources={num_sources})")
+    if opts.use_kernel:
+        # Pallas path precondition; AssertionError kept for back-compat.
+        assert part.p == 1 and opts.mode == "dense", \
+            "use_kernel requires p == 1 and mode == 'dense'"
+
+    if mesh is None:
+        dev = jax.devices()[:1]
+        mesh = Mesh(np.asarray(dev).reshape(1), ("bfs_p",))
+        axis = "bfs_p"
+        if part.p != 1:
+            raise ValueError("pass a mesh whose total size equals part.p")
+    axis = axis if axis is not None else tuple(mesh.axis_names)
+    axis = tuple(axis) if isinstance(axis, (list, tuple)) else axis
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    axes_sizes = tuple(mesh.shape[a] for a in axes)
+    if int(np.prod(axes_sizes)) != part.p:
+        raise ValueError(f"mesh axes {axes} of sizes {axes_sizes} do not "
+                         f"multiply to the graph's p={part.p}")
+
+    return BFSPlan(
+        graph=graph, opts=opts, mesh=mesh, axis=axis,
+        axes_sizes=axes_sizes, num_sources=int(num_sources),
+        max_levels=opts.max_levels or part.n_logical,
+        dense_strategy=ex.get_exchange("dense", opts.dense_exchange),
+        queue_strategy=ex.get_exchange("queue", opts.queue_exchange),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine: AOT-compiled executables + device-resident graph buffers
+# ---------------------------------------------------------------------------
+
+class BFSEngine:
+    """A compiled traversal: run unlimited source sets with device-only work.
+
+    Two AOT executables are built at construction:
+
+      * ``_init_c(sources)``   — scatters the (S,) source vector into fresh
+        (n, S) dist/frontier buffers on device.
+      * ``_run_c(edges..., dist0, frontier0, valid)`` — the while-loop
+        kernel.  ``dist0`` is donated: its (n, S) buffer is reused for the
+        output distance matrix, so steady-state traversals allocate no new
+        large buffers.  (``frontier0`` is not donated — the kernel has no
+        same-shaped uint8 output to alias it to.)
+
+    ``trace_count`` exposes how many times the kernel body has been traced;
+    it must not grow across ``run()`` calls (asserted by the test suite).
+    """
+
+    def __init__(self, plan_: BFSPlan):
+        self.plan = plan_
+        self._trace_count = 0
+        graph, opts, mesh = plan_.graph, plan_.opts, plan_.mesh
+        part = graph.part
+        p, n = part.p, part.n
+        s = plan_.num_sources
+        axis = plan_.axis
+
+        expand_fn = self._build_kernel_expand() if opts.use_kernel else None
+
+        shard_fn = _make_shard_fn(
+            part, graph.n_edges, s, axis, plan_.axes_sizes, opts,
+            plan_.max_levels, plan_.dense_strategy, plan_.queue_strategy,
+            expand_fn=expand_fn, on_trace=self._bump_trace)
+
+        spec_edge = P(axis)
+        spec_vert = P(axis, None)
+        sh_edge = NamedSharding(mesh, spec_edge)
+        sh_vert = NamedSharding(mesh, spec_vert)
+        sh_repl = NamedSharding(mesh, P())
+        self._sh_repl = sh_repl
+
+        mapped = shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(spec_edge, spec_edge, spec_edge, spec_edge,
+                      spec_vert, spec_vert, spec_edge),
+            out_specs=(spec_vert, P(), P(), P(), P()),
+            check_vma=False,
+        )
+
+        # Graph blocks + validity mask live on device for the engine's
+        # lifetime; every run reuses them with zero H2D traffic.  They are
+        # shared across engines on the same (mesh, axis) — compiling
+        # several option/S variants of one graph must not duplicate its
+        # largest buffers.
+        dev_cache = graph.__dict__.setdefault("_device_blocks", {})
+        bufs = dev_cache.get((mesh, axis))
+        if bufs is None:
+            src_local, dst_global, in_src_global, in_dst_local = graph.flat()
+            valid = np.arange(n) < part.n_logical
+            bufs = (tuple(
+                jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
+                for a in (src_local, dst_global, in_src_global,
+                          in_dst_local)),
+                jax.device_put(valid, sh_edge))
+            dev_cache[(mesh, axis)] = bufs
+        self._gbufs, self._valid = bufs
+
+        dist_sds = jax.ShapeDtypeStruct((n, s), jnp.int32, sharding=sh_vert)
+        front_sds = jax.ShapeDtypeStruct((n, s), jnp.uint8, sharding=sh_vert)
+        src_sds = jax.ShapeDtypeStruct((s,), jnp.int32, sharding=sh_repl)
+
+        self._run_c = jax.jit(mapped, donate_argnums=(4,)).lower(
+            *self._gbufs, dist_sds, front_sds, self._valid).compile()
+
+        def init_fn(sources):
+            self._bump_trace()
+            return fr.init_dist_frontier(sources, n, part.n_logical)
+
+        self._init_c = jax.jit(
+            init_fn, out_shardings=(sh_vert, sh_vert)).lower(src_sds).compile()
+
+        # Traces spent building the two executables; run() must never add
+        # to this (the engine-reuse tests pin trace_count to it).
+        self.compile_traces = self._trace_count
+
+    # ------------------------------------------------------------------ misc
+    def _bump_trace(self):
+        self._trace_count += 1
+
+    @property
+    def trace_count(self) -> int:
+        return self._trace_count
+
+    def _build_kernel_expand(self):
+        # Pallas bsr_spmm frontier expansion: block-CSR adjacency on the
+        # MXU (boolean semiring via sum + >0).  Single-shard dense mode —
+        # the multi-shard path keeps the segment-scatter expansion.
+        from repro.graphs.formats import block_sparse_adjacency
+        from repro.kernels.bsr_spmm import ops as spmm_ops
+
+        graph = self.plan.graph
+        n = graph.part.n
+        src_local, dst_global, _, _ = graph.flat()
+        valid_e = dst_global >= 0
+        src_g = np.asarray(src_local)[valid_e]
+        dst_g = np.asarray(dst_global)[valid_e]
+        blocks, brr, bcc, n_pad_b = block_sparse_adjacency(
+            dst_g, src_g, n)  # transposed: candidates = A^T @ f
+        blocks_j = jnp.asarray(blocks)
+        br_j = jnp.asarray(brr)
+        bc_j = jnp.asarray(bcc)
+
+        def expand_fn(frontier):  # (n, S) uint8 -> (n, S) uint8
+            f = frontier
+            if n_pad_b > n:
+                f = jnp.pad(f, ((0, n_pad_b - n), (0, 0)))
+            cand = spmm_ops.frontier_expand(
+                blocks_j, br_j, bc_j, f, n_rows_pad=n_pad_b)
+            return cand[:n]
+
+        return expand_fn
+
+    # ------------------------------------------------------------------- run
+    def run_async(self, sources) -> BFSResult:
+        """Dispatch one traversal; returns un-blocked device arrays.
+
+        ``sources`` may hold 1..S vertex ids; unused engine columns stay
+        empty (their dist columns are all-INF and are sliced off by
+        ``dist_host``).
+        """
+        s = self.plan.num_sources
+        src_arr = validate_sources(sources, self.plan.graph.part.n_logical,
+                                   max_sources=s)
+        n_req = int(src_arr.shape[0])
+        # ids are bounded by n_logical, which must fit the int32 dist/
+        # source buffers — guard rather than let numpy wrap silently
+        if src_arr.max() > np.iinfo(np.int32).max:
+            raise ValueError("source ids exceed int32 range; the engine's "
+                             "distance/source buffers are int32")
+        padded = np.full((s,), -1, dtype=np.int32)
+        padded[:n_req] = src_arr
+        src_dev = jax.device_put(padded, self._sh_repl)
+
+        dist0, frontier0 = self._init_c(src_dev)
+        dist, levels, comm_bytes, overflowed, modes = self._run_c(
+            *self._gbufs, dist0, frontier0, self._valid)
+        return BFSResult(
+            dist=dist,
+            run_stats=BFSRunStats(levels=levels, comm_bytes=comm_bytes,
+                                  overflowed=overflowed, mode_counts=modes),
+            n_logical=self.plan.graph.part.n_logical,
+            n_sources=n_req,
+        )
+
+    def run(self, sources) -> BFSResult:
+        """Run one traversal to completion (blocks until device work ends)."""
+        return self.run_async(sources).block()

@@ -15,31 +15,115 @@ The paper's two optimizations over Buluç-Madduri [2]:
       number of processors") and an ``all-to-all``/``reduce-scatter`` where
       each chip receives only what it owns (bytes ∝ n, independent of p).
 
-Both the dense-bitmap and sparse-queue frontier representations support a
-faithful baseline strategy and the paper-optimized direct strategy, plus
-two beyond-paper strategies (hierarchical two-phase all-to-all matched to
-the pod/ICI topology, and a widening reduce-scatter).  The same module
-drives BFS frontier exchange, GNN halo exchange, MoE token dispatch and
-recsys embedding lookup (DESIGN.md §Arch-applicability).
+Strategies are *pluggable*: each one is a function registered with
+``@register_exchange(kind, name, bytes_model)`` which pairs the collective
+implementation with its analytic per-chip byte model.  ``BFSPlan``
+(core/engine.py) resolves strategy names through this registry at plan
+time, so new exchange algorithms slot in without touching the BFS engine.
+``DENSE_STRATEGIES`` / ``QUEUE_STRATEGIES`` remain as live, tuple-like
+views of the registered names for backward compatibility.
 
-Every strategy has an analytic per-chip byte model (``dense_level_bytes`` /
-``queue_level_bytes``) which benchmarks cross-check against bytes parsed
-from compiled HLO (tests/test_exchange_bytes.py).
+Every byte model is cross-checked against bytes parsed from compiled HLO
+(tests/helpers/exchange_bytes.py), which pins the paper-reproduction
+numbers (benchmarks/run.py tables) to compiler ground truth.  The same
+module drives BFS frontier exchange, GNN halo exchange, MoE token dispatch
+and recsys embedding lookup (DESIGN.md §Arch-applicability).
 """
 
 from __future__ import annotations
 
-from typing import Sequence, Union
+import dataclasses
+from typing import Callable, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 AxisName = Union[str, tuple]
 
-DENSE_STRATEGIES = ("allgather_merge", "alltoall_direct", "reduce_scatter",
-                    "hierarchical")
-QUEUE_STRATEGIES = ("allgather_merge", "alltoall_direct")
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeStrategy:
+    """A named exchange algorithm plus its analytic per-chip byte model.
+
+    ``impl(x, axis)`` runs under shard_map; ``bytes_model`` signature is
+    kind-specific: dense ``(n, p, s, itemsize, axes_sizes)``, queue
+    ``(p, cap, itemsize)``.  Both return bytes *received* per chip per
+    level — the quantity the paper's §4 scalability analysis is built on.
+    """
+
+    name: str
+    kind: str                 # "dense" | "queue"
+    impl: Callable
+    bytes_model: Callable
+
+
+_REGISTRY: dict = {}          # (kind, name) -> ExchangeStrategy
+
+
+def register_exchange(kind: str, name: str, bytes_model: Callable):
+    """Decorator: register an exchange impl under ``(kind, name)``.
+
+    ``kind`` is "dense" (full-length candidate-mask merge) or "queue"
+    (per-destination id buffers).  Re-registering a name overwrites it,
+    which keeps iterative strategy development REPL-friendly.
+    """
+    if kind not in ("dense", "queue"):
+        raise ValueError(f"unknown exchange kind {kind!r}")
+
+    def deco(fn):
+        _REGISTRY[(kind, name)] = ExchangeStrategy(
+            name=name, kind=kind, impl=fn, bytes_model=bytes_model)
+        return fn
+
+    return deco
+
+
+def unregister_exchange(kind: str, name: str) -> None:
+    _REGISTRY.pop((kind, name), None)
+
+
+def get_exchange(kind: str, name: str) -> ExchangeStrategy:
+    try:
+        return _REGISTRY[(kind, name)]
+    except KeyError:
+        avail = ", ".join(sorted(n for k, n in _REGISTRY if k == kind))
+        raise ValueError(
+            f"unknown {kind} exchange strategy {name!r}; "
+            f"registered: {avail}") from None
+
+
+class _StrategyNames:
+    """Live tuple-like view of registered names (back-compat for the old
+    frozen ``DENSE_STRATEGIES`` / ``QUEUE_STRATEGIES`` tuples)."""
+
+    def __init__(self, kind: str):
+        self._kind = kind
+
+    def _names(self) -> tuple:
+        return tuple(n for k, n in _REGISTRY if k == self._kind)
+
+    def __iter__(self):
+        return iter(self._names())
+
+    def __contains__(self, name) -> bool:
+        return (self._kind, name) in _REGISTRY
+
+    def __len__(self) -> int:
+        return len(self._names())
+
+    def __getitem__(self, i):
+        return self._names()[i]
+
+    def __repr__(self) -> str:
+        return repr(self._names())
+
+
+DENSE_STRATEGIES = _StrategyNames("dense")
+QUEUE_STRATEGIES = _StrategyNames("queue")
 
 
 def axis_size(axis: AxisName) -> int:
@@ -58,6 +142,79 @@ def _axes_tuple(axis: AxisName) -> tuple:
 # Dense candidate exchange: full-length (n, S) candidate mask -> owned slice
 # ---------------------------------------------------------------------------
 
+def _bytes_allgather_merge(n, p, s, itemsize, axes_sizes):
+    return (p - 1) * n * s * itemsize
+
+
+def _bytes_alltoall_direct(n, p, s, itemsize, axes_sizes):
+    return (p - 1) / p * n * s * itemsize
+
+
+def _bytes_reduce_scatter(n, p, s, itemsize, axes_sizes):
+    return (p - 1) / p * n * s * 2  # bf16 widening
+
+
+def _bytes_hierarchical(n, p, s, itemsize, axes_sizes):
+    sizes = list(axes_sizes) or [p]
+    return sum((sz - 1) / sz * n * s * itemsize for sz in sizes)
+
+
+@register_exchange("dense", "allgather_merge", _bytes_allgather_merge)
+def _dense_allgather_merge(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Faithful to [2]'s aggregate-then-scatter: every shard materializes
+    # the union of all buffers (as the master would), then keeps its own
+    # slice.  Received bytes per chip: (p-1) * n * S.
+    p = axis_size(axis)
+    shard = cand.shape[0] // p
+    allc = lax.all_gather(cand, axis)            # (p, n, S)
+    merged = allc.max(axis=0)
+    me = axis_index(axis)
+    return lax.dynamic_slice_in_dim(merged, me * shard, shard, axis=0)
+
+
+@register_exchange("dense", "alltoall_direct", _bytes_alltoall_direct)
+def _dense_alltoall_direct(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Paper §5.1-2: send each destination's slice straight to its owner.
+    # Received bytes per chip: (p-1)/p * n * S.
+    p = axis_size(axis)
+    shard = cand.shape[0] // p
+    recv = lax.all_to_all(cand, axis, split_axis=0, concat_axis=0,
+                          tiled=True)            # (n, S): p blocks of shard
+    return recv.reshape(p, shard, *cand.shape[1:]).max(axis=0)
+
+
+@register_exchange("dense", "reduce_scatter", _bytes_reduce_scatter)
+def _dense_reduce_scatter(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Beyond-paper alternative: let the network do the merge (sum == OR
+    # for 0/1 masks since contributions are non-negative).  Needs a
+    # summable dtype wide enough that nonzero cannot vanish; bf16 is
+    # safe for any p (sums of non-negative ints never round to zero).
+    x = cand.astype(jnp.bfloat16)
+    own = lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+    return (own > 0).astype(cand.dtype)
+
+
+@register_exchange("dense", "hierarchical", _bytes_hierarchical)
+def _dense_hierarchical(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Beyond-paper: two-phase exchange matched to the mesh topology
+    # (e.g. first across the fast intra-pod axis, then across pods).
+    # 2x bytes on the wire but Θ(p_a + p_b) messages instead of Θ(p).
+    axes = _axes_tuple(axis)
+    if len(axes) == 1:
+        return _dense_alltoall_direct(cand, axes[0])
+    # Process axes major-first (matches PartitionSpec((a, b)) owner
+    # linearization: owner = a * |b| + b).  After exchanging over an
+    # axis, all received blocks target this shard's coordinate on that
+    # axis, so they merge immediately and the working set shrinks.
+    out = cand
+    for ax in axes:
+        sz = lax.psum(1, ax)
+        recv = lax.all_to_all(out, ax, split_axis=0, concat_axis=0,
+                              tiled=True)
+        out = recv.reshape(sz, out.shape[0] // sz, *out.shape[1:]).max(axis=0)
+    return out
+
+
 def exchange_dense(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
     """Merge per-shard candidate masks; return this shard's owned slice.
 
@@ -68,58 +225,36 @@ def exchange_dense(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndar
     p = axis_size(axis)
     n = cand.shape[0]
     assert n % p == 0, f"dense exchange needs n ({n}) divisible by p ({p})"
-    shard = n // p
-
-    if strategy == "allgather_merge":
-        # Faithful to [2]'s aggregate-then-scatter: every shard materializes
-        # the union of all buffers (as the master would), then keeps its own
-        # slice.  Received bytes per chip: (p-1) * n * S.
-        allc = lax.all_gather(cand, axis)            # (p, n, S)
-        merged = allc.max(axis=0)
-        me = axis_index(axis)
-        return lax.dynamic_slice_in_dim(merged, me * shard, shard, axis=0)
-
-    if strategy == "alltoall_direct":
-        # Paper §5.1-2: send each destination's slice straight to its owner.
-        # Received bytes per chip: (p-1)/p * n * S.
-        recv = lax.all_to_all(cand, axis, split_axis=0, concat_axis=0,
-                              tiled=True)            # (n, S): p blocks of shard
-        return recv.reshape(p, shard, *cand.shape[1:]).max(axis=0)
-
-    if strategy == "reduce_scatter":
-        # Beyond-paper alternative: let the network do the merge (sum == OR
-        # for 0/1 masks since contributions are non-negative).  Needs a
-        # summable dtype wide enough that nonzero cannot vanish; bf16 is
-        # safe for any p (sums of non-negative ints never round to zero).
-        x = cand.astype(jnp.bfloat16)
-        own = lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
-        return (own > 0).astype(cand.dtype)
-
-    if strategy == "hierarchical":
-        # Beyond-paper: two-phase exchange matched to the mesh topology
-        # (e.g. first across the fast intra-pod axis, then across pods).
-        # 2x bytes on the wire but Θ(p_a + p_b) messages instead of Θ(p).
-        axes = _axes_tuple(axis)
-        if len(axes) == 1:
-            return exchange_dense(cand, axes[0], "alltoall_direct")
-        # Process axes major-first (matches PartitionSpec((a, b)) owner
-        # linearization: owner = a * |b| + b).  After exchanging over an
-        # axis, all received blocks target this shard's coordinate on that
-        # axis, so they merge immediately and the working set shrinks.
-        out = cand
-        for ax in axes:
-            sz = lax.psum(1, ax)
-            recv = lax.all_to_all(out, ax, split_axis=0, concat_axis=0,
-                                  tiled=True)
-            out = recv.reshape(sz, out.shape[0] // sz, *out.shape[1:]).max(axis=0)
-        return out
-
-    raise ValueError(f"unknown dense strategy {strategy!r}")
+    return get_exchange("dense", strategy).impl(cand, axis)
 
 
 # ---------------------------------------------------------------------------
 # Sparse queue exchange: (p, cap) per-destination vertex-id buffers
 # ---------------------------------------------------------------------------
+
+def _qbytes_alltoall_direct(p, cap, itemsize):
+    return (p - 1) * cap * itemsize
+
+
+def _qbytes_allgather_merge(p, cap, itemsize):
+    return (p - 1) * p * cap * itemsize
+
+
+@register_exchange("queue", "allgather_merge", _qbytes_allgather_merge)
+def _queue_allgather_merge(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # [2]-style aggregate-everywhere: every shard receives every buffer
+    # (p^2·cap ids on the wire) and picks out the rows addressed to it.
+    allb = lax.all_gather(buckets, axis)         # (p, p, cap)
+    me = axis_index(axis)
+    return lax.dynamic_slice_in_dim(allb, me, 1, axis=1)[:, 0]
+
+
+@register_exchange("queue", "alltoall_direct", _qbytes_alltoall_direct)
+def _queue_alltoall_direct(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Paper §5.1-2 applied to queues: MPI_Alltoallv equivalent.
+    return lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0,
+                          tiled=True)
+
 
 def exchange_queue(buckets: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
     """Route per-destination id buffers to their owners.
@@ -129,20 +264,7 @@ def exchange_queue(buckets: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.n
     """
     p = axis_size(axis)
     assert buckets.shape[0] == p
-
-    if strategy == "alltoall_direct":
-        # Paper §5.1-2 applied to queues: MPI_Alltoallv equivalent.
-        return lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0,
-                              tiled=True)
-
-    if strategy == "allgather_merge":
-        # [2]-style aggregate-everywhere: every shard receives every buffer
-        # (p^2·cap ids on the wire) and picks out the rows addressed to it.
-        allb = lax.all_gather(buckets, axis)         # (p, p, cap)
-        me = axis_index(axis)
-        return lax.dynamic_slice_in_dim(allb, me, 1, axis=1)[:, 0]
-
-    raise ValueError(f"unknown queue strategy {strategy!r}")
+    return get_exchange("queue", strategy).impl(buckets, axis)
 
 
 def allgather_frontier(frontier: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
@@ -162,24 +284,12 @@ def allgather_frontier(frontier: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
 def dense_level_bytes(strategy: str, n: int, p: int, s: int = 1,
                       itemsize: int = 1, axes_sizes: Sequence[int] = ()) -> float:
     """Bytes *received* per chip for one dense exchange."""
-    if strategy == "allgather_merge":
-        return (p - 1) * n * s * itemsize
-    if strategy == "alltoall_direct":
-        return (p - 1) / p * n * s * itemsize
-    if strategy == "reduce_scatter":
-        return (p - 1) / p * n * s * 2  # bf16 widening
-    if strategy == "hierarchical":
-        sizes = list(axes_sizes) or [p]
-        return sum((sz - 1) / sz * n * s * itemsize for sz in sizes)
-    raise ValueError(strategy)
+    return get_exchange("dense", strategy).bytes_model(
+        n, p, s, itemsize, axes_sizes)
 
 
 def queue_level_bytes(strategy: str, p: int, cap: int, itemsize: int = 4) -> float:
-    if strategy == "alltoall_direct":
-        return (p - 1) * cap * itemsize
-    if strategy == "allgather_merge":
-        return (p - 1) * p * cap * itemsize
-    raise ValueError(strategy)
+    return get_exchange("queue", strategy).bytes_model(p, cap, itemsize)
 
 
 def bottomup_level_bytes(n: int, p: int, s: int = 1, itemsize: int = 1) -> float:

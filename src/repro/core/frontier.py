@@ -25,6 +25,31 @@ import jax.numpy as jnp
 
 from repro.core.partition import Partition1D
 
+INF = jnp.int32(2 ** 30)  # unreached sentinel (shared with bfs/engine/ref)
+
+
+def init_dist_frontier(sources: jnp.ndarray, n: int, n_logical: int):
+    """Device-side source injection: scatter an ``(S,)`` int32 id vector
+    into fresh ``(n, S)`` distance / frontier-bitmap arrays.
+
+    Slots with ``sources[j] < 0`` (or >= n_logical) are *empty* — their
+    column stays all-INF / all-zero and terminates immediately.  Because
+    the scatter runs under jit from a traced operand, a compiled BFS
+    engine accepts arbitrary new source sets with zero retraces and no
+    host-side (n, S) materialization.
+    """
+    s = sources.shape[0]
+    cols = jnp.arange(s)
+    ok = (sources >= 0) & (sources < n_logical)
+    idx = jnp.clip(sources, 0, n - 1)
+    # min/max scatters are no-ops for masked-off slots even when their
+    # clipped indices collide with a live source's row.
+    dist0 = jnp.full((n, s), INF, jnp.int32).at[idx, cols].min(
+        jnp.where(ok, jnp.int32(0), INF))
+    frontier0 = jnp.zeros((n, s), jnp.uint8).at[idx, cols].max(
+        ok.astype(jnp.uint8))
+    return dist0, frontier0
+
 
 def expand_dense(frontier: jnp.ndarray, src_local: jnp.ndarray,
                  dst_global: jnp.ndarray, n: int) -> jnp.ndarray:

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 DEFAULT_BLOCK = 128
 
 
@@ -89,7 +91,7 @@ def bsr_spmm(blocks: jnp.ndarray, block_rows: jnp.ndarray,
         ),
         out_shape=jax.ShapeDtypeStruct((n_rows_pad, d_pad), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(block_rows, block_cols, blocks, x)
     return out[:, :d]

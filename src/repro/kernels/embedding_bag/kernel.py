@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _bag_kernel(idx_ref, table_ref, out_ref):
     b = pl.program_id(0)
@@ -56,7 +58,7 @@ def embedding_bag_sum(indices: jnp.ndarray, table: jnp.ndarray, *,
         ),
         out_shape=jax.ShapeDtypeStruct((bsz, d), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(indices, table.astype(jnp.float32))
     return out.astype(table.dtype)

@@ -1,0 +1,57 @@
+"""Launchers and host-topology helpers.
+
+This package ``__init__`` must stay import-light (stdlib only): the
+``host_devices`` helper has to run *before* JAX is first imported, and the
+launcher modules themselves import JAX at top level.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_DEV_FLAG = "--xla_force_host_platform_device_count"
+
+
+def host_devices(n) -> None:
+    """Force ``n`` host (CPU) devices for a local multi-shard run.
+
+    Rewrites ``XLA_FLAGS`` (replacing any previous device-count flag, and
+    preserving unrelated flags).  XLA reads the variable at backend
+    initialization, so this must be called before JAX is first imported —
+    launchers parse ``--devices`` from ``sys.argv`` ahead of their JAX
+    imports, and the 8-device test harnesses call it at the top of the
+    subprocess.  Raises if JAX is already loaded and the request differs
+    from the current environment (a silent no-op there would *look* like
+    a multi-shard run while executing on one device).
+    """
+    n = int(n)
+    if n <= 0:
+        return
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith(_DEV_FLAG)]
+    flags.append(f"{_DEV_FLAG}={n}")
+    new = " ".join(flags)
+    if new == os.environ.get("XLA_FLAGS", ""):
+        return
+    if "jax" in sys.modules:
+        raise RuntimeError(
+            f"host_devices({n}) called after jax was imported; XLA has "
+            "already fixed its device count. Call it before any jax "
+            "import (or set XLA_FLAGS in the environment).")
+    os.environ["XLA_FLAGS"] = new
+
+
+def host_devices_from_argv(argv=None) -> None:
+    """Apply ``--devices N`` (or ``--devices=N``) from a launcher command
+    line, pre-JAX-import."""
+    argv = sys.argv if argv is None else argv
+    for i, arg in enumerate(argv):
+        if arg == "--devices":
+            if i + 1 >= len(argv):
+                raise SystemExit("--devices requires a value")
+            host_devices(argv[i + 1])
+            return
+        if arg.startswith("--devices="):
+            host_devices(arg.split("=", 1)[1])
+            return

@@ -5,16 +5,19 @@
 
 Uses every visible device as one 1-D shard row (on a TPU pod slice this is
 the full production run; on CPU it is p=1).  ``--devices N`` forces N host
-devices for a local multi-shard run (set before jax init).
+devices for a local multi-shard run (applied before jax initializes via
+``repro.launch.host_devices``).
+
+The launcher drives the compile-once lifecycle: one ``plan().compile()``
+per (graph, options, mesh), then ``--repeats`` traversals from rotating
+source sets against the same engine — compile wall time and per-traversal
+wall time are reported separately, which is the paper's amortization story
+at the CLI.
 """
 
-import os
-import sys
+from repro.launch import host_devices_from_argv
 
-if "--devices" in sys.argv:
-    i = sys.argv.index("--devices")
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={sys.argv[i + 1]}")
+host_devices_from_argv()  # must precede the jax import below
 
 import argparse  # noqa: E402
 import time  # noqa: E402
@@ -24,7 +27,7 @@ import jax  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 from repro.configs.base import BFS_WORKLOADS  # noqa: E402
-from repro.core import BFSOptions, bfs  # noqa: E402
+from repro.core import BFSOptions, plan  # noqa: E402
 from repro.graphs import generate, shard_graph  # noqa: E402
 
 
@@ -38,6 +41,8 @@ def main():
                     choices=["dense", "queue", "auto"])
     ap.add_argument("--exchange", default="alltoall_direct")
     ap.add_argument("--sources", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="traversals to run against the compiled engine")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
     args = ap.parse_args()
 
@@ -57,12 +62,30 @@ def main():
     print(f"generated {src.shape[0]} edges in {time.time()-t0:.1f}s")
     opts = BFSOptions(mode=args.mode, dense_exchange=args.exchange,
                       queue_cap=1 << 15)
-    sources = list(range(args.sources))
+
     t0 = time.time()
-    dist, stats = bfs(g, sources, mesh=mesh, axis="p", opts=opts)
-    print(f"BFS: levels={stats.levels} visited={stats.visited} "
-          f"modes={stats.mode_counts} comm_bytes/chip={stats.comm_bytes:.2e} "
-          f"wall={time.time()-t0:.2f}s")
+    engine = plan(g, opts, mesh=mesh, axis="p",
+                  num_sources=args.sources).compile()
+    compile_s = time.time() - t0
+    print(f"plan+compile: {compile_s:.2f}s "
+          f"(S={args.sources}, {engine.plan.describe()['dense_exchange']})")
+
+    rng = np.random.default_rng(0)
+    for rep in range(max(1, args.repeats)):
+        sources = (list(range(args.sources)) if rep == 0 else
+                   sorted(rng.choice(n, size=args.sources, replace=False)
+                          .tolist()))
+        t0 = time.time()
+        res = engine.run(sources)
+        run_s = time.time() - t0
+        stats = res.stats()
+        print(f"run[{rep}] sources={sources[:4]}"
+              f"{'...' if len(sources) > 4 else ''}: "
+              f"levels={stats.levels} visited={stats.visited} "
+              f"modes={stats.mode_counts} "
+              f"comm_bytes/chip={stats.comm_bytes:.2e} wall={run_s:.3f}s")
+    assert engine.trace_count == engine.compile_traces, \
+        "engine retraced after compile — amortization broken"
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+"""BFS traversal-service launcher: batched source requests on one engine.
+
+    PYTHONPATH=src python -m repro.launch.bfs_serve --n 50000 --requests 32
+    PYTHONPATH=src python -m repro.launch.bfs_serve --workload erdos_renyi_100k \
+        --slots 8 --devices 4
+
+Compiles one multi-source ``BFSEngine`` sized to ``--slots`` and drains a
+queue of single-source traversal requests through it (serve/bfs_service.py)
+— the serving-path proof that per-request cost is one device dispatch per
+batch, not one compile per request.
+"""
+
+from repro.launch import host_devices_from_argv
+
+host_devices_from_argv()  # must precede the jax import below
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.configs.base import BFS_WORKLOADS  # noqa: E402
+from repro.core import BFSOptions  # noqa: E402
+from repro.graphs import generate, shard_graph  # noqa: E402
+from repro.serve.bfs_service import BFSService, TraversalRequest  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default=None,
+                    choices=[w.name for w in BFS_WORKLOADS])
+    ap.add_argument("--graph", default="erdos_renyi")
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--mode", default="dense", choices=["dense", "auto"])
+    ap.add_argument("--exchange", default="alltoall_direct")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--devices", type=int, default=0)  # parsed above
+    args = ap.parse_args()
+
+    if args.workload:
+        wl = next(w for w in BFS_WORKLOADS if w.name == args.workload)
+        kind, n, kw = wl.graph, wl.n_vertices, dict(wl.gen_kwargs)
+    else:
+        kind, n, kw = args.graph, args.n, {"avg_degree": 8.0} \
+            if args.graph == "erdos_renyi" else {}
+
+    devs = jax.devices()
+    p = len(devs)
+    mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
+    src, dst = generate(kind, n, seed=0, **kw)
+    g = shard_graph(src, dst, n, p)
+    print(f"graph={kind} n={n} edges={src.shape[0]} shards={p} "
+          f"slots={args.slots}")
+
+    t0 = time.time()
+    svc = BFSService(g, BFSOptions(mode=args.mode,
+                                   dense_exchange=args.exchange,
+                                   queue_cap=1 << 15),
+                     mesh=mesh, axis="p", batch_slots=args.slots)
+    print(f"service up (plan+compile) in {time.time()-t0:.2f}s")
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        svc.submit(TraversalRequest(rid=i, source=int(rng.integers(0, n))))
+    t0 = time.time()
+    done = svc.run_until_drained()
+    dt = time.time() - t0
+    print(f"{len(done)} traversals in {dt:.2f}s "
+          f"({len(done)/max(dt, 1e-9):.1f} req/s, "
+          f"{dt/max(len(done), 1)*1e3:.1f} ms/req)")
+    for r in done[:4]:
+        print(f"  rid={r.rid} source={r.source} levels={r.levels} "
+              f"visited={r.visited}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch import host_devices
+host_devices(512)
 
 """Multi-pod dry-run: lower + compile every (arch x shape) on the production
 meshes and extract roofline terms.  MUST be run as its own process (the two

@@ -14,7 +14,7 @@ Prefill here feeds prompt tokens through the decode step slot-locally
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,12 +32,52 @@ class Request:
     done: bool = False
 
 
+class SlotPool:
+    """Fixed-size slot scheduler: queued requests fill free slots, finished
+    slots are recycled without draining the batch.
+
+    The pool only requires items to expose a boolean ``done`` attribute.
+    Shared by the LM continuous-batching ``Server`` below and the BFS
+    traversal service (serve/bfs_service.py), which batches concurrent
+    source requests into one multi-source engine run.
+    """
+
+    def __init__(self, n_slots: int):
+        self.slots: List[Optional[Any]] = [None] * n_slots
+        self.queue: List[Any] = []
+
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    def submit(self, item) -> None:
+        self.queue.append(item)
+
+    def admit(self) -> List[tuple]:
+        """Fill free (empty or finished) slots from the queue in FIFO
+        order; returns the (slot_index, item) placements made."""
+        placed = []
+        for i, cur in enumerate(self.slots):
+            if (cur is None or cur.done) and self.queue:
+                item = self.queue.pop(0)
+                self.slots[i] = item
+                placed.append((i, item))
+        return placed
+
+    def live(self) -> np.ndarray:
+        """(n_slots,) bool — slots holding an unfinished item."""
+        return np.array([r is not None and not r.done for r in self.slots])
+
+    def drained(self) -> bool:
+        return not self.queue and all(
+            r is None or r.done for r in self.slots)
+
+
 class Server:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
                  max_len: int = 256):
         self.cfg = cfg
         self.params = params
-        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pool = SlotPool(batch_slots)
         self.n_slots = batch_slots
         self.max_len = max_len
         self.cache = tf.init_cache(cfg, batch_slots, max_len)
@@ -45,10 +85,13 @@ class Server:
         self._last_tok = np.zeros(batch_slots, dtype=np.int32)
         self._decode = jax.jit(
             lambda p, c, pos, tok: tf.decode_step(cfg, p, c, pos, tok))
-        self._queue: List[Request] = []
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return self.pool.slots
 
     def submit(self, req: Request):
-        self._queue.append(req)
+        self.pool.submit(req)
 
     # --------------------------------------------------------------- core
     def _advance(self, active_mask: np.ndarray):
@@ -63,25 +106,21 @@ class Server:
         return nxt
 
     def _admit(self):
-        for i in range(self.n_slots):
-            r = self.slots[i]
-            if (r is None or r.done) and self._queue:
-                req = self._queue.pop(0)
-                self.slots[i] = req
-                self.pos[i] = 0
-                # slot-local prefill: stream prompt tokens through decode,
-                # advancing only this slot
-                mask = np.zeros(self.n_slots, bool)
-                mask[i] = True
-                for tok in req.prompt:
-                    self._last_tok[i] = int(tok)
-                    self._advance(mask)
-                self._last_tok[i] = int(req.prompt[-1])
+        for i, req in self.pool.admit():
+            self.pos[i] = 0
+            # slot-local prefill: stream prompt tokens through decode,
+            # advancing only this slot
+            mask = np.zeros(self.n_slots, bool)
+            mask[i] = True
+            for tok in req.prompt:
+                self._last_tok[i] = int(tok)
+                self._advance(mask)
+            self._last_tok[i] = int(req.prompt[-1])
 
     def step(self):
         """Admit + one decode step for every live slot; returns finished."""
         self._admit()
-        live = np.array([r is not None and not r.done for r in self.slots])
+        live = self.pool.live()
         if not live.any():
             return []
         nxt = self._advance(live)
@@ -100,7 +139,6 @@ class Server:
         done = []
         for _ in range(max_steps):
             done += self.step()
-            if not self._queue and all(
-                    s is None or s.done for s in self.slots):
+            if self.pool.drained():
                 break
         return done

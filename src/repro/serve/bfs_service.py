@@ -1,0 +1,96 @@
+"""Traversal-as-a-service: batched multi-source BFS over a compiled engine.
+
+The serving counterpart of the compile-once lifecycle (core/engine.py):
+one ``BFSEngine`` is compiled per (graph, opts, mesh) with a source-batch
+capacity equal to the slot count, then concurrent single-source requests
+are packed into the engine's source columns — one device dispatch serves
+up to ``batch_slots`` requests (Graph500-style batched traversal as the
+serving batch dimension).  Slot recycling reuses the LM server's
+``SlotPool`` (serve/batcher.py): requests queue up, finished slots are
+refilled without draining the batch.
+
+Unlike token decoding, a traversal completes in a single engine run, so
+every ``step()`` finishes all admitted requests; the pool earns its keep
+under sustained load, where each step drains up to a full batch from the
+queue.  Duplicate sources across concurrent requests share one engine
+column (the engine itself rejects duplicate source *columns*).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.bfs import BFSOptions, INF, validate_sources
+from repro.core.engine import plan
+from repro.serve.batcher import SlotPool
+
+
+@dataclasses.dataclass
+class TraversalRequest:
+    rid: int
+    source: int
+    dist: Optional[np.ndarray] = None    # (n_logical,) int32 when done
+    levels: int = 0                      # eccentricity of this source's tree
+    visited: int = 0
+    done: bool = False
+
+
+class BFSService:
+    def __init__(self, graph, opts: BFSOptions = BFSOptions(), *,
+                 mesh=None, axis=None, batch_slots: int = 4):
+        if opts.mode == "queue":
+            raise ValueError("BFSService batches sources; queue mode is "
+                             "single-source — use dense or auto")
+        self.graph = graph
+        self.engine = plan(graph, opts, mesh=mesh, axis=axis,
+                           num_sources=batch_slots).compile()
+        self.pool = SlotPool(batch_slots)
+        self._n_logical = graph.part.n_logical
+
+    def submit(self, req: TraversalRequest) -> None:
+        # Fail fast at the door instead of poisoning a whole batch.
+        validate_sources([req.source], self._n_logical)
+        self.pool.submit(req)
+
+    def step(self) -> List[TraversalRequest]:
+        """Admit queued requests and serve every live slot in one engine
+        run; returns the finished requests (all live ones)."""
+        self.pool.admit()
+        live = self.pool.live()
+        if not live.any():
+            return []
+        # Requests for the same vertex share a source column.
+        col_of = {}
+        for i in np.where(live)[0]:
+            src = self.pool.slots[i].source
+            if src not in col_of:
+                col_of[src] = len(col_of)
+        uniq = sorted(col_of, key=col_of.get)
+
+        res = self.engine.run(uniq)
+        dist = res.dist_host                       # (n_logical, len(uniq))
+
+        finished = []
+        for i in np.where(live)[0]:
+            r = self.pool.slots[i]
+            # copy: columns are views into one shared result buffer, and
+            # requests for the same source share a column
+            col = dist[:, col_of[r.source]].copy()
+            reached = col < int(INF)
+            r.dist = col
+            r.levels = int(col[reached].max()) if reached.any() else 0
+            r.visited = int(reached.sum())
+            r.done = True
+            finished.append(r)
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if self.pool.drained():
+                break
+        return done

@@ -10,7 +10,11 @@ truth.  Exits nonzero on mismatch.
 import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.launch import host_devices  # noqa: E402
+
+host_devices(8)  # must precede the jax import below
 
 import functools  # noqa: E402
 
@@ -19,15 +23,14 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
-
 from repro.core import exchange as ex  # noqa: E402
+from repro.core.compat import shard_map  # noqa: E402
 from repro.launch.hlo_stats import collective_bytes  # noqa: E402
 
 
 def compile_and_parse(fn, in_specs, out_specs, arg_shapes, mesh):
-    mapped = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+    mapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
     lowered = jax.jit(mapped).lower(*arg_shapes)
     return collective_bytes(lowered.compile().as_text())
 

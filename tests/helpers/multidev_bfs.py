@@ -7,18 +7,23 @@ rest of the suite sees a single device (per the dry-run isolation rule).
 
 import os
 import sys
+import warnings
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.launch import host_devices  # noqa: E402
+
+host_devices(8)  # must precede the jax import below
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
-
-from repro.core import BFSOptions, bfs  # noqa: E402
+from repro.core import BFSOptions, bfs, plan  # noqa: E402
 from repro.core.ref import bfs_reference  # noqa: E402
 from repro.graphs import generate, shard_graph  # noqa: E402
+
+warnings.simplefilter("ignore", DeprecationWarning)  # bfs() legacy matrix
 
 
 def check(name, graph_kind, n, opts, sources, mesh, axis, seed=0, **gkw):
@@ -88,6 +93,20 @@ def main():
     got, _ = bfs(g, [0], mesh=mesh1d, axis="p", opts=BFSOptions(mode="dense"))
     ok &= np.array_equal(got, want)
     print(f"{'dense/disconnected-INF':55s} -> {'OK' if np.array_equal(got, want) else 'MISMATCH'}")
+
+    # compile-once engine on 8 shards: two source batches, zero retraces
+    src, dst = generate("erdos_renyi", n, seed=1, avg_degree=8)
+    g = shard_graph(src, dst, n, 8)
+    eng = plan(g, BFSOptions(mode="dense"), mesh=mesh1d, axis="p",
+               num_sources=3).compile()
+    e_ok = True
+    for batch in ([0, 7, 123], [999, 2500, 5]):
+        got = eng.run(batch).dist_host
+        e_ok &= np.array_equal(got, bfs_reference(src, dst, n, batch))
+    e_ok &= eng.trace_count == eng.compile_traces
+    ok &= e_ok
+    print(f"{'engine/8shard-reuse-no-retrace':55s} -> "
+          f"{'OK' if e_ok else 'MISMATCH'}")
 
     sys.exit(0 if ok else 1)
 

@@ -9,14 +9,16 @@ routing tables cover every edge exactly once.
 import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.launch import host_devices  # noqa: E402
+
+host_devices(8)  # must precede the jax import below
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 from repro.configs.base import GNNConfig  # noqa: E402
 from repro.graphs.generators import erdos_renyi  # noqa: E402

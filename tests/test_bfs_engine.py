@@ -1,0 +1,196 @@
+"""Compile-once BFSEngine lifecycle: reuse without retraces, donation
+safety, source validation, exchange registry, traversal service."""
+
+import numpy as np
+import pytest
+
+from repro.core import (BFSOptions, INF, bfs, plan, register_exchange,
+                        unregister_exchange, validate_sources,
+                        DENSE_STRATEGIES)
+from repro.core import exchange as ex
+from repro.core.ref import bfs_reference
+from repro.graphs import generate, shard_graph
+
+
+def _graph(n=600, seed=3, deg=6):
+    src, dst = generate("erdos_renyi", n, seed=seed, avg_degree=deg)
+    return src, dst, shard_graph(src, dst, n, p=1)
+
+
+# ---------------------------------------------------------------------------
+# engine reuse
+# ---------------------------------------------------------------------------
+
+def test_engine_reuse_zero_retraces():
+    """A second run with fresh sources must not retrace the kernel, and
+    donated init buffers must not alias earlier results."""
+    n = 600
+    src, dst, g = _graph(n)
+    eng = plan(g, BFSOptions(mode="dense"), num_sources=2).compile()
+    traces_after_compile = eng.trace_count
+    assert traces_after_compile == eng.compile_traces
+
+    r1 = eng.run([0, 5])
+    d1_before = r1.dist_host.copy()
+    np.testing.assert_array_equal(d1_before, bfs_reference(src, dst, n, [0, 5]))
+
+    r2 = eng.run([7, 123])          # fresh sources: device-only work
+    assert eng.trace_count == traces_after_compile
+    np.testing.assert_array_equal(r2.dist_host,
+                                  bfs_reference(src, dst, n, [7, 123]))
+    # r1's buffers were not clobbered by r2's donated init state
+    np.testing.assert_array_equal(r1.dist_host, d1_before)
+
+
+def test_engine_partial_source_batch():
+    """An engine compiled for S sources accepts 1..S without retracing;
+    empty columns are sliced off the host view."""
+    n = 500
+    src, dst, g = _graph(n, seed=2, deg=5)
+    eng = plan(g, BFSOptions(mode="dense"), num_sources=4).compile()
+    traces = eng.trace_count
+    got = eng.run([13, 250]).dist_host
+    assert got.shape == (n, 2)
+    np.testing.assert_array_equal(got, bfs_reference(src, dst, n, [13, 250]))
+    assert eng.trace_count == traces
+
+
+def test_engine_run_async_blocks_lazily():
+    n = 400
+    src, dst, g = _graph(n, seed=7, deg=5)
+    eng = plan(g, BFSOptions(mode="auto", queue_cap=4096)).compile()
+    res = eng.run_async([42])
+    stats = res.block().stats()      # sync point
+    np.testing.assert_array_equal(res.dist_host,
+                                  bfs_reference(src, dst, n, [42]))
+    assert stats.levels >= 1
+    assert stats.visited == int((res.dist_host < int(INF)).sum())
+
+
+def test_plan_describe_is_static_metadata():
+    _, _, g = _graph()
+    p = plan(g, BFSOptions(mode="auto"), num_sources=3)
+    meta = p.describe()
+    assert meta["num_sources"] == 3 and meta["p"] == 1
+    assert meta["dense_exchange"] == "alltoall_direct"
+    assert meta["n_logical"] == 600
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_source_validation_rejects_bad_ids():
+    n = 500
+    _, _, g = _graph(n, seed=2, deg=5)
+    eng = plan(g, BFSOptions(mode="dense"), num_sources=2).compile()
+    with pytest.raises(ValueError, match="outside"):
+        eng.run([n])                  # one past the last logical vertex
+    with pytest.raises(ValueError, match="outside"):
+        eng.run([-3])                 # silently wrapped pre-redesign
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.run([4, 4])
+    with pytest.raises(ValueError, match="capacity"):
+        eng.run([1, 2, 3])            # exceeds compiled S=2
+    with pytest.raises(ValueError, match="integer"):
+        validate_sources([0.5], n)
+    # the deprecated wrapper validates before planning
+    with pytest.raises(ValueError, match="outside"):
+        bfs(g, [n + 7])
+    with pytest.raises(ValueError, match="duplicate"):
+        bfs(g, [3, 3])
+
+
+def test_options_validation_raises_value_error():
+    with pytest.raises(ValueError, match="mode"):
+        BFSOptions(mode="bogus").validate()
+    with pytest.raises(ValueError, match="registered"):
+        BFSOptions(dense_exchange="nope").validate()
+    _, _, g = _graph()
+    with pytest.raises(ValueError, match="single source"):
+        plan(g, BFSOptions(mode="queue"), num_sources=2)
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrapper
+# ---------------------------------------------------------------------------
+
+def test_bfs_wrapper_deprecated_but_equivalent_and_cached():
+    n = 600
+    src, dst, g = _graph(n)
+    want = bfs_reference(src, dst, n, [0])
+    with pytest.deprecated_call():
+        got, stats = bfs(g, [0], opts=BFSOptions(mode="dense"))
+    np.testing.assert_array_equal(got, want)
+    assert stats.visited == int((want < int(INF)).sum())
+    # second call reuses the cached engine (no second compile)
+    cache = g.__dict__["_bfs_engines"]
+    assert len(cache) == 1
+    eng = next(iter(cache.values()))
+    traces = eng.trace_count
+    with pytest.deprecated_call():
+        got2, _ = bfs(g, [77], opts=BFSOptions(mode="dense"))
+    assert len(cache) == 1 and eng.trace_count == traces
+    np.testing.assert_array_equal(got2, bfs_reference(src, dst, n, [77]))
+
+
+# ---------------------------------------------------------------------------
+# exchange registry
+# ---------------------------------------------------------------------------
+
+def test_exchange_registry_views_and_errors():
+    assert "alltoall_direct" in DENSE_STRATEGIES
+    assert set(ex.QUEUE_STRATEGIES) == {"allgather_merge", "alltoall_direct"}
+    with pytest.raises(ValueError, match="registered"):
+        ex.get_exchange("dense", "missing_strategy")
+    with pytest.raises(ValueError, match="kind"):
+        register_exchange("neither", "x", lambda *a: 0)
+
+
+def test_register_exchange_pluggable_strategy():
+    """A strategy registered from outside the module is planable and
+    correct without touching bfs.py's dispatch."""
+    name = "test_alltoall_alias"
+
+    @register_exchange("dense", name,
+                       lambda n, p, s, itemsize, axes_sizes: 0.0)
+    def _alias(cand, axis):
+        return ex.exchange_dense(cand, axis, "alltoall_direct")
+
+    try:
+        assert name in DENSE_STRATEGIES
+        n = 400
+        src, dst, g = _graph(n, seed=7, deg=5)
+        eng = plan(g, BFSOptions(mode="dense", dense_exchange=name)).compile()
+        np.testing.assert_array_equal(eng.run([0]).dist_host,
+                                      bfs_reference(src, dst, n, [0]))
+    finally:
+        unregister_exchange("dense", name)
+    assert name not in DENSE_STRATEGIES
+
+
+# ---------------------------------------------------------------------------
+# traversal service (slot-batched serving over one engine)
+# ---------------------------------------------------------------------------
+
+def test_bfs_service_batches_concurrent_requests():
+    from repro.serve.bfs_service import BFSService, TraversalRequest
+
+    n = 400
+    src, dst, g = _graph(n, seed=5, deg=6)
+    svc = BFSService(g, BFSOptions(mode="dense"), batch_slots=3)
+    sources = [0, 17, 17, 250, 399]   # more requests than slots + a dupe
+    reqs = [TraversalRequest(rid=i, source=s) for i, s in enumerate(sources)]
+    for r in reqs:
+        svc.submit(r)
+    done = svc.run_until_drained()
+    assert len(done) == len(reqs) and svc.pool.drained()
+    for r in reqs:
+        assert r.done
+        want = bfs_reference(src, dst, n, [r.source])[:, 0]
+        np.testing.assert_array_equal(r.dist, want)
+        assert r.visited == int((want < int(INF)).sum())
+    # one engine compile serves everything; no retraces while draining
+    assert svc.engine.trace_count == svc.engine.compile_traces
+    with pytest.raises(ValueError, match="outside"):
+        svc.submit(TraversalRequest(rid=9, source=n + 1))
