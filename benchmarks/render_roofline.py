@@ -1,4 +1,11 @@
-"""Render the §Roofline markdown table from dryrun_results.json."""
+"""Render benchmark JSON ledgers as markdown tables.
+
+Two inputs render here: the §Roofline table from ``dryrun_results.json``,
+and the 1-D vs 2-D partition sweep from a ``BENCH_*.json`` (detected by
+its ``partition_sweep`` key).  Every series label carries the partition
+kind (``erdos_renyi_100k[1d]`` vs ``erdos_renyi_100k[2d]``) so the two
+schemes plot as distinct curves instead of collapsing into one.
+"""
 
 import json
 import os
@@ -13,21 +20,64 @@ def fmt_s(x):
     return f"{x:.4f}" if x < 1 else f"{x:.2f}"
 
 
-def main(path):
-    with open(path) as f:
-        data = json.load(f)
+def series_label(r: dict) -> str:
+    """Label a sweep row by graph AND partition kind — the partition is
+    part of the series identity, never an aggregated-away attribute."""
+    return f"{r.get('graph', r.get('arch', '?'))}[{r.get('partition', '1d')}]"
+
+
+def render_partition_sweep(data):
+    series = {}
+    for r in data["partition_sweep"]:
+        series.setdefault(series_label(r), []).append(r)
+    print("| series | p | grid | modeled bytes/level | measured | "
+          "per-run (s) | levels |")
+    print("|---|---|---|---|---|---|---|")
+    for label in sorted(series):
+        for r in sorted(series[label], key=lambda x: (x["p"],
+                                                      bool(x.get("measured")))):
+            meas = "yes" if r.get("measured") else "modeled"
+            per_run = fmt_s(r["per_run_s"]) if "per_run_s" in r else "-"
+            levels = r.get("levels", "-")
+            print(f"| {label} | {r['p']} | {r['r']}x{r['c']} "
+                  f"| {r['modeled_level_bytes']:.0f} | {meas} "
+                  f"| {per_run} | {levels} |")
+
+
+def render_dryrun(data):
     print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
           "t_collective (s) | bottleneck | GiB/dev | useful-flops ratio |")
     print("|---|---|---|---|---|---|---|---|---|")
     for r in data["rows"]:
         ur = r.get("useful_flops_ratio")
         ur = "-" if ur is None or ur != ur else f"{1/ur:.2f}x" if ur else "-"
-        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        # series label keeps the partition kind when the dry-run sweep
+        # carries one (1-D rows and 2-D rows must stay separate curves)
+        arch = (f"{r['arch']}[{r['partition']}]" if "partition" in r
+                else r["arch"])
+        print(f"| {arch} | {r['shape']} | {r['mesh']} "
               f"| {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} "
               f"| {fmt_s(r['t_collective_s'])} | {r['bottleneck']} "
               f"| {r['bytes_per_device']/2**30:.2f} | {ur} |")
     if data.get("failures"):
         print("\nFAILURES:", data["failures"])
+
+
+def main(path):
+    with open(path) as f:
+        data = json.load(f)
+    # BENCH ledgers always carry the partition_sweep key (possibly empty
+    # under --only filters); dispatch on presence, not truthiness, so a
+    # filtered BENCH json never falls through to the dryrun schema.
+    if "partition_sweep" in data:
+        if data["partition_sweep"]:
+            render_partition_sweep(data)
+        else:
+            print("(no partition_sweep rows in this ledger — run "
+                  "benchmarks/run.py without --only, or with "
+                  "--only partition)")
+        return
+    render_dryrun(data)
 
 
 if __name__ == "__main__":

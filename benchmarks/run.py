@@ -32,13 +32,15 @@ import time
 
 import jax
 
-from repro.core import BFSOptions, plan
+from repro.core import BFSOptions, Partition1D, plan
 from repro.core import exchange as ex
 from repro.graphs import generate, shard_graph
 from repro.launch.hlo_stats import ICI_BW
+from repro.launch.mesh import default_grid
 
 _ROWS = []
 _ENGINE_TIMINGS = {}   # bench key -> {compile_s, per_run_s, ...}
+_PARTITION_SWEEP = []  # 1-D vs 2-D scheme rows (modeled + measured bytes)
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -199,6 +201,86 @@ def bench_engine_amortization():
     }
 
 
+def bench_partition_1d_vs_2d():
+    """1-D vertex blocks vs 2-D edge blocks on erdos_renyi_100k.
+
+    For each shard count: per-level *modeled* exchange bytes of both
+    schemes (1-D dense alltoall over p shards vs 2-D row-allgather +
+    column-fold over an r x c grid — the r+c vs p communication argument),
+    plus *measured* engine traversals for every grid the local device set
+    can host (per-run wall time and the run's accumulated comm bytes).
+    Everything lands in the BENCH_*.json ``partition_sweep`` ledger keyed
+    by partition kind so 1-D and 2-D trajectories never collapse.
+    """
+    n, s = 100_000, 1
+    graph_name = "erdos_renyi_100k"
+
+    for p in (1, 4, 16, 64):
+        r, c = default_grid(p)
+        n_pad = Partition1D(n, p).n
+        one_d = ex.dense_level_bytes("alltoall_direct", n_pad, p, s, 1)
+        two_d = ex.grid_level_bytes("allgather", "alltoall_reduce",
+                                    n_pad, r, c, s, 1)
+        _PARTITION_SWEEP.append({
+            "graph": graph_name, "partition": "1d", "p": p, "r": 1, "c": p,
+            "modeled_level_bytes": one_d,
+            "phase_bytes": {"alltoall": one_d},
+        })
+        _PARTITION_SWEEP.append({
+            "graph": graph_name, "partition": "2d", "p": p, "r": r, "c": c,
+            "modeled_level_bytes": two_d,
+            "phase_bytes": {
+                "expand": ex.get_exchange(
+                    "expand_row", "allgather").bytes_model(n_pad, r, c, s, 1),
+                "fold": ex.get_exchange(
+                    "fold_col", "alltoall_reduce").bytes_model(
+                        n_pad, r, c, s, 1)},
+        })
+        ratio = one_d / two_d if two_d else float("inf")
+        row(f"partition_bytes/p={p}", 0.0,
+            f"1d={one_d:.0f};2d={two_d:.0f};grid={r}x{c};"
+            f"ratio={ratio:.2f}")
+
+    # measured: every grid the local device set can host (p=1 always; the
+    # CI 4-device runners also measure the real 2x2 collectives)
+    src, dst = generate("erdos_renyi", n, seed=0, avg_degree=16.0)
+    p_avail = jax.device_count()
+    for p in {1, 4} & set(range(1, p_avail + 1)):
+        import numpy as _np
+        from jax.sharding import Mesh
+        g = shard_graph(src, dst, n, p)
+        r, c = default_grid(p)
+        meshes = {
+            "1d": (Mesh(_np.asarray(jax.devices()[:p]).reshape(p), ("p",)),
+                   "p"),
+            "2d": (Mesh(_np.asarray(jax.devices()[:p]).reshape(r, c),
+                        ("rows", "cols")), None),
+        }
+        for kind, (mesh, axis) in meshes.items():
+            t0 = time.time()
+            eng = plan(g, BFSOptions(mode="dense"), mesh=mesh, axis=axis,
+                       num_sources=s, partition=kind).compile()
+            compile_s = time.time() - t0
+            res = eng.run([0])             # warmup
+            t0 = time.time()
+            for i in range(3):
+                res = eng.run([7 * i + 1])
+            per_run = (time.time() - t0) / 3
+            stats = res.stats()
+            kr, kc = (r, c) if kind == "2d" else (1, p)
+            _PARTITION_SWEEP.append({
+                "graph": graph_name, "partition": kind, "p": p, "r": kr,
+                "c": kc, "measured": True, "compile_s": compile_s,
+                "per_run_s": per_run, "levels": stats.levels,
+                "run_comm_bytes": stats.comm_bytes,
+                "modeled_level_bytes": (stats.comm_bytes / stats.levels
+                                        if stats.levels else 0.0),
+            })
+            row(f"partition_measured/{kind}/p={p}", per_run * 1e6,
+                f"levels={stats.levels};comm_bytes={stats.comm_bytes:.0f};"
+                f"compile_us={compile_s*1e6:.0f}")
+
+
 def bench_multi_source_throughput():
     """Batched multi-source BFS (the MXU formulation): us per source."""
     n = 30_000
@@ -267,6 +349,7 @@ BENCHES = [
     bench_sec52_local_update,
     bench_direction_optimizing,
     bench_engine_amortization,
+    bench_partition_1d_vs_2d,
     bench_multi_source_throughput,
     bench_kernels,
     bench_roofline_table,
@@ -295,6 +378,7 @@ def main(argv=None) -> None:
         "rows": [{"name": n, "us_per_call": us, "derived": d}
                  for n, us, d in _ROWS],
         "engine_timings": _ENGINE_TIMINGS,
+        "partition_sweep": _PARTITION_SWEEP,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),

@@ -4,23 +4,30 @@ optimized owner-exchange communication (Sharma & Zaidi, CS.DC 2020).
 Public lifecycle: ``plan(graph, opts, mesh) -> BFSPlan -> .compile() ->
 BFSEngine -> .run(sources) / .run_async(sources) -> BFSResult``.  The
 one-shot ``bfs()`` remains as a deprecated wrapper over that lifecycle.
+``plan(..., partition="2d")`` selects the 2-D edge-partitioned backend
+(row-expand + column-fold over an r x c grid) behind the same API.
 """
 
 from repro.core.bfs import (BFSOptions, BFSStats, INF, bfs,
                             validate_sources)
 from repro.core.engine import (BFSEngine, BFSPlan, BFSResult, BFSRunStats,
                                plan)
-from repro.core.exchange import (DENSE_STRATEGIES, QUEUE_STRATEGIES,
+from repro.core.exchange import (DENSE_STRATEGIES, EXPAND_ROW_STRATEGIES,
+                                 FOLD_COL_STRATEGIES, QUEUE_STRATEGIES,
                                  ExchangeStrategy, exchange_dense,
-                                 exchange_queue, get_exchange,
-                                 register_exchange, unregister_exchange)
-from repro.core.partition import Partition1D, repartition
+                                 exchange_queue, expand_row, fold_col,
+                                 get_exchange, register_exchange,
+                                 select_exchange, unregister_exchange)
+from repro.core.partition import (Partition, Partition1D, Partition2D,
+                                  repartition)
 
 __all__ = [
     "BFSOptions", "BFSStats", "INF", "bfs", "validate_sources",
     "BFSEngine", "BFSPlan", "BFSResult", "BFSRunStats", "plan",
-    "Partition1D", "repartition",
-    "exchange_dense", "exchange_queue", "ExchangeStrategy",
-    "register_exchange", "unregister_exchange", "get_exchange",
-    "DENSE_STRATEGIES", "QUEUE_STRATEGIES",
+    "Partition", "Partition1D", "Partition2D", "repartition",
+    "exchange_dense", "exchange_queue", "expand_row", "fold_col",
+    "ExchangeStrategy", "register_exchange", "unregister_exchange",
+    "get_exchange", "select_exchange",
+    "DENSE_STRATEGIES", "QUEUE_STRATEGIES", "EXPAND_ROW_STRATEGIES",
+    "FOLD_COL_STRATEGIES",
 ]

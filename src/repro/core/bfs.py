@@ -46,7 +46,7 @@ from jax.sharding import Mesh
 
 from repro.core import exchange as ex
 from repro.core import frontier as fr
-from repro.core.partition import Partition1D
+from repro.core.partition import Partition1D, Partition2D
 
 if TYPE_CHECKING:  # graphs.formats imports core.partition; avoid the cycle
     from repro.graphs.formats import ShardedGraph
@@ -59,6 +59,10 @@ class BFSOptions:
     mode: str = "dense"                       # dense | queue | auto
     dense_exchange: str = "alltoall_direct"   # see exchange.DENSE_STRATEGIES
     queue_exchange: str = "alltoall_direct"   # see exchange.QUEUE_STRATEGIES
+    # 2-D (partition="2d") phase strategies; "auto" picks the registered
+    # strategy with the smallest modeled bytes (exchange.select_exchange).
+    expand_exchange: str = "allgather"        # see exchange.EXPAND_ROW_STRATEGIES
+    fold_exchange: str = "alltoall_reduce"    # see exchange.FOLD_COL_STRATEGIES
     local_update: bool = True                 # paper §5.1 opt (1)
     dedupe: bool = True                       # drop dup targets pre-wire
     queue_cap: int = 1024                     # ids per destination bucket
@@ -73,9 +77,14 @@ class BFSOptions:
         if self.mode not in ("dense", "queue", "auto"):
             raise ValueError(f"unknown BFS mode {self.mode!r}; "
                              "expected dense | queue | auto")
-        # get_exchange raises a ValueError naming the registered strategies
-        ex.get_exchange("dense", self.dense_exchange)
-        ex.get_exchange("queue", self.queue_exchange)
+        # get_exchange raises a ValueError naming the registered strategies;
+        # "auto" defers to the byte-model selection at plan time.
+        for kind, name in (("dense", self.dense_exchange),
+                           ("queue", self.queue_exchange),
+                           ("expand_row", self.expand_exchange),
+                           ("fold_col", self.fold_exchange)):
+            if name != "auto":
+                ex.get_exchange(kind, name)
         if self.queue_cap <= 0:
             raise ValueError(f"queue_cap must be positive ({self.queue_cap})")
         if self.max_levels < 0:
@@ -265,6 +274,70 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         def body_fn(st):
             return body(st, src_local, dst_global, in_src_global,
                         in_dst_local, valid_local)
+
+        dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
+            cond, body_fn, state0)
+        return dist, level - 1, bytes_acc, overflowed, modes
+
+    return shard_fn
+
+
+def _make_shard_fn_2d(part2: Partition2D, s: int, row_axis, col_axis,
+                      opts: BFSOptions, max_levels: int,
+                      expand_strategy: ex.ExchangeStrategy,
+                      fold_strategy: ex.ExchangeStrategy, on_trace=None):
+    """Per-device body of the 2-D two-phase BFS level loop (shard_map).
+
+    Each level is expand -> local edge scatter -> fold -> owner update:
+
+      1. expand (row phase): allgather this device's (b, S) frontier chunk
+         across its grid row (the ``col_axis``, c participants) into the
+         contiguous (c*b, S) row-block frontier.
+      2. local expansion: scatter the device's edge block through the
+         gathered frontier into the *transposed* (r*b, S) fold layout.
+      3. fold (column phase): all-to-all+reduce the fold blocks across the
+         grid column (the ``row_axis``, r participants); each device
+         receives exactly its owned (b, S) candidate merge.
+      4. owner-computes update + replicated termination psum over both
+         grid axes — identical semantics to the 1-D loop, so BFSRunStats
+         and the donated dist buffer behave the same.
+
+    Only dense mode exists in 2-D: the fold phase already merges candidate
+    masks network-side, which is what queue/bottom-up variants buy in 1-D.
+    """
+    r, c, b = part2.r, part2.c, part2.shard_size
+    fold_len = part2.fold_size
+    level_bytes = jnp.float32(
+        expand_strategy.bytes_model(part2.n, r, c, s, 1) +
+        fold_strategy.bytes_model(part2.n, r, c, s, 1))
+    grid_axes = (row_axis, col_axis)
+
+    def body(state, src_rowlocal, dst_fold, valid_local):
+        dist, frontier, level, _, bytes_acc, overflowed, modes = state
+        frow = expand_strategy.impl(frontier, col_axis)          # (c*b, S)
+        cand = fr.expand_dense_2d(frow, src_rowlocal, dst_fold, fold_len)
+        own = fold_strategy.impl(cand, row_axis)                 # (b, S)
+        dist, new = _owned_update(dist, own, level)
+        modes = modes.at[0].add(1)                               # dense level
+
+        # Mask padding vertices (ids >= n_logical can never be visited).
+        new = new * valid_local[:, None].astype(new.dtype)
+        dist = jnp.where(valid_local[:, None], dist, INF)
+        active = lax.psum(new.sum(dtype=jnp.int32), grid_axes) > 0
+        return (dist, new, level + 1, active, bytes_acc + level_bytes,
+                overflowed, modes)
+
+    def shard_fn(src_rowlocal, dst_fold, dist0, frontier0, valid_local):
+        if on_trace is not None:
+            on_trace()
+        state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
+                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32))
+
+        def cond(st):
+            return st[3] & (st[2] <= max_levels)
+
+        def body_fn(st):
+            return body(st, src_rowlocal, dst_fold, valid_local)
 
         dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
             cond, body_fn, state0)

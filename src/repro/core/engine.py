@@ -19,8 +19,11 @@ separates the three cost tiers explicitly:
     un-blocked device arrays for pipelined dispatch; stats stay on device
     (``BFSRunStats`` pytree) until ``.block()``/``.stats()``.
 
-Every later scaling feature (2-D partitioning, multi-graph caching, the
-serve-layer traversal endpoint) plugs into this seam.
+Every later scaling feature plugs into this seam; the first alternative
+backend is already here: ``plan(graph, opts, mesh, partition="2d")``
+compiles the 2-D edge-partitioned two-phase traversal (row-allgather
+expand + column fold, r + c collective participants instead of p) behind
+the exact same lifecycle — callers change nothing but the flag.
 """
 
 from __future__ import annotations
@@ -36,11 +39,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import exchange as ex
 from repro.core import frontier as fr
 from repro.core.bfs import (BFSOptions, BFSStats, INF, _make_shard_fn,
-                            validate_sources)
+                            _make_shard_fn_2d, validate_sources)
 from repro.core.compat import shard_map
 
 if TYPE_CHECKING:
-    from repro.graphs.formats import ShardedGraph
+    from repro.graphs.formats import ShardedGraph, ShardedGraph2D
 
 
 # ---------------------------------------------------------------------------
@@ -134,46 +137,145 @@ class BFSPlan:
     axes_sizes: tuple
     num_sources: int           # compiled source-batch capacity S
     max_levels: int
-    dense_strategy: ex.ExchangeStrategy
-    queue_strategy: ex.ExchangeStrategy
+    dense_strategy: Optional[ex.ExchangeStrategy] = None
+    queue_strategy: Optional[ex.ExchangeStrategy] = None
+    # 2-D (partition="2d") plans: the r x c edge blocks plus the two phase
+    # strategies that replace the single dense exchange.
+    partition: str = "1d"
+    graph2d: Optional["ShardedGraph2D"] = None
+    expand_strategy: Optional[ex.ExchangeStrategy] = None
+    fold_strategy: Optional[ex.ExchangeStrategy] = None
 
     def describe(self) -> dict:
         """Static plan metadata (the non-per-run half of the old BFSStats)."""
         part = self.graph.part
-        return {
+        meta = {
             "mode": self.opts.mode,
-            "dense_exchange": self.dense_strategy.name,
-            "queue_exchange": self.queue_strategy.name,
+            "partition": self.partition,
             "p": part.p,
             "n": part.n,
             "n_logical": part.n_logical,
             "shard_size": part.shard_size,
-            "e_cap": self.graph.e_cap,
-            "in_e_cap": self.graph.in_e_cap,
             "num_sources": self.num_sources,
             "max_levels": self.max_levels,
             "axes": self.axis if isinstance(self.axis, tuple) else (self.axis,),
             "axes_sizes": self.axes_sizes,
-            "dense_level_bytes": self.dense_strategy.bytes_model(
-                part.n, part.p, self.num_sources, 1, self.axes_sizes),
         }
+        if self.partition == "2d":
+            part2 = self.graph2d.part
+            meta.update({
+                "grid": (part2.r, part2.c),
+                "expand_exchange": self.expand_strategy.name,
+                "fold_exchange": self.fold_strategy.name,
+                "e_cap": self.graph2d.e_cap,
+                # per-level exchange bytes = row phase + column phase
+                "dense_level_bytes": (
+                    self.expand_strategy.bytes_model(
+                        part2.n, part2.r, part2.c, self.num_sources, 1) +
+                    self.fold_strategy.bytes_model(
+                        part2.n, part2.r, part2.c, self.num_sources, 1)),
+            })
+        else:
+            meta.update({
+                "dense_exchange": self.dense_strategy.name,
+                "queue_exchange": self.queue_strategy.name,
+                "e_cap": self.graph.e_cap,
+                "in_e_cap": self.graph.in_e_cap,
+                "dense_level_bytes": self.dense_strategy.bytes_model(
+                    part.n, part.p, self.num_sources, 1, self.axes_sizes),
+            })
+        return meta
 
     def compile(self) -> "BFSEngine":
         return BFSEngine(self)
 
 
-def plan(graph: "ShardedGraph", opts: BFSOptions = BFSOptions(), *,
+def _resolve_strategy(kind: str, name: str, model_args: tuple):
+    """Registry lookup, or byte-model auto-selection for name="auto"."""
+    if name == "auto":
+        return ex.select_exchange(kind, *model_args)
+    return ex.get_exchange(kind, name)
+
+
+def plan(graph, opts: BFSOptions = BFSOptions(), *,
          mesh: Optional[Mesh] = None, axis=None,
-         num_sources: int = 1) -> BFSPlan:
+         num_sources: int = 1, partition: Optional[str] = None) -> BFSPlan:
     """Validate options/topology and derive the static traversal shapes.
 
     ``num_sources`` fixes the compiled source-batch capacity S; a compiled
     engine accepts any 1..S sources per run without retracing.
+
+    ``partition`` selects the scheme: ``"1d"`` (the paper's vertex blocks,
+    default) or ``"2d"`` (edge blocks over an r x c grid — pass a mesh with
+    two axes ``(rows, cols)``; each level's exchange is then a row
+    allgather + column fold over r + c participants instead of one
+    collective over all p shards).  ``None`` infers the scheme from the
+    graph container, so callers holding a ``ShardedGraph2D`` need no flag;
+    a 1-D graph is converted (and the conversion cached) on first use.
     """
+    from repro.graphs.formats import ShardedGraph2D, to_2d
+
     opts.validate()
     part = graph.part
+    s = int(num_sources)
     if num_sources < 1:
         raise ValueError(f"num_sources must be >= 1 ({num_sources})")
+    if partition is None:
+        partition = "2d" if isinstance(graph, ShardedGraph2D) else "1d"
+    if partition not in ("1d", "2d"):
+        raise ValueError(f"unknown partition scheme {partition!r}; "
+                         "expected '1d' | '2d'")
+
+    if partition == "2d":
+        if opts.mode != "dense":
+            raise ValueError(
+                f"partition='2d' supports mode='dense' only (the fold "
+                f"phase already merges candidates network-side); got "
+                f"mode={opts.mode!r}")
+        if opts.use_kernel:
+            raise ValueError("use_kernel is a single-shard 1-D dense path; "
+                             "not available with partition='2d'")
+        if mesh is None:
+            if part.p != 1:
+                raise ValueError("pass a 2-axis mesh whose r*c equals the "
+                                 f"graph's p={part.p}")
+            mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                        ("rows", "cols"))
+            axis = ("rows", "cols")
+        axes = tuple(axis) if axis is not None else tuple(mesh.axis_names)
+        if len(axes) != 2:
+            raise ValueError(f"partition='2d' needs exactly two mesh axes "
+                             f"(rows, cols); got {axes}")
+        r, c = (int(mesh.shape[a]) for a in axes)
+        if r * c != part.p:
+            raise ValueError(f"mesh grid {r}x{c} does not multiply to the "
+                             f"graph's p={part.p}")
+        if isinstance(graph, ShardedGraph2D):
+            # edge blocks are encoded for one specific grid shape; a
+            # transposed/reshaped mesh would compile and silently traverse
+            # wrong (gather indices clamp under jit)
+            if (part.r, part.c) != (r, c):
+                raise ValueError(
+                    f"graph's edge blocks are laid out for a "
+                    f"{part.r}x{part.c} grid; mesh is {r}x{c}")
+            graph2d = graph
+        else:
+            graph2d = to_2d(graph, r, c)
+        grid_args = (graph2d.part.n, r, c, s, 1)
+        return BFSPlan(
+            graph=graph, opts=opts, mesh=mesh, axis=axes,
+            axes_sizes=(r, c), num_sources=s,
+            max_levels=opts.max_levels or part.n_logical,
+            partition="2d", graph2d=graph2d,
+            expand_strategy=_resolve_strategy(
+                "expand_row", opts.expand_exchange, grid_args),
+            fold_strategy=_resolve_strategy(
+                "fold_col", opts.fold_exchange, grid_args),
+        )
+
+    if isinstance(graph, ShardedGraph2D):
+        raise ValueError("partition='1d' needs a 1-D ShardedGraph; this "
+                         "graph holds 2-D edge blocks")
     if opts.mode == "queue" and num_sources != 1:
         raise ValueError("queue frontier supports a single source "
                          f"(num_sources={num_sources})")
@@ -198,10 +300,13 @@ def plan(graph: "ShardedGraph", opts: BFSOptions = BFSOptions(), *,
 
     return BFSPlan(
         graph=graph, opts=opts, mesh=mesh, axis=axis,
-        axes_sizes=axes_sizes, num_sources=int(num_sources),
+        axes_sizes=axes_sizes, num_sources=s,
         max_levels=opts.max_levels or part.n_logical,
-        dense_strategy=ex.get_exchange("dense", opts.dense_exchange),
-        queue_strategy=ex.get_exchange("queue", opts.queue_exchange),
+        dense_strategy=_resolve_strategy(
+            "dense", opts.dense_exchange,
+            (part.n, part.p, s, 1, axes_sizes)),
+        queue_strategy=_resolve_strategy(
+            "queue", opts.queue_exchange, (part.p, opts.queue_cap, 4)),
     )
 
 
@@ -229,18 +334,33 @@ class BFSEngine:
     def __init__(self, plan_: BFSPlan):
         self.plan = plan_
         self._trace_count = 0
-        graph, opts, mesh = plan_.graph, plan_.opts, plan_.mesh
-        part = graph.part
-        p, n = part.p, part.n
+        opts, mesh = plan_.opts, plan_.mesh
         s = plan_.num_sources
         axis = plan_.axis
 
-        expand_fn = self._build_kernel_expand() if opts.use_kernel else None
-
-        shard_fn = _make_shard_fn(
-            part, graph.n_edges, s, axis, plan_.axes_sizes, opts,
-            plan_.max_levels, plan_.dense_strategy, plan_.queue_strategy,
-            expand_fn=expand_fn, on_trace=self._bump_trace)
+        # The two partition schemes differ only in the per-shard loop body
+        # and the edge-block encoding; everything below the dispatch —
+        # sharding specs, device buffer cache, AOT compile with the donated
+        # dist buffer, on-device source scatter — is shared.
+        if plan_.partition == "2d":
+            buf_owner = plan_.graph2d
+            part = buf_owner.part
+            shard_fn = _make_shard_fn_2d(
+                part, s, axis[0], axis[1], opts, plan_.max_levels,
+                plan_.expand_strategy, plan_.fold_strategy,
+                on_trace=self._bump_trace)
+        else:
+            buf_owner = plan_.graph
+            part = buf_owner.part
+            expand_fn = (self._build_kernel_expand() if opts.use_kernel
+                         else None)
+            shard_fn = _make_shard_fn(
+                part, buf_owner.n_edges, s, axis, plan_.axes_sizes, opts,
+                plan_.max_levels, plan_.dense_strategy, plan_.queue_strategy,
+                expand_fn=expand_fn, on_trace=self._bump_trace)
+        n = part.n
+        edge_host = buf_owner.flat()
+        n_edge_in = len(edge_host)
 
         spec_edge = P(axis)
         spec_vert = P(axis, None)
@@ -251,8 +371,8 @@ class BFSEngine:
 
         mapped = shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(spec_edge, spec_edge, spec_edge, spec_edge,
-                      spec_vert, spec_vert, spec_edge),
+            in_specs=(spec_edge,) * n_edge_in + (spec_vert, spec_vert,
+                                                 spec_edge),
             out_specs=(spec_vert, P(), P(), P(), P()),
             check_vma=False,
         )
@@ -262,15 +382,13 @@ class BFSEngine:
         # shared across engines on the same (mesh, axis) — compiling
         # several option/S variants of one graph must not duplicate its
         # largest buffers.
-        dev_cache = graph.__dict__.setdefault("_device_blocks", {})
+        dev_cache = buf_owner.__dict__.setdefault("_device_blocks", {})
         bufs = dev_cache.get((mesh, axis))
         if bufs is None:
-            src_local, dst_global, in_src_global, in_dst_local = graph.flat()
             valid = np.arange(n) < part.n_logical
             bufs = (tuple(
                 jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
-                for a in (src_local, dst_global, in_src_global,
-                          in_dst_local)),
+                for a in edge_host),
                 jax.device_put(valid, sh_edge))
             dev_cache[(mesh, axis)] = bufs
         self._gbufs, self._valid = bufs
@@ -279,7 +397,7 @@ class BFSEngine:
         front_sds = jax.ShapeDtypeStruct((n, s), jnp.uint8, sharding=sh_vert)
         src_sds = jax.ShapeDtypeStruct((s,), jnp.int32, sharding=sh_repl)
 
-        self._run_c = jax.jit(mapped, donate_argnums=(4,)).lower(
+        self._run_c = jax.jit(mapped, donate_argnums=(n_edge_in,)).lower(
             *self._gbufs, dist_sds, front_sds, self._valid).compile()
 
         def init_fn(sources):

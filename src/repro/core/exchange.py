@@ -56,23 +56,37 @@ class ExchangeStrategy:
     """
 
     name: str
-    kind: str                 # "dense" | "queue"
+    kind: str                 # see KINDS below
     impl: Callable
     bytes_model: Callable
 
 
 _REGISTRY: dict = {}          # (kind, name) -> ExchangeStrategy
 
+# Exchange kinds, one per communication pattern in the two partition schemes:
+#   dense      — 1-D full-length candidate-mask merge over all p shards
+#   queue      — 1-D per-destination sparse id buffers
+#   expand_row — 2-D expand phase: frontier allgather across a grid row
+#                (c participants); byte model (n, r, c, s, itemsize)
+#   fold_col   — 2-D fold phase: candidate merge across a grid column
+#                (r participants); byte model (n, r, c, s, itemsize)
+KINDS = ("dense", "queue", "expand_row", "fold_col")
+
+
+def _check_kind(kind: str) -> None:
+    if kind not in KINDS:
+        raise ValueError(f"unknown exchange kind {kind!r}; "
+                         f"expected one of: {', '.join(KINDS)}")
+
 
 def register_exchange(kind: str, name: str, bytes_model: Callable):
     """Decorator: register an exchange impl under ``(kind, name)``.
 
-    ``kind`` is "dense" (full-length candidate-mask merge) or "queue"
-    (per-destination id buffers).  Re-registering a name overwrites it,
-    which keeps iterative strategy development REPL-friendly.
+    ``kind`` is one of ``KINDS`` (see above).  Re-registering a name
+    overwrites it, which keeps iterative strategy development
+    REPL-friendly.
     """
-    if kind not in ("dense", "queue"):
-        raise ValueError(f"unknown exchange kind {kind!r}")
+    _check_kind(kind)
 
     def deco(fn):
         _REGISTRY[(kind, name)] = ExchangeStrategy(
@@ -83,10 +97,12 @@ def register_exchange(kind: str, name: str, bytes_model: Callable):
 
 
 def unregister_exchange(kind: str, name: str) -> None:
+    """Remove a registered strategy; idempotent (missing names are a no-op)."""
     _REGISTRY.pop((kind, name), None)
 
 
 def get_exchange(kind: str, name: str) -> ExchangeStrategy:
+    _check_kind(kind)
     try:
         return _REGISTRY[(kind, name)]
     except KeyError:
@@ -94,6 +110,21 @@ def get_exchange(kind: str, name: str) -> ExchangeStrategy:
         raise ValueError(
             f"unknown {kind} exchange strategy {name!r}; "
             f"registered: {avail}") from None
+
+
+def select_exchange(kind: str, *model_args) -> ExchangeStrategy:
+    """Auto-select the registered strategy with the smallest modeled bytes.
+
+    ``model_args`` must match the kind's byte-model signature.  Plans
+    resolve the ``"auto"`` strategy name through this, so auto-selection
+    spans every registered strategy of both partition schemes; ties break
+    by name for determinism.
+    """
+    _check_kind(kind)
+    cands = [st for (k, _), st in _REGISTRY.items() if k == kind]
+    if not cands:
+        raise ValueError(f"no exchange strategies registered for {kind!r}")
+    return min(cands, key=lambda st: (st.bytes_model(*model_args), st.name))
 
 
 class _StrategyNames:
@@ -124,6 +155,8 @@ class _StrategyNames:
 
 DENSE_STRATEGIES = _StrategyNames("dense")
 QUEUE_STRATEGIES = _StrategyNames("queue")
+EXPAND_ROW_STRATEGIES = _StrategyNames("expand_row")
+FOLD_COL_STRATEGIES = _StrategyNames("fold_col")
 
 
 def axis_size(axis: AxisName) -> int:
@@ -229,6 +262,70 @@ def exchange_dense(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndar
 
 
 # ---------------------------------------------------------------------------
+# 2-D grid exchange: expand across a grid row, fold across a grid column
+# ---------------------------------------------------------------------------
+# The 2-D edge partition (core/partition.Partition2D) replaces the single
+# all-shards collective of the 1-D scheme with two small ones per level:
+# an ``expand_row`` allgather of the frontier among the c devices of a grid
+# row, and a ``fold_col`` merge of transposed candidates among the r devices
+# of a grid column.  Per-chip received bytes drop from Θ((p-1)/p · n) to
+# Θ((r-1 + c-1) · n/p) — collective participants shrink from p to r + c.
+# Byte-model signature for both kinds: (n, r, c, s, itemsize) with n the
+# padded global vertex count.
+
+def _bytes_expand_allgather(n, r, c, s, itemsize):
+    return (c - 1) * (n // (r * c)) * s * itemsize
+
+
+@register_exchange("expand_row", "allgather", _bytes_expand_allgather)
+def _expand_row_allgather(frontier: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # (b, S) local frontier chunk -> (c*b, S) row-block frontier.  The c
+    # chunks of a grid row are globally contiguous, so the tiled gather is
+    # already in global-id order for the local edge expansion.
+    return lax.all_gather(frontier, axis, tiled=True)
+
+
+def _bytes_fold_alltoall(n, r, c, s, itemsize):
+    return (r - 1) * (n // (r * c)) * s * itemsize
+
+
+@register_exchange("fold_col", "alltoall_reduce", _bytes_fold_alltoall)
+def _fold_col_alltoall(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # (r*b, S) fold-ordered candidates -> (b, S) owned merge: block rr goes
+    # to the grid-column device at row rank rr, then the r received partial
+    # masks are OR-merged (max) locally.
+    r = axis_size(axis)
+    recv = lax.all_to_all(cand, axis, split_axis=0, concat_axis=0, tiled=True)
+    return recv.reshape(r, cand.shape[0] // r, *cand.shape[1:]).max(axis=0)
+
+
+def _bytes_fold_reduce_scatter(n, r, c, s, itemsize):
+    return (r - 1) * (n // (r * c)) * s * 2  # bf16 widening
+
+
+@register_exchange("fold_col", "reduce_scatter", _bytes_fold_reduce_scatter)
+def _fold_col_reduce_scatter(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Let the network merge: sum == OR for non-negative 0/1 contributions
+    # (same argument as the dense reduce_scatter strategy).
+    x = cand.astype(jnp.bfloat16)
+    own = lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+    return (own > 0).astype(cand.dtype)
+
+
+def expand_row(frontier: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
+    """2-D expand phase: (b, S) chunk -> (c*b, S) grid-row frontier."""
+    return get_exchange("expand_row", strategy).impl(frontier, axis)
+
+
+def fold_col(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
+    """2-D fold phase: (r*b, S) fold-ordered candidates -> (b, S) owned."""
+    r = axis_size(axis)
+    assert cand.shape[0] % r == 0, \
+        f"fold needs len ({cand.shape[0]}) divisible by r ({r})"
+    return get_exchange("fold_col", strategy).impl(cand, axis)
+
+
+# ---------------------------------------------------------------------------
 # Sparse queue exchange: (p, cap) per-destination vertex-id buffers
 # ---------------------------------------------------------------------------
 
@@ -294,3 +391,12 @@ def queue_level_bytes(strategy: str, p: int, cap: int, itemsize: int = 4) -> flo
 
 def bottomup_level_bytes(n: int, p: int, s: int = 1, itemsize: int = 1) -> float:
     return (p - 1) / p * n * s * itemsize
+
+
+def grid_level_bytes(expand_strategy: str, fold_strategy: str, n: int,
+                     r: int, c: int, s: int = 1, itemsize: int = 1) -> float:
+    """Bytes received per chip for one 2-D level (expand + fold phases)."""
+    return (get_exchange("expand_row", expand_strategy).bytes_model(
+                n, r, c, s, itemsize) +
+            get_exchange("fold_col", fold_strategy).bytes_model(
+                n, r, c, s, itemsize))

@@ -66,6 +66,28 @@ def expand_dense(frontier: jnp.ndarray, src_local: jnp.ndarray,
     return cand[:n]
 
 
+def expand_dense_2d(frontier_row: jnp.ndarray, src_rowlocal: jnp.ndarray,
+                    dst_fold: jnp.ndarray, fold_len: int) -> jnp.ndarray:
+    """2-D edge expansion into the *transposed* fold-phase layout.
+
+    frontier_row: (c*b, S) uint8 — this grid row's frontier segment (the
+    expand-phase allgather output).  src_rowlocal/dst_fold: (E,) int32
+    padded COO local to this device's adjacency block; ``dst_fold`` indexes
+    candidates as ``row_rank(owner(dst)) * b + local_id(dst)`` (-1 =
+    padding) so the column all-to-all of the fold phase delivers each
+    length-``b`` slice straight to its owner.  Returns (fold_len, S) uint8
+    with ``fold_len = r*b``.
+    """
+    valid = dst_fold >= 0
+    fvals = frontier_row[src_rowlocal] * valid[:, None].astype(
+        frontier_row.dtype)                                        # (E, S)
+    idx = jnp.where(valid, dst_fold, fold_len)
+    cand = jnp.zeros((fold_len + 1, frontier_row.shape[1]),
+                     dtype=frontier_row.dtype)
+    cand = cand.at[idx].max(fvals)
+    return cand[:fold_len]
+
+
 def expand_bottom_up(frontier_global: jnp.ndarray, in_src_global: jnp.ndarray,
                      in_dst_local: jnp.ndarray, shard: int) -> jnp.ndarray:
     """Bottom-up: each local vertex checks whether any in-neighbor is in

@@ -1,4 +1,4 @@
-"""1-D block partitioning of the vertex set (paper §2.1).
+"""Partition schemes: 1-D vertex blocks (paper §2.1) and 2-D edge blocks.
 
 The paper distributes vertices of ``G(V, E)`` across ``p`` processors with a
 1-D partitioning: every vertex has exactly one *owner* processor, and only
@@ -9,15 +9,28 @@ divide and keeps each shard's vertex ids contiguous so a shard's slice of
 any vertex-indexed dense array (distance vector, frontier bitmap, feature
 matrix) is a plain static slice.
 
-The same object is reused for every 1-D-partitioned structure in the
-framework: BFS distance vectors, GNN node features, and recsys embedding
-table rows (DESIGN.md §Arch-applicability).
+Beyond the paper, ``Partition2D`` block-distributes the *adjacency matrix*
+over an ``r x c`` processor grid (Buluç & Madduri, arXiv:1104.4518): edge
+``(u, v)`` lives on grid cell ``(grid_row(owner(u)), grid_col(owner(v)))``.
+The vertex distribution is unchanged — chunk ``k`` (same ``ceil(n/p)``
+blocks, ``p = r*c``) belongs to device ``(k // c, k % c)`` — so distance and
+frontier arrays lay out identically under both schemes and the two engines
+share their buffers' shapes.  What changes is the communication pattern:
+each BFS level's exchange is an allgather across a grid *row* (``c``
+participants, the expand phase) plus an all-to-all+reduce across a grid
+*column* (``r`` participants, the fold phase), instead of one collective
+over all ``p`` shards.
+
+Both schemes satisfy the structural ``Partition`` protocol below (owner
+lookup, shard slicing, padded sizes) and are reused for every partitioned
+structure in the framework: BFS distance vectors, GNN node features, and
+recsys embedding table rows (DESIGN.md §Arch-applicability).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Protocol, Union, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
@@ -25,35 +38,62 @@ import numpy as np
 Array = Union[np.ndarray, jnp.ndarray]
 
 
-@dataclasses.dataclass(frozen=True)
-class Partition1D:
-    """Block 1-D partition of ``n_logical`` ids over ``p`` shards.
+@runtime_checkable
+class Partition(Protocol):
+    """Structural protocol every partition scheme satisfies.
 
-    ``n`` is padded up so every shard owns exactly ``shard_size`` ids;
-    padding ids (``>= n_logical``) are valid to store but are never real
-    vertices.
+    ``isinstance(x, Partition)`` works at runtime (data members are checked
+    for presence only).  All id maps must accept python ints, numpy arrays
+    and jnp arrays, and must map every padded id in ``[0, n)`` — including
+    the padding ids ``[n_logical, n)`` at the last shard boundary — to a
+    valid shard without raising.
     """
 
     n_logical: int
-    p: int
-
-    def __post_init__(self):
-        if self.n_logical <= 0 or self.p <= 0:
-            raise ValueError(f"bad partition ({self.n_logical=}, {self.p=})")
 
     @property
-    def shard_size(self) -> int:
-        return -(-self.n_logical // self.p)  # ceil div
+    def kind(self) -> str: ...              # "1d" | "2d"
 
     @property
-    def n(self) -> int:
-        """Padded global size (``p * shard_size``)."""
-        return self.shard_size * self.p
+    def p(self) -> int: ...                 # number of shards
+
+    @property
+    def shard_size(self) -> int: ...        # padded ids per shard
+
+    @property
+    def n(self) -> int: ...                 # padded global size
+
+    def owner(self, v): ...
+
+    def local_id(self, v): ...
+
+    def global_id(self, shard, local): ...
+
+    def shard_slice(self, shard) -> slice: ...
+
+    def pad_vertex_array(self, x, fill=0): ...
+
+
+class _BlockVertexMixin:
+    """Shared owner/local-id algebra for contiguous block distributions.
+
+    Relies on ``self.p``, ``self.shard_size``, ``self.n_logical`` and
+    ``self.n``.  Arithmetic only (no np/jnp calls), so every map works
+    unchanged on python ints, numpy arrays and traced jnp arrays.
+    """
 
     # --- owner / local id maps (work on python ints, numpy and jnp arrays) ---
     def owner(self, v: Array) -> Array:
-        """``find_owner`` from the paper's algorithm (fig. 2, line 15)."""
+        """``find_owner`` from the paper's algorithm (fig. 2, line 15).
+
+        Valid for every padded id in ``[0, n)``: the tail padding ids
+        ``[n_logical, n)`` land on the last shard(s) by construction
+        (``n = p * shard_size``), never out of range — pinned by the
+        regression tests in tests/test_partition_and_registry.py.
+        """
         return v // self.shard_size
+
+    find_owner = owner  # the paper's name for the same map
 
     def local_id(self, v: Array) -> Array:
         return v - (v // self.shard_size) * self.shard_size
@@ -63,6 +103,22 @@ class Partition1D:
 
     def shard_start(self, shard: int) -> int:
         return shard * self.shard_size
+
+    def shard_slice(self, shard: int) -> slice:
+        """Padded-coordinate slice ``[shard*size, (shard+1)*size)``."""
+        if not 0 <= shard < self.p:
+            raise ValueError(f"shard {shard} outside [0, {self.p})")
+        return slice(shard * self.shard_size, (shard + 1) * self.shard_size)
+
+    def shard_logical_slice(self, shard: int) -> slice:
+        """``shard_slice`` clipped to the logical vertex range.
+
+        Safe for slicing length-``n_logical`` host arrays: a last shard
+        that is partially (or entirely) padding yields a short (or empty)
+        slice instead of overrunning.
+        """
+        s = self.shard_slice(shard)
+        return slice(min(s.start, self.n_logical), min(s.stop, self.n_logical))
 
     # --- numpy helpers used by the host-side graph builder ---
     def counts_per_owner(self, v: np.ndarray) -> np.ndarray:
@@ -79,6 +135,116 @@ class Partition1D:
         """(p, shard_size) bool — True where the local slot is a real vertex."""
         gids = np.arange(self.n).reshape(self.p, self.shard_size)
         return gids < self.n_logical
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition1D(_BlockVertexMixin):
+    """Block 1-D partition of ``n_logical`` ids over ``p`` shards.
+
+    ``n`` is padded up so every shard owns exactly ``shard_size`` ids;
+    padding ids (``>= n_logical``) are valid to store but are never real
+    vertices.
+    """
+
+    n_logical: int
+    p: int
+
+    def __post_init__(self):
+        if self.n_logical <= 0 or self.p <= 0:
+            raise ValueError(f"bad partition ({self.n_logical=}, {self.p=})")
+
+    @property
+    def kind(self) -> str:
+        return "1d"
+
+    @property
+    def shard_size(self) -> int:
+        return -(-self.n_logical // self.p)  # ceil div
+
+    @property
+    def n(self) -> int:
+        """Padded global size (``p * shard_size``)."""
+        return self.shard_size * self.p
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition2D(_BlockVertexMixin):
+    """2-D block partition of the adjacency matrix over an ``r x c`` grid.
+
+    Vertices keep the same contiguous chunks as ``Partition1D(n, r*c)``
+    (chunk ``k`` on grid device ``(k // c, k % c)``), so vertex-indexed
+    arrays shard identically under both schemes.  Edges are assigned by
+    *both* endpoints: edge ``(u, v)`` lives on the device at grid row
+    ``grid_row(owner(u))`` and grid column ``grid_col(owner(v))``.
+
+    The derived blocks of each level's two-phase exchange:
+
+      * row block ``i`` (expand phase) — the ``c`` contiguous vertex chunks
+        owned by grid row ``i``: global ids ``[i*c*b, (i+1)*c*b)``.  The
+        frontier segment a device needs for local expansion is exactly its
+        grid row's allgather (``c`` participants).
+      * fold layout (column phase) — candidates a device produces target
+        the ``r`` chunks owned by its grid *column* ``j`` (chunks
+        ``{j, c+j, ..., (r-1)c+j}``, strided).  They are packed transposed
+        as ``fold_index(v) = row_rank(owner(v)) * b + local_id(v)`` so the
+        column all-to-all (``r`` participants) delivers chunk-contiguous
+        slices straight to their owners.
+    """
+
+    n_logical: int
+    r: int
+    c: int
+
+    def __post_init__(self):
+        if self.n_logical <= 0 or self.r <= 0 or self.c <= 0:
+            raise ValueError(
+                f"bad partition ({self.n_logical=}, {self.r=}, {self.c=})")
+
+    @property
+    def kind(self) -> str:
+        return "2d"
+
+    @property
+    def p(self) -> int:
+        return self.r * self.c
+
+    @property
+    def shard_size(self) -> int:
+        return -(-self.n_logical // self.p)  # ceil div
+
+    @property
+    def n(self) -> int:
+        return self.shard_size * self.p
+
+    # --- grid coordinate maps ---
+    def grid_row(self, shard: Array) -> Array:
+        return shard // self.c
+
+    def grid_col(self, shard: Array) -> Array:
+        return shard - (shard // self.c) * self.c
+
+    @property
+    def row_block_size(self) -> int:
+        """Vertices per grid row (the expand-phase frontier segment)."""
+        return self.c * self.shard_size
+
+    @property
+    def fold_size(self) -> int:
+        """Length of the transposed fold-phase candidate layout (r * b)."""
+        return self.r * self.shard_size
+
+    def row_start(self, grid_row: int) -> int:
+        return grid_row * self.row_block_size
+
+    def fold_index(self, v: Array) -> Array:
+        """Transposed candidate index: ``row_rank(owner(v)) * b + local``."""
+        own = self.owner(v)
+        return self.grid_row(own) * self.shard_size + self.local_id(v)
+
+    @property
+    def flat(self) -> Partition1D:
+        """The equivalent 1-D vertex partition (identical owner map)."""
+        return Partition1D(self.n_logical, self.p)
 
 
 def repartition(part: Partition1D, new_p: int) -> Partition1D:

@@ -1,7 +1,12 @@
-"""Serial numpy BFS oracle (the 'single machine' baseline of paper §2).
+"""Serial numpy BFS oracles (the 'single machine' baseline of paper §2).
 
 Deliberately written against raw edge arrays with no shared code with the
 distributed engine, so tests compare two independent implementations.
+``bfs_reference_2d`` additionally *simulates the 2-D algorithm's phase
+structure* (r x c adjacency blocks, row-wise expand, column-wise fold) in
+plain numpy, so the distributed 2-D engine is checked against an
+independent host-side rendering of the same algorithm as well as against
+the serial oracle.
 """
 
 from __future__ import annotations
@@ -36,3 +41,60 @@ def bfs_reference(src: np.ndarray, dst: np.ndarray, n: int, sources) -> np.ndarr
             frontier = nxt
             level += 1
     return out
+
+
+def bfs_reference_2d(src: np.ndarray, dst: np.ndarray, n: int, sources,
+                     r: int, c: int) -> np.ndarray:
+    """Host simulation of 2-D edge-partitioned BFS on an r x c grid.
+
+    Per level: for every grid cell (i, j), expand cell-local edges through
+    grid row i's frontier segment into a fold-ordered candidate array,
+    OR-merge partial candidates down each grid column (the fold phase),
+    then apply the owner-computes update chunk by chunk.  Returns (n, S)
+    int32 distances (logical range only).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    p = r * c
+    b = -(-n // p)                      # chunk size (ceil)
+    n_pad = b * p
+    row_blk = c * b                     # vertices per grid row
+
+    # Bucket edges into grid cells with the engine's encodings: source
+    # relative to its row block, target in the transposed fold layout.
+    own_s, own_d = src // b, dst // b
+    gi, gj = own_s // c, own_d % c
+    u_row = src - gi * row_blk
+    v_fold = (own_d // c) * b + (dst - own_d * b)
+    cells = {}
+    for i in range(r):
+        for j in range(c):
+            sel = (gi == i) & (gj == j)
+            cells[i, j] = (u_row[sel], v_fold[sel])
+
+    s_count = sources.shape[0]
+    dist = np.full((n_pad, s_count), INF, dtype=np.int32)
+    frontier = np.zeros((n_pad, s_count), dtype=bool)
+    dist[sources, np.arange(s_count)] = 0
+    frontier[sources, np.arange(s_count)] = True
+
+    level = 1
+    while frontier.any():
+        new = np.zeros_like(frontier)
+        for j in range(c):
+            folded = np.zeros((r * b, s_count), dtype=bool)   # column merge
+            for i in range(r):
+                frow = frontier[i * row_blk:(i + 1) * row_blk]
+                ul, vf = cells[i, j]
+                cand = np.zeros((r * b, s_count), dtype=bool)
+                np.logical_or.at(cand, vf, frow[ul])
+                folded |= cand
+            for rr in range(r):                                # owner update
+                chunk = slice((rr * c + j) * b, (rr * c + j + 1) * b)
+                upd = folded[rr * b:(rr + 1) * b] & (dist[chunk] == INF)
+                dist[chunk][upd] = level
+                new[chunk] |= upd
+        frontier = new
+        level += 1
+    return dist[:n]

@@ -1,6 +1,8 @@
-from repro.graphs.formats import (ShardedGraph, block_sparse_adjacency,
-                                  csr_from_coo, shard_graph, shard_node_array)
+from repro.graphs.formats import (ShardedGraph, ShardedGraph2D,
+                                  block_sparse_adjacency, csr_from_coo,
+                                  shard_graph, shard_graph_2d,
+                                  shard_node_array, to_2d)
 from repro.graphs.generators import (GENERATORS, batched_molecules,
-                                     dedupe_edges, erdos_renyi, generate,
-                                     rmat, small_world, star_graph,
+                                     chain_graph, dedupe_edges, erdos_renyi,
+                                     generate, rmat, small_world, star_graph,
                                      to_undirected)

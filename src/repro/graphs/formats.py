@@ -19,7 +19,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.partition import Partition1D
+from repro.core.partition import Partition1D, Partition2D
 
 _ALIGN = 128  # pad per-shard edge capacity to a lane-aligned multiple
 
@@ -76,6 +76,19 @@ class ShardedGraph:
         np.add.at(deg, d, 1)
         return deg
 
+    def edge_list(self):
+        """Reconstruct the global COO edge list from the out-edge blocks.
+
+        Order is shard-bucketed, not the original insertion order — fine
+        for re-partitioning (the 2-D conversion below) and degree math.
+        """
+        shard_base = (np.arange(self.p, dtype=np.int64)[:, None]
+                      * self.part.shard_size)
+        valid = self.dst_global >= 0
+        src = (self.src_local.astype(np.int64) + shard_base)[valid]
+        dst = self.dst_global[valid].astype(np.int64)
+        return src, dst
+
 
 def _bucket(key_owner: np.ndarray, p: int, arrays, e_cap: int, fills):
     """Stable-sort ``arrays`` by owner and pack into (p, e_cap) blocks."""
@@ -127,6 +140,91 @@ def shard_graph(src: np.ndarray, dst: np.ndarray, n: int, p: int,
         in_src_global=in_s_glob, in_dst_local=in_d_loc,
         n_edges=int(src.size),
     )
+
+
+@dataclasses.dataclass
+class ShardedGraph2D:
+    """2-D edge-partitioned graph: one padded COO block per grid cell.
+
+    Block ``(i, j)`` (stored at linear index ``i*c + j``) holds every edge
+    whose source is owned by grid row ``i`` and whose target is owned by
+    grid column ``j``.  Edges are pre-encoded for the two-phase BFS level:
+
+      src_rowlocal: (p, e_cap) int32 — source id relative to the row block
+        (an index into the expand-phase ``(c*b, S)`` gathered frontier).
+      dst_fold:     (p, e_cap) int32 — target in the transposed fold layout
+        ``row_rank(owner(dst)) * b + local_id(dst)``; -1 = padding.
+
+    No in-edge blocks: the fold phase already merges candidates across the
+    grid column, so 2-D BFS has no separate bottom-up path (yet).
+    """
+
+    part: Partition2D
+    src_rowlocal: np.ndarray
+    dst_fold: np.ndarray
+    n_edges: int
+
+    @property
+    def p(self) -> int:
+        return self.part.p
+
+    @property
+    def e_cap(self) -> int:
+        return self.src_rowlocal.shape[1]
+
+    def flat(self):
+        """Arrays reshaped to (p * cap,) so shard_map can slice dim 0."""
+        return (self.src_rowlocal.reshape(-1), self.dst_fold.reshape(-1))
+
+
+def shard_graph_2d(src: np.ndarray, dst: np.ndarray, n: int, r: int, c: int,
+                   e_cap: int | None = None) -> ShardedGraph2D:
+    """Partition a COO edge list over an ``r x c`` grid (2-D edge blocks).
+
+    Edge ``(u, v)`` goes to grid cell ``(grid_row(owner(u)),
+    grid_col(owner(v)))``; ``e_cap`` defaults to the max per-cell edge
+    count rounded up to 128 (same padding discipline as ``shard_graph``).
+    """
+    part = Partition2D(n, r, c)
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.size:
+        assert src.max() < n and dst.max() < n and src.min() >= 0 and dst.min() >= 0
+
+    own_s = np.asarray(part.owner(src))
+    own_d = np.asarray(part.owner(dst))
+    gi = np.asarray(part.grid_row(own_s))   # source's grid row
+    gj = np.asarray(part.grid_col(own_d))   # target's grid column
+    cell = gi * c + gj
+    src_rowlocal = src - gi * part.row_block_size
+    dst_fold = np.asarray(part.fold_index(dst))
+
+    max_cell = int(np.bincount(cell, minlength=part.p).max()) if src.size else 0
+    cap = e_cap or max(_pad_to(max(max_cell, 1), _ALIGN), _ALIGN)
+    (s_row, d_fold), _ = _bucket(
+        cell, part.p, [src_rowlocal, dst_fold], cap, fills=(0, -1))
+
+    return ShardedGraph2D(part=part, src_rowlocal=s_row, dst_fold=d_fold,
+                          n_edges=int(src.size))
+
+
+def to_2d(graph: ShardedGraph, r: int, c: int) -> ShardedGraph2D:
+    """Derive (and cache) the 2-D edge blocks of a 1-D sharded graph.
+
+    ``plan(graph, ..., partition="2d")`` calls this so callers keep one
+    graph object regardless of partition scheme; requires ``r*c`` equal to
+    the graph's shard count so the vertex chunks line up exactly.
+    """
+    if r * c != graph.part.p:
+        raise ValueError(f"grid {r}x{c} does not match the graph's "
+                         f"p={graph.part.p} vertex chunks")
+    cache = graph.__dict__.setdefault("_graph2d", {})
+    g2 = cache.get((r, c))
+    if g2 is None:
+        src, dst = graph.edge_list()
+        g2 = shard_graph_2d(src, dst, graph.part.n_logical, r, c)
+        cache[(r, c)] = g2
+    return g2
 
 
 def shard_node_array(x: np.ndarray, part: Partition1D, fill=0.0) -> np.ndarray:

@@ -61,6 +61,18 @@ def star_graph(n: int, seed: int = 0):
     return to_undirected(hub, leaves)
 
 
+def chain_graph(n: int, seed: int = 0):
+    """Path 0-1-2-...-(n-1), each edge stored both ways.
+
+    The diameter extreme opposite the star: BFS runs n-1 levels with a
+    single-vertex frontier, so per-level overheads (collective latency,
+    loop fixed costs) dominate — a worst case for level-synchronous
+    engines and the deepest traversal the parity tests exercise.
+    """
+    base = np.arange(n - 1, dtype=np.int64)
+    return to_undirected(base, base + 1)
+
+
 def erdos_renyi(n: int, avg_degree: float = 16.0, seed: int = 0):
     """G(n, M) Erdős-Rényi with M = n*avg_degree/2 undirected edges.
 
@@ -158,6 +170,7 @@ def batched_molecules(n_nodes: int, n_edges: int, batch: int, d_feat: int, seed:
 
 GENERATORS = {
     "star": star_graph,
+    "chain": chain_graph,
     "erdos_renyi": erdos_renyi,
     "small_world": small_world,
     "rmat": rmat,
@@ -167,6 +180,8 @@ GENERATORS = {
 def generate(kind: str, n: int, seed: int = 0, **kw):
     if kind == "star":
         return star_graph(n, seed=seed)
+    if kind == "chain":
+        return chain_graph(n, seed=seed)
     if kind == "erdos_renyi":
         return erdos_renyi(n, seed=seed, **kw)
     if kind == "small_world":

@@ -4,9 +4,11 @@
     PYTHONPATH=src python -m repro.launch.bfs_run --graph star --n 4000000
 
 Uses every visible device as one 1-D shard row (on a TPU pod slice this is
-the full production run; on CPU it is p=1).  ``--devices N`` forces N host
-devices for a local multi-shard run (applied before jax initializes via
-``repro.launch.host_devices``).
+the full production run; on CPU it is p=1), or — with ``--partition 2d``
+— as an ``r x c`` grid (``--grid 2x2``; defaults to the most-square
+factorization) running the two-phase edge-partitioned engine.
+``--devices N`` forces N host devices for a local multi-shard run
+(applied before jax initializes via ``repro.launch.host_devices``).
 
 The launcher drives the compile-once lifecycle: one ``plan().compile()``
 per (graph, options, mesh), then ``--repeats`` traversals from rotating
@@ -28,7 +30,8 @@ from jax.sharding import Mesh  # noqa: E402
 
 from repro.configs.base import BFS_WORKLOADS  # noqa: E402
 from repro.core import BFSOptions, plan  # noqa: E402
-from repro.graphs import generate, shard_graph  # noqa: E402
+from repro.graphs import generate, shard_graph, shard_graph_2d  # noqa: E402
+from repro.launch.mesh import default_grid, make_grid_mesh  # noqa: E402
 
 
 def main():
@@ -44,6 +47,12 @@ def main():
     ap.add_argument("--repeats", type=int, default=3,
                     help="traversals to run against the compiled engine")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
+    ap.add_argument("--partition", default="1d", choices=["1d", "2d"],
+                    help="vertex blocks over all p shards (1d) or edge "
+                         "blocks over an r x c grid (2d)")
+    ap.add_argument("--grid", default=None, metavar="RxC",
+                    help="2-D grid shape, e.g. 2x2 (default: most-square "
+                         "factorization of the device count)")
     args = ap.parse_args()
 
     if args.workload:
@@ -54,21 +63,55 @@ def main():
 
     devs = jax.devices()
     p = len(devs)
-    mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
-    print(f"graph={kind} n={n} shards={p}")
+    if args.partition == "2d":
+        if args.grid:
+            r, c = (int(x) for x in args.grid.lower().split("x"))
+        else:
+            r, c = default_grid(p)
+        mesh = make_grid_mesh(r, c)
+        axis = None                          # plan uses the mesh's two axes
+        if args.mode != "dense":
+            print(f"partition=2d forces mode=dense (requested {args.mode})")
+        # --exchange names a *dense* (1-D) strategy; the 2-D phases use
+        # expand/fold strategies.  Honor it when it is also a registered
+        # fold strategy, otherwise say so instead of silently dropping it.
+        from repro.core import FOLD_COL_STRATEGIES
+        fold = "alltoall_reduce"
+        if args.exchange in FOLD_COL_STRATEGIES:
+            fold = args.exchange
+        elif args.exchange != ap.get_default("exchange"):
+            print(f"partition=2d ignores --exchange={args.exchange} "
+                  f"(uses expand/fold strategies; fold options: "
+                  f"{tuple(FOLD_COL_STRATEGIES)})")
+        opts = BFSOptions(mode="dense", fold_exchange=fold,
+                          queue_cap=1 << 15)
+        print(f"graph={kind} n={n} grid={r}x{c} (p={r*c})")
+    else:
+        mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
+        axis = "p"
+        opts = BFSOptions(mode=args.mode, dense_exchange=args.exchange,
+                          queue_cap=1 << 15)
+        print(f"graph={kind} n={n} shards={p}")
     t0 = time.time()
     src, dst = generate(kind, n, seed=0, **kw)
-    g = shard_graph(src, dst, n, p)
+    if args.partition == "2d":
+        # bucket straight into the r x c edge blocks: one _bucket pass,
+        # no unused in-edge arrays at production sizes
+        g = shard_graph_2d(src, dst, n, r, c)
+    else:
+        g = shard_graph(src, dst, n, int(np.prod(list(mesh.shape.values()))))
     print(f"generated {src.shape[0]} edges in {time.time()-t0:.1f}s")
-    opts = BFSOptions(mode=args.mode, dense_exchange=args.exchange,
-                      queue_cap=1 << 15)
 
     t0 = time.time()
-    engine = plan(g, opts, mesh=mesh, axis="p",
-                  num_sources=args.sources).compile()
+    engine = plan(g, opts, mesh=mesh, axis=axis,
+                  num_sources=args.sources,
+                  partition=args.partition).compile()
     compile_s = time.time() - t0
-    print(f"plan+compile: {compile_s:.2f}s "
-          f"(S={args.sources}, {engine.plan.describe()['dense_exchange']})")
+    meta = engine.plan.describe()
+    exchanges = (f"{meta['expand_exchange']}+{meta['fold_exchange']}"
+                 if args.partition == "2d" else meta["dense_exchange"])
+    print(f"plan+compile: {compile_s:.2f}s (S={args.sources}, {exchanges}, "
+          f"level_bytes/chip={meta['dense_level_bytes']:.2e})")
 
     rng = np.random.default_rng(0)
     for rep in range(max(1, args.repeats)):

@@ -52,3 +52,32 @@ def make_host_mesh(p: int = 1, name: str = "data"):
     import numpy as np
     devs = np.asarray(jax.devices()[:p]).reshape(p)
     return jax.sharding.Mesh(devs, (name,))
+
+
+def default_grid(p: int) -> tuple:
+    """Most-square ``(r, c)`` factorization of ``p`` (r <= c).
+
+    The 2-D exchange cost scales with r + c, which a square grid
+    minimizes; prime ``p`` degenerates to ``(1, p)`` (= 1-D expand-free).
+    """
+    r = int(p ** 0.5)
+    while p % r:
+        r -= 1
+    return r, p // r
+
+
+def make_grid_mesh(r: int = 2, c: int = 2, names: tuple = ("rows", "cols")):
+    """``r x c`` device grid for the 2-D BFS edge partition.
+
+    Device ``(i, j)`` owns vertex chunk ``i*c + j``; the expand phase
+    allgathers frontiers over ``names[1]`` (within a grid row) and the
+    fold phase merges candidates over ``names[0]`` (within a grid
+    column).  Needs ``r*c`` local devices (``host_devices(n)`` /
+    ``--devices n`` before the first jax import for CPU runs).
+    """
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < r * c:
+        raise ValueError(f"grid {r}x{c} needs {r*c} devices; "
+                         f"have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[: r * c]).reshape(r, c), names)

@@ -40,13 +40,17 @@ class TraversalRequest:
 
 class BFSService:
     def __init__(self, graph, opts: BFSOptions = BFSOptions(), *,
-                 mesh=None, axis=None, batch_slots: int = 4):
+                 mesh=None, axis=None, batch_slots: int = 4,
+                 partition=None):
         if opts.mode == "queue":
             raise ValueError("BFSService batches sources; queue mode is "
                              "single-source — use dense or auto")
         self.graph = graph
+        # partition passes straight through the lifecycle: serving over
+        # the 2-D edge-partitioned engine is the same code path.
         self.engine = plan(graph, opts, mesh=mesh, axis=axis,
-                           num_sources=batch_slots).compile()
+                           num_sources=batch_slots,
+                           partition=partition).compile()
         self.pool = SlotPool(batch_slots)
         self._n_logical = graph.part.n_logical
 

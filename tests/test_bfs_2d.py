@@ -1,0 +1,264 @@
+"""2-D edge partitioning behind the plan→compile→run lifecycle: partition
+protocol, grid graph blocks, reference parity, engine dispatch, byte
+models.  Multi-device grids run in-process only when the session has >= 4
+devices (CI's --devices 4 jobs, incl. the 2x2 grid matrix entry); the
+subprocess harness tests/helpers/grid_bfs.py covers them otherwise."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (BFSOptions, INF, Partition, Partition1D, Partition2D,
+                        plan)
+from repro.core import exchange as ex
+from repro.core.ref import bfs_reference, bfs_reference_2d
+from repro.graphs import generate, shard_graph, shard_graph_2d, to_2d
+from repro.launch.mesh import default_grid
+
+GRAPHS = (("erdos_renyi", dict(avg_degree=6)), ("star", {}), ("chain", {}))
+
+
+# ---------------------------------------------------------------------------
+# partition scheme abstraction
+# ---------------------------------------------------------------------------
+
+def test_partition_protocol_conformance():
+    p1 = Partition1D(100, 4)
+    p2 = Partition2D(100, 2, 2)
+    assert isinstance(p1, Partition) and isinstance(p2, Partition)
+    assert p1.kind == "1d" and p2.kind == "2d"
+    # identical vertex chunks: the 2-D scheme re-blocks edges, not vertices
+    assert (p2.shard_size, p2.n, p2.p) == (p1.shard_size, p1.n, p1.p)
+    v = np.arange(p1.n)
+    np.testing.assert_array_equal(p2.owner(v), p1.owner(v))
+    np.testing.assert_array_equal(p2.flat.owner(v), p1.owner(v))
+
+
+def test_partition2d_grid_maps_and_fold_index():
+    part = Partition2D(23, 2, 3)           # b = 4, n = 24, last chunk pads
+    b, c = part.shard_size, part.c
+    for v in range(part.n):
+        own = part.owner(v)
+        assert 0 <= own < part.p
+        gi, gj = part.grid_row(own), part.grid_col(own)
+        assert own == gi * c + gj
+        # fold layout: row rank of the owner, then local id
+        assert part.fold_index(v) == gi * b + (v - own * b)
+        # row block i covers exactly the chunks of grid row i
+        assert part.row_start(gi) <= v < part.row_start(gi) + part.row_block_size
+    assert part.fold_size == part.r * b
+
+
+def test_partition2d_validation():
+    with pytest.raises(ValueError, match="bad partition"):
+        Partition2D(10, 0, 2)
+    with pytest.raises(ValueError, match="bad partition"):
+        Partition2D(-1, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# 2-D graph container
+# ---------------------------------------------------------------------------
+
+def test_shard_graph_2d_blocks_and_conversion():
+    n, r, c = 50, 2, 3
+    src, dst = generate("erdos_renyi", n, seed=4, avg_degree=4)
+    g2 = shard_graph_2d(src, dst, n, r, c)
+    part = g2.part
+    assert g2.n_edges == src.shape[0]
+    assert int((g2.dst_fold >= 0).sum()) == src.shape[0]
+    # every edge sits in the cell of (source's grid row, target's grid col)
+    b = part.shard_size
+    for cell in range(part.p):
+        gi, gj = cell // c, cell % c
+        sel = g2.dst_fold[cell] >= 0
+        u = g2.src_rowlocal[cell][sel] + gi * part.row_block_size
+        vf = g2.dst_fold[cell][sel]
+        assert ((u // b) // c == gi).all()          # sources in grid row i
+        assert ((vf // b) * c + gj < part.p).all()  # targets in grid col j
+    # conversion from the 1-D container reaches the same blocks, cached
+    g1 = shard_graph(src, dst, n, r * c)
+    conv = to_2d(g1, r, c)
+    np.testing.assert_array_equal(
+        np.sort(conv.dst_fold, axis=1), np.sort(g2.dst_fold, axis=1))
+    assert to_2d(g1, r, c) is conv                  # cache hit
+    with pytest.raises(ValueError, match="grid"):
+        to_2d(g1, 2, 2)                             # 4 != p=6
+
+
+# ---------------------------------------------------------------------------
+# host reference parity (pure numpy, any grid shape)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", GRAPHS)
+def test_reference_2d_matches_serial_reference(kind, kw):
+    n = 257                                # prime: padding on every grid
+    src, dst = generate(kind, n, seed=1, **kw)
+    want = bfs_reference(src, dst, n, [0, 5])
+    for r, c in ((1, 1), (2, 2), (2, 3), (4, 1), (1, 4)):
+        got = bfs_reference_2d(src, dst, n, [0, 5], r, c)
+        np.testing.assert_array_equal(got, want, err_msg=f"{kind} {r}x{c}")
+
+
+# ---------------------------------------------------------------------------
+# engine: same lifecycle, 2-D backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", GRAPHS)
+def test_2d_engine_matches_references_single_device(kind, kw):
+    n = 400
+    src, dst = generate(kind, n, seed=3, **kw)
+    g = shard_graph(src, dst, n, p=1)
+    eng = plan(g, BFSOptions(mode="dense"), num_sources=2,
+               partition="2d").compile()
+    got = eng.run([0, 7]).dist_host
+    want = bfs_reference(src, dst, n, [0, 7])
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        got, bfs_reference_2d(src, dst, n, [0, 7], 1, 1))
+    # bitwise equal to the 1-D engine on the same graph
+    eng1 = plan(g, BFSOptions(mode="dense"), num_sources=2).compile()
+    np.testing.assert_array_equal(got, eng1.run([0, 7]).dist_host)
+
+
+def test_2d_engine_reuse_zero_retraces_and_stats():
+    n = 500
+    src, dst = generate("erdos_renyi", n, seed=6, avg_degree=6)
+    g = shard_graph(src, dst, n, p=1)
+    eng = plan(g, BFSOptions(mode="dense"), num_sources=2,
+               partition="2d").compile()
+    traces = eng.trace_count
+    assert traces == eng.compile_traces
+    r1 = eng.run([0, 5])
+    d1 = r1.dist_host.copy()
+    r2 = eng.run([7, 123])                 # fresh sources: no retrace
+    assert eng.trace_count == traces
+    np.testing.assert_array_equal(r2.dist_host,
+                                  bfs_reference(src, dst, n, [7, 123]))
+    np.testing.assert_array_equal(r1.dist_host, d1)   # donation safety
+    stats = r2.stats()
+    assert stats.levels >= 1 and not stats.overflowed
+    assert stats.mode_counts["dense"] == stats.levels  # 2-D is dense-only
+    assert stats.visited == int((r2.dist_host < int(INF)).sum())
+
+
+def test_2d_plan_validation_and_describe():
+    n = 300
+    src, dst = generate("erdos_renyi", n, seed=2, avg_degree=5)
+    g = shard_graph(src, dst, n, p=1)
+    with pytest.raises(ValueError, match="dense"):
+        plan(g, BFSOptions(mode="queue"), partition="2d")
+    with pytest.raises(ValueError, match="dense"):
+        plan(g, BFSOptions(mode="auto"), partition="2d")
+    with pytest.raises(ValueError, match="use_kernel"):
+        plan(g, BFSOptions(mode="dense", use_kernel=True), partition="2d")
+    with pytest.raises(ValueError, match="partition"):
+        plan(g, BFSOptions(), partition="3d")
+    # a 2-D graph cannot be planned as 1-D
+    g2 = shard_graph_2d(src, dst, n, 1, 1)
+    with pytest.raises(ValueError, match="2-D"):
+        plan(g2, BFSOptions(), partition="1d")
+    # ... nor against a mesh whose grid shape differs from its blocks,
+    # even when the total device count matches
+    if jax.device_count() >= 4:
+        from repro.launch.mesh import make_grid_mesh
+        src4, dst4 = generate("erdos_renyi", n, seed=2, avg_degree=5)
+        g22 = shard_graph_2d(src4, dst4, n, 2, 2)
+        with pytest.raises(ValueError, match="laid out"):
+            plan(g22, BFSOptions(mode="dense"), mesh=make_grid_mesh(4, 1))
+    meta = plan(g, BFSOptions(mode="dense"), num_sources=3,
+                partition="2d").describe()
+    assert meta["partition"] == "2d" and meta["grid"] == (1, 1)
+    assert meta["expand_exchange"] == "allgather"
+    assert meta["fold_exchange"] == "alltoall_reduce"
+    assert meta["dense_level_bytes"] == 0  # single device: nothing on wire
+    # the 1-D describe is unchanged
+    meta1 = plan(g, BFSOptions(mode="dense")).describe()
+    assert meta1["partition"] == "1d" and "dense_exchange" in meta1
+
+
+# ---------------------------------------------------------------------------
+# byte models: the r + c vs p argument
+# ---------------------------------------------------------------------------
+
+def test_2d_modeled_bytes_strictly_below_1d_at_p4():
+    n, s = 100_000, 1
+    part = Partition1D(n, 4)
+    one_d = ex.dense_level_bytes("alltoall_direct", part.n, 4, s, 1)
+    two_d = ex.grid_level_bytes("allgather", "alltoall_reduce",
+                                part.n, 2, 2, s, 1)
+    assert two_d < one_d                    # acceptance: strict at p=4
+    # and the gap widens with p for square grids
+    for p in (16, 64, 256):
+        r = int(p ** 0.5)
+        pn = Partition1D(n, p).n
+        assert ex.grid_level_bytes("allgather", "alltoall_reduce",
+                                   pn, r, r, s, 1) < \
+            ex.dense_level_bytes("alltoall_direct", pn, p, s, 1)
+
+
+def test_default_grid_factorization():
+    assert default_grid(1) == (1, 1)
+    assert default_grid(4) == (2, 2)
+    assert default_grid(12) == (3, 4)
+    assert default_grid(7) == (1, 7)
+
+
+def test_bfs_service_runs_over_2d_engine():
+    """The serving layer is partition-agnostic: one flag swaps backends."""
+    from repro.serve.bfs_service import BFSService, TraversalRequest
+
+    n = 300
+    src, dst = generate("erdos_renyi", n, seed=5, avg_degree=6)
+    g = shard_graph(src, dst, n, p=1)
+    svc = BFSService(g, BFSOptions(mode="dense"), batch_slots=2,
+                     partition="2d")
+    assert svc.engine.plan.partition == "2d"
+    for i, s in enumerate([0, 17, 250]):
+        svc.submit(TraversalRequest(rid=i, source=s))
+    done = svc.run_until_drained()
+    assert len(done) == 3 and svc.pool.drained()
+    for r in done:
+        want = bfs_reference(src, dst, n, [r.source])[:, 0]
+        np.testing.assert_array_equal(r.dist, want)
+    assert svc.engine.trace_count == svc.engine.compile_traces
+
+
+# ---------------------------------------------------------------------------
+# in-process multi-device grid (runs under CI --devices 4 / BFS_GRID=2x2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >= 4 devices (--devices 4 / BFS_GRID=2x2)")
+def test_2d_engine_on_device_grid_in_process():
+    from jax.sharding import Mesh
+    from repro.launch.mesh import make_grid_mesh
+
+    # CI exports BFS_GRID as empty on non-grid matrix entries — treat
+    # empty the same as unset
+    grid = os.environ.get("BFS_GRID") or "2x2"
+    r, c = (int(x) for x in grid.lower().split("x"))
+    p = r * c
+    mesh2 = make_grid_mesh(r, c)
+    mesh1 = Mesh(np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+    n = 1200
+    for kind, kw in GRAPHS:
+        src, dst = generate(kind, n, seed=5, **kw)
+        g = shard_graph(src, dst, n, p)
+        eng2 = plan(g, BFSOptions(mode="dense"), mesh=mesh2, num_sources=2,
+                    partition="2d").compile()
+        got = eng2.run([0, 9]).dist_host
+        np.testing.assert_array_equal(
+            got, bfs_reference(src, dst, n, [0, 9]), err_msg=kind)
+        np.testing.assert_array_equal(
+            got, bfs_reference_2d(src, dst, n, [0, 9], r, c), err_msg=kind)
+        eng1 = plan(g, BFSOptions(mode="dense"), mesh=mesh1, axis="p",
+                    num_sources=2).compile()
+        np.testing.assert_array_equal(got, eng1.run([0, 9]).dist_host,
+                                      err_msg=kind)
+        if r > 1 and c > 1:
+            assert (eng2.run([0]).stats().comm_bytes
+                    < eng1.run([0]).stats().comm_bytes)

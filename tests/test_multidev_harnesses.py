@@ -26,3 +26,9 @@ def test_exchange_byte_model_matches_hlo():
 def test_owner_exchange_graphcast_matches_reference():
     out = _run("owner_gnn.py")
     assert "OK" in out and "MISMATCH" not in out
+
+
+def test_grid_bfs_2d_matches_references():
+    out = _run("grid_bfs.py")
+    assert "grid/2x2" in out and "grid/4x1" in out and "grid/1x4" in out
+    assert "MISMATCH" not in out

@@ -1,0 +1,168 @@
+"""Satellite coverage: partition padding-id hardening at the last shard
+boundary, exchange-registry error paths and byte-model sanity, legacy
+``bfs()`` deprecation + engine-cache eviction."""
+
+import numpy as np
+import pytest
+
+from repro.core import (BFSOptions, Partition1D, Partition2D, bfs,
+                        get_exchange, plan, register_exchange, select_exchange,
+                        unregister_exchange, DENSE_STRATEGIES,
+                        EXPAND_ROW_STRATEGIES, FOLD_COL_STRATEGIES,
+                        QUEUE_STRATEGIES)
+from repro.core import exchange as ex
+from repro.graphs import generate, shard_graph
+
+
+# ---------------------------------------------------------------------------
+# partition padding ids at the last shard boundary (regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_logical,p", [
+    (10, 4),    # last shard half padding
+    (5, 4),     # last shard pure padding
+    (9, 4),     # n_logical < p*shard_size with one empty tail shard
+    (2, 4),     # more shards than logical vertices
+    (7, 3),
+    (1, 1),
+])
+def test_partition1d_padding_ids_map_to_valid_shards(n_logical, p):
+    part = Partition1D(n_logical, p)
+    # every padded id — including [n_logical, p*shard_size) — must resolve
+    # to a shard in range without raising, as ints and as arrays
+    for v in range(part.n):
+        o = part.find_owner(v)
+        assert 0 <= o < p
+        lid = part.local_id(v)
+        assert 0 <= lid < part.shard_size
+        assert part.global_id(o, lid) == v
+    v = np.arange(part.n)
+    owners = np.asarray(part.owner(v))
+    assert owners.min() >= 0 and owners.max() < p
+    assert part.counts_per_owner(v).sum() == part.n  # bincount never raised
+
+
+def test_partition_shard_slicing_clips_to_logical_range():
+    part = Partition1D(5, 4)               # shard 3 = [6, 8): pure padding
+    full = part.shard_slice(3)
+    assert (full.start, full.stop) == (6, 8)
+    logical = part.shard_logical_slice(3)
+    assert logical.start == logical.stop == 5          # empty, in range
+    x = np.arange(part.n_logical)
+    assert x[logical].size == 0                        # safe to apply
+    assert x[part.shard_logical_slice(2)].tolist() == [4]  # half padding
+    with pytest.raises(ValueError, match="shard"):
+        part.shard_slice(4)
+    # same contract on the 2-D scheme (shared block algebra)
+    part2 = Partition2D(5, 2, 2)
+    assert part2.shard_logical_slice(3).start == 5
+    v = np.arange(part2.n)
+    assert np.asarray(part2.fold_index(v)).max() < part2.fold_size
+
+
+# ---------------------------------------------------------------------------
+# exchange registry error paths
+# ---------------------------------------------------------------------------
+
+def test_get_exchange_unknown_kind_and_name():
+    with pytest.raises(ValueError, match="kind"):
+        get_exchange("bogus_kind", "alltoall_direct")
+    with pytest.raises(ValueError, match="registered"):
+        get_exchange("dense", "no_such_strategy")
+    with pytest.raises(ValueError, match="registered"):
+        get_exchange("expand_row", "no_such_strategy")
+    with pytest.raises(ValueError, match="kind"):
+        register_exchange("bogus_kind", "x", lambda *a: 0)
+    with pytest.raises(ValueError, match="kind"):
+        select_exchange("bogus_kind")
+
+
+def test_unregister_exchange_is_idempotent():
+    name = "tmp_strategy_for_idempotence"
+    register_exchange("dense", name, lambda *a: 0.0)(lambda cand, axis: cand)
+    assert name in DENSE_STRATEGIES
+    unregister_exchange("dense", name)
+    assert name not in DENSE_STRATEGIES
+    unregister_exchange("dense", name)     # second removal: silent no-op
+    unregister_exchange("dense", "never_registered_at_all")
+
+
+def test_byte_models_monotone_in_n_and_zero_without_peers():
+    s, item = 2, 1
+    for name in DENSE_STRATEGIES:
+        m = get_exchange("dense", name).bytes_model
+        assert m(4096, 1, s, item, (1,)) == 0, name       # p=1: no wire
+        assert m(8192, 8, s, item, (8,)) >= m(4096, 8, s, item, (8,)), name
+    for name in EXPAND_ROW_STRATEGIES:
+        m = get_exchange("expand_row", name).bytes_model
+        assert m(4096, 1, 1, s, item) == 0, name          # c=1: no row peers
+        assert m(8192, 2, 4, s, item) >= m(4096, 2, 4, s, item), name
+    for name in FOLD_COL_STRATEGIES:
+        m = get_exchange("fold_col", name).bytes_model
+        assert m(4096, 1, 1, s, item) == 0, name          # r=1: no col peers
+        assert m(8192, 4, 2, s, item) >= m(4096, 4, 2, s, item), name
+    for name in QUEUE_STRATEGIES:
+        m = get_exchange("queue", name).bytes_model
+        assert m(1, 1024, 4) == 0, name                   # p=1: no wire
+        assert m(8, 2048, 4) >= m(8, 1024, 4), name       # monotone in cap
+
+
+def test_select_exchange_picks_cheapest_by_model():
+    # allgather_merge receives (p-1)*n vs alltoall_direct's (p-1)/p*n —
+    # auto-selection must never pick the former for p > 1
+    st = select_exchange("dense", 4096, 8, 1, 1, (8,))
+    assert st.bytes_model(4096, 8, 1, 1, (8,)) <= \
+        get_exchange("dense", "allgather_merge").bytes_model(
+            4096, 8, 1, 1, (8,))
+    # plan-level: "auto" resolves through the same selection
+    n = 300
+    src, dst = generate("erdos_renyi", n, seed=1, avg_degree=5)
+    g = shard_graph(src, dst, n, p=1)
+    pl = plan(g, BFSOptions(mode="dense", dense_exchange="auto"))
+    assert pl.dense_strategy.name in DENSE_STRATEGIES
+    pl2 = plan(g, BFSOptions(mode="dense", expand_exchange="auto",
+                             fold_exchange="auto"), partition="2d")
+    assert pl2.expand_strategy.name in EXPAND_ROW_STRATEGIES
+    assert pl2.fold_strategy.name in FOLD_COL_STRATEGIES
+
+
+# ---------------------------------------------------------------------------
+# deprecated bfs() wrapper + engine-cache eviction
+# ---------------------------------------------------------------------------
+
+def test_bfs_wrapper_emits_deprecation_warning():
+    n = 80
+    src, dst = generate("erdos_renyi", n, seed=0, avg_degree=4)
+    g = shard_graph(src, dst, n, p=1)
+    with pytest.warns(DeprecationWarning,
+                      match=r"bfs\(\) is deprecated.*plan\("):
+        bfs(g, [0], opts=BFSOptions(mode="dense", max_levels=4))
+
+
+def test_bfs_wrapper_engine_cache_evicts_fifo():
+    n = 64
+    src, dst = generate("erdos_renyi", n, seed=2, avg_degree=3)
+    g = shard_graph(src, dst, n, p=1)
+    # 9 distinct option keys against the 8-entry FIFO cap; max_levels keeps
+    # each throwaway compile tiny
+    variants = [BFSOptions(mode="dense", max_levels=2 + i) for i in range(9)]
+    with pytest.warns(DeprecationWarning):
+        bfs(g, [0], opts=variants[0])
+    cache = g.__dict__["_bfs_engines"]
+    first_key = next(iter(cache))
+    with pytest.warns(DeprecationWarning):
+        for o in variants[1:8]:
+            bfs(g, [0], opts=o)
+    assert len(cache) == 8 and first_key in cache
+    with pytest.warns(DeprecationWarning):
+        bfs(g, [0], opts=variants[8])      # 9th key: evicts the oldest
+    assert len(cache) == 8 and first_key not in cache
+    # the survivor set is the 8 most recent plans
+    assert {k[0] for k in cache} == set(variants[1:])
+
+
+def test_options_validate_rejects_unknown_2d_strategies():
+    with pytest.raises(ValueError, match="registered"):
+        BFSOptions(expand_exchange="nope").validate()
+    with pytest.raises(ValueError, match="registered"):
+        BFSOptions(fold_exchange="nope").validate()
