@@ -214,6 +214,7 @@ def bench_partition_1d_vs_2d():
     """
     n, s = 100_000, 1
     graph_name = "erdos_renyi_100k"
+    cap = 1024                        # sparse-level id-buffer capacity
 
     for p in (1, 4, 16, 64):
         r, c = default_grid(p)
@@ -221,13 +222,17 @@ def bench_partition_1d_vs_2d():
         one_d = ex.dense_level_bytes("alltoall_direct", n_pad, p, s, 1)
         two_d = ex.grid_level_bytes("allgather", "alltoall_reduce",
                                     n_pad, r, c, s, 1)
+        two_d_sparse = ex.grid_sparse_level_bytes(
+            "allgather", "alltoall_direct", r, c, cap)
         _PARTITION_SWEEP.append({
-            "graph": graph_name, "partition": "1d", "p": p, "r": 1, "c": p,
+            "graph": graph_name, "partition": "1d", "mode": "dense",
+            "p": p, "r": 1, "c": p,
             "modeled_level_bytes": one_d,
             "phase_bytes": {"alltoall": one_d},
         })
         _PARTITION_SWEEP.append({
-            "graph": graph_name, "partition": "2d", "p": p, "r": r, "c": c,
+            "graph": graph_name, "partition": "2d", "mode": "dense",
+            "p": p, "r": r, "c": c,
             "modeled_level_bytes": two_d,
             "phase_bytes": {
                 "expand": ex.get_exchange(
@@ -236,10 +241,24 @@ def bench_partition_1d_vs_2d():
                     "fold_col", "alltoall_reduce").bytes_model(
                         n_pad, r, c, s, 1)},
         })
+        # sparse (queue) 2-D levels: per-phase id buffers — the narrow
+        # first/last levels of a traversal ride these instead of bitmaps
+        _PARTITION_SWEEP.append({
+            "graph": graph_name, "partition": "2d", "mode": "sparse",
+            "p": p, "r": r, "c": c, "queue_cap": cap,
+            "modeled_level_bytes": two_d_sparse,
+            "phase_bytes": {
+                "expand_sparse": ex.get_exchange(
+                    "expand_row_sparse", "allgather").bytes_model(
+                        r, c, cap, 4),
+                "fold_sparse": ex.get_exchange(
+                    "fold_col_sparse", "alltoall_direct").bytes_model(
+                        r, c, cap, 4)},
+        })
         ratio = one_d / two_d if two_d else float("inf")
         row(f"partition_bytes/p={p}", 0.0,
-            f"1d={one_d:.0f};2d={two_d:.0f};grid={r}x{c};"
-            f"ratio={ratio:.2f}")
+            f"1d={one_d:.0f};2d={two_d:.0f};2d_sparse={two_d_sparse:.0f};"
+            f"grid={r}x{c};ratio={ratio:.2f}")
 
     # measured: every grid the local device set can host (p=1 always; the
     # CI 4-device runners also measure the real 2x2 collectives)
@@ -279,6 +298,28 @@ def bench_partition_1d_vs_2d():
             row(f"partition_measured/{kind}/p={p}", per_run * 1e6,
                 f"levels={stats.levels};comm_bytes={stats.comm_bytes:.0f};"
                 f"compile_us={compile_s*1e6:.0f}")
+
+    # direction-optimizing 2-D: measured per-level mode split on a
+    # narrow-frontier graph (most levels ride the sparse phases) and on
+    # the er workload (hybrid dense/bottom-up middle)
+    for kind_name, gen_kw, n_small in (("chain", {}, 2_000),
+                                       ("erdos_renyi",
+                                        {"avg_degree": 16.0}, n)):
+        gsrc, gdst = generate(kind_name, n_small, seed=0, **gen_kw)
+        g = shard_graph(gsrc, gdst, n_small, 1)
+        eng = plan(g, BFSOptions(mode="auto", queue_cap=1024),
+                   num_sources=1, partition="2d").compile()
+        res = eng.run([0])
+        st = res.stats()
+        _PARTITION_SWEEP.append({
+            "graph": f"{kind_name}_{n_small}", "partition": "2d",
+            "mode": "auto", "p": 1, "r": 1, "c": 1, "measured": True,
+            "levels": st.levels, "mode_counts": st.mode_counts,
+            "run_comm_bytes": st.comm_bytes,
+        })
+        row(f"partition_modes/2d_auto/{kind_name}", 0.0,
+            f"levels={st.levels};modes={st.mode_counts};"
+            f"comm_bytes={st.comm_bytes:.0f}")
 
 
 def bench_multi_source_throughput():

@@ -13,7 +13,9 @@ from repro.core.bfs import (BFSOptions, BFSStats, INF, bfs,
 from repro.core.engine import (BFSEngine, BFSPlan, BFSResult, BFSRunStats,
                                plan)
 from repro.core.exchange import (DENSE_STRATEGIES, EXPAND_ROW_STRATEGIES,
-                                 FOLD_COL_STRATEGIES, QUEUE_STRATEGIES,
+                                 EXPAND_ROW_SPARSE_STRATEGIES,
+                                 FOLD_COL_STRATEGIES,
+                                 FOLD_COL_SPARSE_STRATEGIES, QUEUE_STRATEGIES,
                                  ExchangeStrategy, exchange_dense,
                                  exchange_queue, expand_row, fold_col,
                                  get_exchange, register_exchange,
@@ -29,5 +31,6 @@ __all__ = [
     "ExchangeStrategy", "register_exchange", "unregister_exchange",
     "get_exchange", "select_exchange",
     "DENSE_STRATEGIES", "QUEUE_STRATEGIES", "EXPAND_ROW_STRATEGIES",
-    "FOLD_COL_STRATEGIES",
+    "FOLD_COL_STRATEGIES", "EXPAND_ROW_SPARSE_STRATEGIES",
+    "FOLD_COL_SPARSE_STRATEGIES",
 ]

@@ -28,6 +28,11 @@ Modes (``BFSOptions.mode``):
     Beamer-style direction switching: on a systolic machine the win is in
     *bytes on the wire*, not early-exit branchiness.
 
+All three modes exist under both partition schemes: the 2-D backend
+(``_make_shard_fn_2d``) maps queue onto sparse expand/fold id exchanges
+and bottom-up onto a both-axes frontier gather over the owner-side
+in-edge blocks, switching per level exactly like the 1-D hybrid.
+
 The returned stats carry per-level analytic communication bytes so the
 benchmarks can reproduce the paper's scalability contrast (computation vs
 communication cost, §4) without real multi-host hardware.
@@ -63,6 +68,9 @@ class BFSOptions:
     # strategy with the smallest modeled bytes (exchange.select_exchange).
     expand_exchange: str = "allgather"        # see exchange.EXPAND_ROW_STRATEGIES
     fold_exchange: str = "alltoall_reduce"    # see exchange.FOLD_COL_STRATEGIES
+    # sparse (queue/auto) 2-D phase strategies: id buffers on the wire
+    expand_sparse_exchange: str = "allgather"       # EXPAND_ROW_SPARSE_...
+    fold_sparse_exchange: str = "alltoall_direct"   # FOLD_COL_SPARSE_...
     local_update: bool = True                 # paper §5.1 opt (1)
     dedupe: bool = True                       # drop dup targets pre-wire
     queue_cap: int = 1024                     # ids per destination bucket
@@ -82,7 +90,9 @@ class BFSOptions:
         for kind, name in (("dense", self.dense_exchange),
                            ("queue", self.queue_exchange),
                            ("expand_row", self.expand_exchange),
-                           ("fold_col", self.fold_exchange)):
+                           ("fold_col", self.fold_exchange),
+                           ("expand_row_sparse", self.expand_sparse_exchange),
+                           ("fold_col_sparse", self.fold_sparse_exchange)):
             if name != "auto":
                 ex.get_exchange(kind, name)
         if self.queue_cap <= 0:
@@ -282,13 +292,17 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
     return shard_fn
 
 
-def _make_shard_fn_2d(part2: Partition2D, s: int, row_axis, col_axis,
-                      opts: BFSOptions, max_levels: int,
+def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
+                      row_axis, col_axis, opts: BFSOptions, max_levels: int,
                       expand_strategy: ex.ExchangeStrategy,
-                      fold_strategy: ex.ExchangeStrategy, on_trace=None):
+                      fold_strategy: ex.ExchangeStrategy,
+                      expand_sparse_strategy: ex.ExchangeStrategy,
+                      fold_sparse_strategy: ex.ExchangeStrategy,
+                      on_trace=None):
     """Per-device body of the 2-D two-phase BFS level loop (shard_map).
 
-    Each level is expand -> local edge scatter -> fold -> owner update:
+    Each dense level is expand -> local edge scatter -> fold -> owner
+    update:
 
       1. expand (row phase): allgather this device's (b, S) frontier chunk
          across its grid row (the ``col_axis``, c participants) into the
@@ -302,32 +316,140 @@ def _make_shard_fn_2d(part2: Partition2D, s: int, row_axis, col_axis,
          grid axes — identical semantics to the 1-D loop, so BFSRunStats
          and the donated dist buffer behave the same.
 
-    Only dense mode exists in 2-D: the fold phase already merges candidate
-    masks network-side, which is what queue/bottom-up variants buy in 1-D.
+    The direction-optimizing variants make both phases cheap when the
+    frontier is narrow or huge (mirroring the 1-D hybrid):
+
+      * queue  — the expand allgather ships active frontier *ids*
+        (pack_frontier_ids, cap-bounded) instead of the bitmap, and the
+        fold ships per-row-rank candidate id buckets
+        (build_queue_buckets_2d, §5.1 local-update exclusion applied with
+        the device's row rank).  Any pack/bucket overflow escalates the
+        whole level to the dense representation under a replicated
+        predicate, so results stay exact and collectives stay collective.
+      * bottom-up — the frontier bitmap is gathered over *both* grid axes
+        and each device checks the in-edges of the vertices it owns
+        (the in-edge blocks on ShardedGraph2D); no fold exchange at all.
+      * auto — per level picks bottom-up (frontier huge), queue (frontier
+        edges tiny, S = 1) or dense, from replicated frontier statistics
+        (the frontier-edge count uses the per-vertex out_degree block).
     """
     r, c, b = part2.r, part2.c, part2.shard_size
+    p = part2.p
     fold_len = part2.fold_size
-    level_bytes = jnp.float32(
+    grid_axes = (row_axis, col_axis)
+    queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
+    bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part2.n_logical))
+    dense_bytes = jnp.float32(
         expand_strategy.bytes_model(part2.n, r, c, s, 1) +
         fold_strategy.bytes_model(part2.n, r, c, s, 1))
-    grid_axes = (row_axis, col_axis)
+    expand_sparse_bytes = jnp.float32(
+        expand_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4))
+    sparse_bytes = expand_sparse_bytes + jnp.float32(
+        fold_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4))
+    bottom_up_bytes = jnp.float32(ex.bottomup_level_bytes(part2.n, p, s, 1))
 
-    def body(state, src_rowlocal, dst_fold, valid_local):
-        dist, frontier, level, _, bytes_acc, overflowed, modes = state
+    def dense_level(frontier, dist, level, src_rowlocal, dst_fold):
         frow = expand_strategy.impl(frontier, col_axis)          # (c*b, S)
         cand = fr.expand_dense_2d(frow, src_rowlocal, dst_fold, fold_len)
         own = fold_strategy.impl(cand, row_axis)                 # (b, S)
         dist, new = _owned_update(dist, own, level)
-        modes = modes.at[0].add(1)                               # dense level
+        return dist, new, dense_bytes
+
+    def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
+        # gather over (rows, cols) is chunk-id order: chunk k lives on
+        # grid device (k // c, k % c), the same major-first linearization
+        fglob = ex.allgather_frontier(frontier, grid_axes)       # (n, S)
+        cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local, b)
+        dist, new = _owned_update(dist, cand, level)
+        return dist, new, bottom_up_bytes
+
+    def queue_level(frontier, dist, level, src_rowlocal, dst_fold):
+        me_row = lax.axis_index(row_axis)
+        ids, _, pack_ovf = fr.pack_frontier_ids(frontier, opts.queue_cap)
+        all_ids = expand_sparse_strategy.impl(ids, col_axis)     # (c*cap,)
+        frow = fr.unpack_row_frontier(all_ids, c, b)             # (c*b, 1)
+        valid = dst_fold >= 0
+        active = (frow[src_rowlocal, 0] > 0) & valid
+        buckets, local_mask, _, bucket_ovf = fr.build_queue_buckets_2d(
+            dst_fold, active, part2, me_row, opts.queue_cap,
+            local_update=opts.local_update, dedupe=opts.dedupe)
+        # Exactness guarantee: if any device's frontier pack or any send
+        # bucket overflowed, run the whole level densely instead (the
+        # predicate is replicated over both grid axes, so every device
+        # takes the same branch and collectives stay collective).
+        overflow_any = lax.psum(
+            (pack_ovf | bucket_ovf).astype(jnp.int32), grid_axes) > 0
+
+        def sparse_branch():
+            recv = fold_sparse_strategy.impl(buckets, row_axis)  # (r, cap)
+            own = jnp.maximum(fr.apply_queue(recv, me_row, b), local_mask)
+            d2, new = _owned_update(dist, own[:, None], level)
+            return d2, new, sparse_bytes
+
+        def dense_branch():
+            # the sparse expand allgather above already ran, so an
+            # escalated level pays its bytes on top of the dense level's
+            d2, new, bb = dense_level(frontier, dist, level, src_rowlocal,
+                                      dst_fold)
+            return d2, new, bb + expand_sparse_bytes
+
+        d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
+        return d2, new, bytes_, overflow_any
+
+    def body(state, src_rowlocal, dst_fold, in_src_global, in_dst_local,
+             out_degree, valid_local):
+        dist, frontier, level, _, bytes_acc, overflowed, modes = state
+
+        if opts.mode == "dense":
+            dist, new, bb = dense_level(frontier, dist, level, src_rowlocal,
+                                        dst_fold)
+            modes = modes.at[0].add(1)
+            ovf = jnp.bool_(False)
+        elif opts.mode == "queue":
+            dist, new, bb, ovf = queue_level(frontier, dist, level,
+                                             src_rowlocal, dst_fold)
+            modes = modes.at[1].add(1)
+        else:  # auto: direction-optimizing hybrid on the grid
+            f_verts = lax.psum(frontier.sum(dtype=jnp.int32), grid_axes)
+            f_edges = lax.psum(
+                (out_degree * frontier[:, 0].astype(jnp.int32)
+                 ).sum(dtype=jnp.int32), grid_axes)
+            big = f_verts > jnp.int32(bottom_up_cutoff)
+            tiny = f_edges < jnp.int32(queue_edge_cutoff)
+
+            def do_bottom_up():
+                d, nw, bb = bottom_up_level(frontier, dist, level,
+                                            in_src_global, in_dst_local)
+                return d, nw, bb, jnp.bool_(False), jnp.int32(2)
+
+            def do_queue():
+                d, nw, bb, ovf = queue_level(frontier, dist, level,
+                                             src_rowlocal, dst_fold)
+                return d, nw, bb, ovf, jnp.int32(1)
+
+            def do_dense():
+                d, nw, bb = dense_level(frontier, dist, level, src_rowlocal,
+                                        dst_fold)
+                return d, nw, bb, jnp.bool_(False), jnp.int32(0)
+
+            if s == 1:
+                dist, new, bb, ovf, which = lax.cond(
+                    big, do_bottom_up,
+                    lambda: lax.cond(tiny, do_queue, do_dense))
+            else:
+                dist, new, bb, ovf, which = lax.cond(big, do_bottom_up,
+                                                     do_dense)
+            modes = modes.at[which].add(1)
 
         # Mask padding vertices (ids >= n_logical can never be visited).
         new = new * valid_local[:, None].astype(new.dtype)
         dist = jnp.where(valid_local[:, None], dist, INF)
         active = lax.psum(new.sum(dtype=jnp.int32), grid_axes) > 0
-        return (dist, new, level + 1, active, bytes_acc + level_bytes,
-                overflowed, modes)
+        return (dist, new, level + 1, active, bytes_acc + bb,
+                overflowed | ovf, modes)
 
-    def shard_fn(src_rowlocal, dst_fold, dist0, frontier0, valid_local):
+    def _run(src_rowlocal, dst_fold, in_src_global, in_dst_local,
+             out_degree, dist0, frontier0, valid_local):
         if on_trace is not None:
             on_trace()
         state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
@@ -337,11 +459,21 @@ def _make_shard_fn_2d(part2: Partition2D, s: int, row_axis, col_axis,
             return st[3] & (st[2] <= max_levels)
 
         def body_fn(st):
-            return body(st, src_rowlocal, dst_fold, valid_local)
+            return body(st, src_rowlocal, dst_fold, in_src_global,
+                        in_dst_local, out_degree, valid_local)
 
         dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
             cond, body_fn, state0)
         return dist, level - 1, bytes_acc, overflowed, modes
+
+    if opts.mode == "auto":
+        shard_fn = _run
+    else:
+        # dense/queue loops never read the bottom-up blocks; the engine
+        # uploads only (src_rowlocal, dst_fold) for them
+        def shard_fn(src_rowlocal, dst_fold, dist0, frontier0, valid_local):
+            return _run(src_rowlocal, dst_fold, None, None, None,
+                        dist0, frontier0, valid_local)
 
     return shard_fn
 

@@ -145,6 +145,8 @@ class BFSPlan:
     graph2d: Optional["ShardedGraph2D"] = None
     expand_strategy: Optional[ex.ExchangeStrategy] = None
     fold_strategy: Optional[ex.ExchangeStrategy] = None
+    expand_sparse_strategy: Optional[ex.ExchangeStrategy] = None
+    fold_sparse_strategy: Optional[ex.ExchangeStrategy] = None
 
     def describe(self) -> dict:
         """Static plan metadata (the non-per-run half of the old BFSStats)."""
@@ -163,17 +165,38 @@ class BFSPlan:
         }
         if self.partition == "2d":
             part2 = self.graph2d.part
+            r, c, s = part2.r, part2.c, self.num_sources
+            cap = self.opts.queue_cap
+            phase_bytes = {
+                # per-phase byte split of every level variant: row phase
+                # then column phase, dense bitmaps vs sparse id buffers
+                "expand": self.expand_strategy.bytes_model(
+                    part2.n, r, c, s, 1),
+                "fold": self.fold_strategy.bytes_model(part2.n, r, c, s, 1),
+                "expand_sparse": self.expand_sparse_strategy.bytes_model(
+                    r, c, cap, 4),
+                "fold_sparse": self.fold_sparse_strategy.bytes_model(
+                    r, c, cap, 4),
+            }
             meta.update({
-                "grid": (part2.r, part2.c),
+                "grid": (r, c),
                 "expand_exchange": self.expand_strategy.name,
                 "fold_exchange": self.fold_strategy.name,
+                "expand_sparse_exchange": self.expand_sparse_strategy.name,
+                "fold_sparse_exchange": self.fold_sparse_strategy.name,
+                # (no in_e_cap here: the bottom-up blocks build lazily at
+                # compile time for auto plans; describe() must stay cheap)
                 "e_cap": self.graph2d.e_cap,
-                # per-level exchange bytes = row phase + column phase
-                "dense_level_bytes": (
-                    self.expand_strategy.bytes_model(
-                        part2.n, part2.r, part2.c, self.num_sources, 1) +
-                    self.fold_strategy.bytes_model(
-                        part2.n, part2.r, part2.c, self.num_sources, 1)),
+                "phase_bytes": phase_bytes,
+                # per-level exchange bytes of each mode a traversal can
+                # take (mode_counts in BFSRunStats says how many of each
+                # actually ran)
+                "dense_level_bytes": (phase_bytes["expand"]
+                                      + phase_bytes["fold"]),
+                "queue_level_bytes": (phase_bytes["expand_sparse"]
+                                      + phase_bytes["fold_sparse"]),
+                "bottom_up_level_bytes": ex.bottomup_level_bytes(
+                    part2.n, part2.p, s, 1),
             })
         else:
             meta.update({
@@ -183,6 +206,10 @@ class BFSPlan:
                 "in_e_cap": self.graph.in_e_cap,
                 "dense_level_bytes": self.dense_strategy.bytes_model(
                     part.n, part.p, self.num_sources, 1, self.axes_sizes),
+                "queue_level_bytes": self.queue_strategy.bytes_model(
+                    part.p, self.opts.queue_cap, 4),
+                "bottom_up_level_bytes": ex.bottomup_level_bytes(
+                    part.n, part.p, self.num_sources, 1),
             })
         return meta
 
@@ -226,12 +253,11 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         raise ValueError(f"unknown partition scheme {partition!r}; "
                          "expected '1d' | '2d'")
 
+    if opts.mode == "queue" and num_sources != 1:
+        raise ValueError("queue frontier supports a single source "
+                         f"(num_sources={num_sources})")
+
     if partition == "2d":
-        if opts.mode != "dense":
-            raise ValueError(
-                f"partition='2d' supports mode='dense' only (the fold "
-                f"phase already merges candidates network-side); got "
-                f"mode={opts.mode!r}")
         if opts.use_kernel:
             raise ValueError("use_kernel is a single-shard 1-D dense path; "
                              "not available with partition='2d'")
@@ -262,6 +288,7 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         else:
             graph2d = to_2d(graph, r, c)
         grid_args = (graph2d.part.n, r, c, s, 1)
+        sparse_args = (r, c, opts.queue_cap, 4)
         return BFSPlan(
             graph=graph, opts=opts, mesh=mesh, axis=axes,
             axes_sizes=(r, c), num_sources=s,
@@ -271,14 +298,16 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
                 "expand_row", opts.expand_exchange, grid_args),
             fold_strategy=_resolve_strategy(
                 "fold_col", opts.fold_exchange, grid_args),
+            expand_sparse_strategy=_resolve_strategy(
+                "expand_row_sparse", opts.expand_sparse_exchange,
+                sparse_args),
+            fold_sparse_strategy=_resolve_strategy(
+                "fold_col_sparse", opts.fold_sparse_exchange, sparse_args),
         )
 
     if isinstance(graph, ShardedGraph2D):
         raise ValueError("partition='1d' needs a 1-D ShardedGraph; this "
                          "graph holds 2-D edge blocks")
-    if opts.mode == "queue" and num_sources != 1:
-        raise ValueError("queue frontier supports a single source "
-                         f"(num_sources={num_sources})")
     if opts.use_kernel:
         # Pallas path precondition; AssertionError kept for back-compat.
         assert part.p == 1 and opts.mode == "dense", \
@@ -346,9 +375,16 @@ class BFSEngine:
             buf_owner = plan_.graph2d
             part = buf_owner.part
             shard_fn = _make_shard_fn_2d(
-                part, s, axis[0], axis[1], opts, plan_.max_levels,
-                plan_.expand_strategy, plan_.fold_strategy,
+                part, buf_owner.n_edges, s, axis[0], axis[1], opts,
+                plan_.max_levels, plan_.expand_strategy, plan_.fold_strategy,
+                plan_.expand_sparse_strategy, plan_.fold_sparse_strategy,
                 on_trace=self._bump_trace)
+            # only the auto hybrid's bottom-up level reads the in-edge
+            # blocks and out-degrees; dense/queue engines neither build
+            # nor upload them
+            edge_groups = [("edges", buf_owner.flat)]
+            if opts.mode == "auto":
+                edge_groups.append(("bottom_up", buf_owner.bottom_up_flat))
         else:
             buf_owner = plan_.graph
             part = buf_owner.part
@@ -358,9 +394,8 @@ class BFSEngine:
                 part, buf_owner.n_edges, s, axis, plan_.axes_sizes, opts,
                 plan_.max_levels, plan_.dense_strategy, plan_.queue_strategy,
                 expand_fn=expand_fn, on_trace=self._bump_trace)
+            edge_groups = [("edges", buf_owner.flat)]
         n = part.n
-        edge_host = buf_owner.flat()
-        n_edge_in = len(edge_host)
 
         spec_edge = P(axis)
         spec_vert = P(axis, None)
@@ -369,6 +404,30 @@ class BFSEngine:
         sh_repl = NamedSharding(mesh, P())
         self._sh_repl = sh_repl
 
+        # Graph blocks + validity mask live on device for the engine's
+        # lifetime; every run reuses them with zero H2D traffic.  They are
+        # cached per (mesh, axis, group) and shared across engines —
+        # compiling several option/S/mode variants of one graph must not
+        # duplicate its largest buffers (a 2-D auto engine adds only the
+        # bottom-up group on top of a dense engine's edge blocks).
+        dev_cache = buf_owner.__dict__.setdefault("_device_blocks", {})
+
+        def _cached(group, build):
+            bufs = dev_cache.get((mesh, axis, group))
+            if bufs is None:
+                bufs = build()
+                dev_cache[(mesh, axis, group)] = bufs
+            return bufs
+
+        self._gbufs = ()
+        for group, host_arrays in edge_groups:
+            self._gbufs += _cached(group, lambda ha=host_arrays: tuple(
+                jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
+                for a in ha()))
+        self._valid = _cached("valid", lambda: jax.device_put(
+            np.arange(n) < part.n_logical, sh_edge))
+        n_edge_in = len(self._gbufs)
+
         mapped = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(spec_edge,) * n_edge_in + (spec_vert, spec_vert,
@@ -376,22 +435,6 @@ class BFSEngine:
             out_specs=(spec_vert, P(), P(), P(), P()),
             check_vma=False,
         )
-
-        # Graph blocks + validity mask live on device for the engine's
-        # lifetime; every run reuses them with zero H2D traffic.  They are
-        # shared across engines on the same (mesh, axis) — compiling
-        # several option/S variants of one graph must not duplicate its
-        # largest buffers.
-        dev_cache = buf_owner.__dict__.setdefault("_device_blocks", {})
-        bufs = dev_cache.get((mesh, axis))
-        if bufs is None:
-            valid = np.arange(n) < part.n_logical
-            bufs = (tuple(
-                jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
-                for a in edge_host),
-                jax.device_put(valid, sh_edge))
-            dev_cache[(mesh, axis)] = bufs
-        self._gbufs, self._valid = bufs
 
         dist_sds = jax.ShapeDtypeStruct((n, s), jnp.int32, sharding=sh_vert)
         front_sds = jax.ShapeDtypeStruct((n, s), jnp.uint8, sharding=sh_vert)

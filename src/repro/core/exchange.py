@@ -70,7 +70,14 @@ _REGISTRY: dict = {}          # (kind, name) -> ExchangeStrategy
 #                (c participants); byte model (n, r, c, s, itemsize)
 #   fold_col   — 2-D fold phase: candidate merge across a grid column
 #                (r participants); byte model (n, r, c, s, itemsize)
-KINDS = ("dense", "queue", "expand_row", "fold_col")
+#   expand_row_sparse — sparse expand phase: active frontier *ids* across
+#                a grid row instead of the bitmap; byte model
+#                (r, c, cap, itemsize)
+#   fold_col_sparse   — sparse fold phase: per-row-rank candidate id
+#                buckets down a grid column; byte model (r, c, cap,
+#                itemsize)
+KINDS = ("dense", "queue", "expand_row", "fold_col",
+         "expand_row_sparse", "fold_col_sparse")
 
 
 def _check_kind(kind: str) -> None:
@@ -157,6 +164,8 @@ DENSE_STRATEGIES = _StrategyNames("dense")
 QUEUE_STRATEGIES = _StrategyNames("queue")
 EXPAND_ROW_STRATEGIES = _StrategyNames("expand_row")
 FOLD_COL_STRATEGIES = _StrategyNames("fold_col")
+EXPAND_ROW_SPARSE_STRATEGIES = _StrategyNames("expand_row_sparse")
+FOLD_COL_SPARSE_STRATEGIES = _StrategyNames("fold_col_sparse")
 
 
 def axis_size(axis: AxisName) -> int:
@@ -312,6 +321,52 @@ def _fold_col_reduce_scatter(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
     return (own > 0).astype(cand.dtype)
 
 
+# --- sparse 2-D phases: ship ids instead of bitmaps (paper §5.1 on the
+# grid).  Payload scales with the frontier (cap ids), not with n/p, so the
+# narrow first/last levels cost (c-1)·cap + (r-1)·cap id-bytes instead of
+# (c-1 + r-1)·n/p mask-bytes.  Byte-model signature: (r, c, cap, itemsize).
+
+def _bytes_expand_sparse_allgather(r, c, cap, itemsize):
+    return (c - 1) * cap * itemsize
+
+
+@register_exchange("expand_row_sparse", "allgather",
+                   _bytes_expand_sparse_allgather)
+def _expand_row_sparse_allgather(ids: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # (cap,) local active-frontier ids -> (c*cap,) row concatenation;
+    # segment j holds grid column j's ids (unpack_row_frontier rebuilds
+    # the row bitmap from the static segment offsets).
+    return lax.all_gather(ids, axis, tiled=True)
+
+
+def _bytes_fold_sparse_alltoall(r, c, cap, itemsize):
+    return (r - 1) * cap * itemsize
+
+
+@register_exchange("fold_col_sparse", "alltoall_direct",
+                   _bytes_fold_sparse_alltoall)
+def _fold_col_sparse_alltoall(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # Paper §5.1-2 down a grid column: bucket rr goes straight to the
+    # device at row rank rr.  (r, cap) -> (r, cap): row rr = what the
+    # column peer at row rank rr sent me.
+    return lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0,
+                          tiled=True)
+
+
+def _bytes_fold_sparse_allgather(r, c, cap, itemsize):
+    return (r - 1) * r * cap * itemsize
+
+
+@register_exchange("fold_col_sparse", "allgather_merge",
+                   _bytes_fold_sparse_allgather)
+def _fold_col_sparse_allgather(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
+    # [2]-style aggregate-everywhere baseline on the column: every device
+    # receives every bucket and keeps the rows addressed to it.
+    allb = lax.all_gather(buckets, axis)         # (r, r, cap)
+    me = axis_index(axis)
+    return lax.dynamic_slice_in_dim(allb, me, 1, axis=1)[:, 0]
+
+
 def expand_row(frontier: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
     """2-D expand phase: (b, S) chunk -> (c*b, S) grid-row frontier."""
     return get_exchange("expand_row", strategy).impl(frontier, axis)
@@ -400,3 +455,14 @@ def grid_level_bytes(expand_strategy: str, fold_strategy: str, n: int,
                 n, r, c, s, itemsize) +
             get_exchange("fold_col", fold_strategy).bytes_model(
                 n, r, c, s, itemsize))
+
+
+def grid_sparse_level_bytes(expand_strategy: str, fold_strategy: str,
+                            r: int, c: int, cap: int,
+                            itemsize: int = 4) -> float:
+    """Bytes received per chip for one sparse 2-D level (id buffers on
+    both phases; payload independent of n)."""
+    return (get_exchange("expand_row_sparse", expand_strategy).bytes_model(
+                r, c, cap, itemsize) +
+            get_exchange("fold_col_sparse", fold_strategy).bytes_model(
+                r, c, cap, itemsize))

@@ -17,6 +17,13 @@ Two statically-shaped frontier representations:
 straight to the local bitmap and *excluded* from the send buffers ("added
 conditional check to see if current processor is owner ... resulted into
 relatively lower buffer size").
+
+The 2-D edge partition reuses both representations per phase:
+``pack_frontier_ids``/``unpack_row_frontier`` make the expand-phase row
+allgather sparse (ship active ids, not the bitmap), and
+``build_queue_buckets_2d`` buckets fold-layout candidates by column-owner
+row rank — the §5.1 local-update exclusion and dense-escalation-on-
+overflow contracts carry over unchanged.
 """
 
 from __future__ import annotations
@@ -91,8 +98,16 @@ def expand_dense_2d(frontier_row: jnp.ndarray, src_rowlocal: jnp.ndarray,
 def expand_bottom_up(frontier_global: jnp.ndarray, in_src_global: jnp.ndarray,
                      in_dst_local: jnp.ndarray, shard: int) -> jnp.ndarray:
     """Bottom-up: each local vertex checks whether any in-neighbor is in
-    the (replicated) frontier.  Returns (shard, S) uint8 candidates."""
-    valid = in_src_global >= 0
+    the (replicated) frontier.  Returns (shard, S) uint8 candidates.
+
+    An in-edge is live only when *both* endpoints are in range: a padded
+    slot whose destination is the ``-1`` sentinel but whose source field
+    happens to hold a valid id would otherwise wrap (``.at[-1]``) and
+    scatter into the shard's last row — regression-pinned in
+    tests/test_core_bfs.py.
+    """
+    valid = ((in_src_global >= 0)
+             & (in_dst_local >= 0) & (in_dst_local < shard))
     src = jnp.where(valid, in_src_global, 0)
     vals = frontier_global[src] * valid[:, None].astype(frontier_global.dtype)
     idx = jnp.where(valid, in_dst_local, shard)
@@ -100,6 +115,54 @@ def expand_bottom_up(frontier_global: jnp.ndarray, in_src_global: jnp.ndarray,
                      dtype=frontier_global.dtype)
     cand = cand.at[idx].max(vals)
     return cand[:shard]
+
+
+def _dedupe_owner(ids: jnp.ndarray, active: jnp.ndarray, owner: jnp.ndarray,
+                  sentinel: int, n_owners: int) -> jnp.ndarray:
+    """Mask ``owner`` to ``n_owners`` for every duplicate active id.
+
+    Drop duplicate targets before they hit the wire: sort by target, keep
+    first occurrence.  (Beyond-paper: the paper ships dupes and dedupes at
+    the owner via the d[u]=inf check.)  ``sentinel`` must be the *padded*
+    id-space size: every storable id is strictly below it, so it can never
+    collide with a padding id at the last shard boundary — the old
+    ``padded_size + 1`` sentinel also sat outside the id range but
+    overflows int32 when the padded size is itself ``INT32_MAX``
+    (regression-pinned in tests/test_partition_and_registry.py).
+    """
+    e = ids.shape[0]
+    tgt = jnp.where(active, ids, jnp.int32(sentinel))
+    order = jnp.argsort(tgt)
+    sorted_tgt = tgt[order]
+    first = jnp.concatenate([jnp.array([True]),
+                             sorted_tgt[1:] != sorted_tgt[:-1]])
+    keep = jnp.zeros((e,), bool).at[order].set(first)
+    return jnp.where(keep, owner, n_owners)
+
+
+def _pack_buckets(ids: jnp.ndarray, owner: jnp.ndarray, n_owners: int,
+                  cap: int):
+    """Stable bucket packing: sort ids by owner, rank within bucket.
+
+    ``owner[k] == n_owners`` marks id ``k`` unsendable (inactive, deduped
+    or locally applied).  Returns ((n_owners, cap) int32 buckets -1 padded,
+    () int32 sent count, () bool overflow).
+    """
+    e = ids.shape[0]
+    sort_idx = jnp.argsort(owner)                      # (E,)
+    owner_s = owner[sort_idx]
+    ids_s = ids[sort_idx]
+    starts = jnp.searchsorted(owner_s, jnp.arange(n_owners + 1))
+    rank = jnp.arange(e) - starts[jnp.clip(owner_s, 0, n_owners)]
+    sendable = owner_s < n_owners
+    in_cap = sendable & (rank < cap)
+    slot = jnp.where(in_cap, owner_s * cap + rank, n_owners * cap)
+    buf = jnp.full((n_owners * cap + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(in_cap, ids_s, -1).astype(jnp.int32))
+    buckets = buf[: n_owners * cap].reshape(n_owners, cap)
+    n_sent = in_cap.sum().astype(jnp.int32)
+    overflow = (sendable & (rank >= cap)).any()
+    return buckets, n_sent, overflow
 
 
 def build_queue_buckets(dst_global: jnp.ndarray, active: jnp.ndarray,
@@ -117,20 +180,10 @@ def build_queue_buckets(dst_global: jnp.ndarray, active: jnp.ndarray,
                  the dense representation).
     """
     p, shard = part.p, part.shard_size
-    e = dst_global.shape[0]
     owner = jnp.where(active, dst_global // shard, p)
 
     if dedupe:
-        # Drop duplicate targets before they hit the wire: sort by target,
-        # keep first occurrence.  (Beyond-paper: the paper ships dupes and
-        # dedupes at the owner via the d[u]=inf check.)
-        tgt = jnp.where(active, dst_global, jnp.int32(part.n + 1))
-        order = jnp.argsort(tgt)
-        sorted_tgt = tgt[order]
-        first = jnp.concatenate([jnp.array([True]),
-                                 sorted_tgt[1:] != sorted_tgt[:-1]])
-        keep = jnp.zeros((e,), bool).at[order].set(first)
-        owner = jnp.where(keep, owner, p)
+        owner = _dedupe_owner(dst_global, active, owner, part.n, p)
 
     local_mask = jnp.zeros((shard,), jnp.uint8)
     if local_update:
@@ -140,21 +193,80 @@ def build_queue_buckets(dst_global: jnp.ndarray, active: jnp.ndarray,
             mine.astype(jnp.uint8))[:shard]
         owner = jnp.where(mine, p, owner)
 
-    # Stable bucket packing: sort edges by owner, rank within bucket.
-    sort_idx = jnp.argsort(owner)                      # (E,)
-    owner_s = owner[sort_idx]
-    dst_s = dst_global[sort_idx]
-    starts = jnp.searchsorted(owner_s, jnp.arange(p + 1))  # bucket offsets
-    rank = jnp.arange(e) - starts[jnp.clip(owner_s, 0, p)]
-    sendable = owner_s < p
-    in_cap = sendable & (rank < cap)
-    slot = jnp.where(in_cap, owner_s * cap + rank, p * cap)
-    buf = jnp.full((p * cap + 1,), -1, jnp.int32).at[slot].set(
-        jnp.where(in_cap, dst_s, -1).astype(jnp.int32))
-    buckets = buf[: p * cap].reshape(p, cap)
-    n_sent = in_cap.sum().astype(jnp.int32)
-    overflow = (sendable & (rank >= cap)).any()
+    buckets, n_sent, overflow = _pack_buckets(dst_global, owner, p, cap)
     return buckets, local_mask, n_sent, overflow
+
+
+def build_queue_buckets_2d(dst_fold: jnp.ndarray, active: jnp.ndarray,
+                           part2, me_row: jnp.ndarray, cap: int,
+                           local_update: bool = True, dedupe: bool = True):
+    """2-D analog of ``build_queue_buckets`` in the fold layout.
+
+    Buckets active candidate targets by *column-owner row rank*
+    (``dst_fold // b``): bucket ``rr`` travels down this device's grid
+    column to the device at row rank ``rr``, which owns exactly the fold
+    slice ``[rr*b, (rr+1)*b)``.  The §5.1 local-update exclusion applies
+    with the device's own row rank (targets this device owns skip the
+    wire); the dedupe sentinel is the padded fold-layout size ``r*b``
+    (strictly above every storable fold index).  Returns
+    (buckets (r, cap) int32 fold ids -1 padded, local_mask (b,) uint8,
+    n_sent () int32, overflow () bool).
+    """
+    r, b = part2.r, part2.shard_size
+    owner = jnp.where(active, dst_fold // b, r)
+
+    if dedupe:
+        owner = _dedupe_owner(dst_fold, active, owner, part2.fold_size, r)
+
+    local_mask = jnp.zeros((b,), jnp.uint8)
+    if local_update:
+        mine = owner == me_row
+        lid = jnp.where(mine, dst_fold - me_row * b, b)
+        local_mask = jnp.zeros((b + 1,), jnp.uint8).at[lid].max(
+            mine.astype(jnp.uint8))[:b]
+        owner = jnp.where(mine, r, owner)
+
+    buckets, n_sent, overflow = _pack_buckets(dst_fold, owner, r, cap)
+    return buckets, local_mask, n_sent, overflow
+
+
+def pack_frontier_ids(frontier: jnp.ndarray, cap: int):
+    """Pack the active local frontier (single-source column) into a
+    fixed-capacity id buffer for the sparse expand phase.
+
+    frontier: (shard, 1) uint8.  Returns (ids (cap,) int32 local ids -1
+    padded, count () int32, overflow () bool — more active vertices than
+    ``cap``; the caller escalates the level to the dense representation).
+    """
+    shard = frontier.shape[0]
+    act = frontier[:, 0] > 0
+    lid = jnp.where(act, jnp.arange(shard), shard)
+    if cap > shard:
+        lid = jnp.concatenate(
+            [lid, jnp.full((cap - shard,), shard, lid.dtype)])
+    packed = jnp.sort(lid)[:cap]                 # active ids sort first
+    ids = jnp.where(packed < shard, packed, -1).astype(jnp.int32)
+    count = act.sum(dtype=jnp.int32)
+    overflow = count > cap
+    return ids, count, overflow
+
+
+def unpack_row_frontier(all_ids: jnp.ndarray, c: int,
+                        shard: int) -> jnp.ndarray:
+    """Rebuild a grid row's frontier bitmap from c gathered id buffers.
+
+    all_ids: (c*cap,) int32 — the row allgather of every row peer's
+    ``pack_frontier_ids`` buffer, segment ``j`` holding local ids of the
+    chunk at grid column ``j``.  Returns (c*shard, 1) uint8 — the same
+    row-block layout ``expand_dense_2d`` consumes.
+    """
+    cap = all_ids.shape[0] // c
+    seg = jnp.repeat(jnp.arange(c), cap)
+    ok = (all_ids >= 0) & (all_ids < shard)
+    pos = jnp.where(ok, all_ids + seg * shard, c * shard)
+    frow = jnp.zeros((c * shard + 1,), jnp.uint8).at[pos].max(
+        ok.astype(jnp.uint8))
+    return frow[: c * shard][:, None]
 
 
 def apply_queue(recv: jnp.ndarray, me: jnp.ndarray, shard: int) -> jnp.ndarray:

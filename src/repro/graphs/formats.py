@@ -155,8 +155,20 @@ class ShardedGraph2D:
       dst_fold:     (p, e_cap) int32 — target in the transposed fold layout
         ``row_rank(owner(dst)) * b + local_id(dst)``; -1 = padding.
 
-    No in-edge blocks: the fold phase already merges candidates across the
-    grid column, so 2-D BFS has no separate bottom-up path (yet).
+    For the direction-optimizing bottom-up level, in-edges are bucketed a
+    second time by the *owner cell of the target* (each device holds the
+    in-edges of the vertices it owns, like the 1-D container).  Those
+    blocks are derived lazily — ``bottom_up_blocks()`` builds and caches
+    them on first use, so dense-mode engines never pay their host build
+    time or device memory:
+
+      in_src_global: (p, in_e_cap) int32 — global source id (an index into
+        the fully gathered ``(n, S)`` frontier); -1 = padding.
+      in_dst_local:  (p, in_e_cap) int32 — target local id in ``[0, b)``;
+        -1 = padding.
+      out_degree:    (p, b) int32 — out-degree of every owned (padded)
+        vertex; drives the replicated frontier-edge statistic of the
+        per-level ``auto`` mode decision.
     """
 
     part: Partition2D
@@ -175,6 +187,64 @@ class ShardedGraph2D:
     def flat(self):
         """Arrays reshaped to (p * cap,) so shard_map can slice dim 0."""
         return (self.src_rowlocal.reshape(-1), self.dst_fold.reshape(-1))
+
+    def edge_list(self):
+        """Reconstruct the global COO edge list from the cell blocks.
+
+        Order is cell-bucketed, not the original insertion order — fine
+        for re-bucketing (the bottom-up blocks below) and degree math.
+        """
+        part = self.part
+        b, c = part.shard_size, part.c
+        cell = np.arange(self.p, dtype=np.int64)[:, None]       # (p, 1)
+        valid = self.dst_fold >= 0
+        src = (self.src_rowlocal.astype(np.int64)
+               + (cell // c) * part.row_block_size)[valid]
+        vf = self.dst_fold.astype(np.int64)
+        # invert fold_index: owner = row_rank * c + grid_col(cell)
+        dst = (((vf // b) * c + cell % c) * b + vf % b)[valid]
+        return src, dst
+
+    def bottom_up_blocks(self):
+        """(in_src_global, in_dst_local, out_degree) — built and cached on
+        first use (the ``auto`` engine's bottom-up level needs them; the
+        dense and queue level loops never do)."""
+        cached = self.__dict__.get("_bottom_up_blocks")
+        if cached is None:
+            part = self.part
+            src, dst = self.edge_list()
+            own_d = np.asarray(part.owner(dst))
+            max_in = (int(np.bincount(own_d, minlength=self.p).max())
+                      if src.size else 0)
+            cap_in = max(_pad_to(max(max_in, 1), _ALIGN), _ALIGN)
+            (in_s_glob, in_d_loc), _ = _bucket(
+                own_d, self.p, [src, np.asarray(part.local_id(dst))],
+                cap_in, fills=(-1, -1))
+            out_degree = np.bincount(src, minlength=part.n).reshape(
+                self.p, part.shard_size).astype(np.int32)
+            cached = (in_s_glob, in_d_loc, out_degree)
+            self.__dict__["_bottom_up_blocks"] = cached
+        return cached
+
+    def bottom_up_flat(self):
+        """``bottom_up_blocks()`` reshaped to (p * cap,) for shard_map."""
+        return tuple(a.reshape(-1) for a in self.bottom_up_blocks())
+
+    @property
+    def in_src_global(self) -> np.ndarray:
+        return self.bottom_up_blocks()[0]
+
+    @property
+    def in_dst_local(self) -> np.ndarray:
+        return self.bottom_up_blocks()[1]
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return self.bottom_up_blocks()[2]
+
+    @property
+    def in_e_cap(self) -> int:
+        return self.in_src_global.shape[1]
 
 
 def shard_graph_2d(src: np.ndarray, dst: np.ndarray, n: int, r: int, c: int,

@@ -70,8 +70,6 @@ def main():
             r, c = default_grid(p)
         mesh = make_grid_mesh(r, c)
         axis = None                          # plan uses the mesh's two axes
-        if args.mode != "dense":
-            print(f"partition=2d forces mode=dense (requested {args.mode})")
         # --exchange names a *dense* (1-D) strategy; the 2-D phases use
         # expand/fold strategies.  Honor it when it is also a registered
         # fold strategy, otherwise say so instead of silently dropping it.
@@ -83,9 +81,11 @@ def main():
             print(f"partition=2d ignores --exchange={args.exchange} "
                   f"(uses expand/fold strategies; fold options: "
                   f"{tuple(FOLD_COL_STRATEGIES)})")
-        opts = BFSOptions(mode="dense", fold_exchange=fold,
+        # every mode works over grids: queue levels bucket fold-layout ids
+        # down grid columns, auto switches per level (sparse needs S=1)
+        opts = BFSOptions(mode=args.mode, fold_exchange=fold,
                           queue_cap=1 << 15)
-        print(f"graph={kind} n={n} grid={r}x{c} (p={r*c})")
+        print(f"graph={kind} n={n} grid={r}x{c} (p={r*c}) mode={args.mode}")
     else:
         mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
         axis = "p"
@@ -95,8 +95,8 @@ def main():
     t0 = time.time()
     src, dst = generate(kind, n, seed=0, **kw)
     if args.partition == "2d":
-        # bucket straight into the r x c edge blocks: one _bucket pass,
-        # no unused in-edge arrays at production sizes
+        # bucket straight into the r x c edge blocks; the bottom-up
+        # in-edge blocks build lazily iff mode=auto compiles them
         g = shard_graph_2d(src, dst, n, r, c)
     else:
         g = shard_graph(src, dst, n, int(np.prod(list(mesh.shape.values()))))

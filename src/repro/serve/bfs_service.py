@@ -47,7 +47,10 @@ class BFSService:
                              "single-source — use dense or auto")
         self.graph = graph
         # partition passes straight through the lifecycle: serving over
-        # the 2-D edge-partitioned engine is the same code path.
+        # the 2-D edge-partitioned engine is the same code path, and the
+        # direction-optimizing mode="auto" works over grids too (per-level
+        # dense/bottom-up switching; sparse levels need S=1, which batched
+        # serving never compiles).
         self.engine = plan(graph, opts, mesh=mesh, axis=axis,
                            num_sources=batch_slots,
                            partition=partition).compile()
@@ -92,9 +95,22 @@ class BFSService:
         return finished
 
     def run_until_drained(self, max_steps: int = 10_000):
+        """Step until every submitted request has finished.
+
+        Raises ``RuntimeError`` if the queue is not drained within
+        ``max_steps`` engine runs — previously this returned the partial
+        result list silently, so a caller could mistake a truncated drain
+        for completion and never see the still-queued requests.
+        """
         done = []
         for _ in range(max_steps):
-            done += self.step()
             if self.pool.drained():
                 break
+            done += self.step()
+        if not self.pool.drained():
+            pending = len(self.pool.queue) + int(self.pool.live().sum())
+            raise RuntimeError(
+                f"run_until_drained: {pending} request(s) still pending "
+                f"after max_steps={max_steps} engine runs ({len(done)} "
+                f"finished); raise max_steps or submit fewer requests")
         return done

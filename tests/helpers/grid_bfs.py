@@ -6,6 +6,13 @@ the rest of the suite sees a single device (per the dry-run isolation
 rule).  Checks every grid shape of 4 devices (2x2, 4x1, 1x4) against the
 serial reference, the numpy 2-D phase simulation, and the 1-D engine
 (bitwise), plus the r + c < p byte-model claim on the square grid.
+
+The direction-optimizing section runs the erdos_renyi / star / chain /
+rmat / small_world families in mode="auto" on the requested grid and the
+degenerate 4x1 / 1x4 shapes — bitwise against the 1-D auto engine and the
+numpy hybrid-schedule simulation (mode_counts included) — and forces a
+queue_cap overflow to prove the dense escalation stays exact and sets the
+overflowed flag.
 """
 
 import argparse
@@ -68,6 +75,67 @@ def check_grid(r, c, kind, n, sources, seed=0, fold="alltoall_reduce",
     return ok
 
 
+def check_grid_auto(r, c, kind, n, source, seed=0, queue_cap=256,
+                    expect_sparse=False, **gkw):
+    """mode="auto" on the grid: bitwise vs serial reference, the 1-D auto
+    engine, and the numpy hybrid simulation (schedule counts included)."""
+    p = r * c
+    src, dst = generate(kind, n, seed=seed, **gkw)
+    g = shard_graph(src, dst, n, p)
+    want = bfs_reference(src, dst, n, [source])
+    opts = BFSOptions(mode="auto", queue_cap=queue_cap)
+
+    mesh2 = make_grid_mesh(r, c)
+    eng2 = plan(g, opts, mesh=mesh2, num_sources=1, partition="2d").compile()
+    res = eng2.run([source])
+    st = res.stats()
+    ok = np.array_equal(res.dist_host, want)
+
+    mesh1 = Mesh(np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+    eng1 = plan(g, opts, mesh=mesh1, axis="p", num_sources=1).compile()
+    ok &= np.array_equal(eng1.run([source]).dist_host, res.dist_host)
+
+    want2, sched = bfs_reference_2d(src, dst, n, [source], r, c, mode="auto",
+                                    queue_cap=queue_cap,
+                                    return_schedule=True)
+    ok &= np.array_equal(want2, want)
+    counts = {k: sum(1 for e in sched if e["kind"] == k)
+              for k in ("dense", "queue", "bottom_up")}
+    ok &= st.mode_counts == counts and st.levels == len(sched)
+    if expect_sparse:   # narrow-frontier family must ride sparse levels
+        ok &= st.mode_counts["queue"] >= 1
+    ok &= eng2.trace_count == eng2.compile_traces
+    print(f"{f'grid-auto/{r}x{c}/{kind}':55s} levels={st.levels:4d} "
+          f"modes={st.mode_counts} bytes={st.comm_bytes:.2e} "
+          f"-> {'OK' if ok else 'MISMATCH'}")
+    return ok
+
+
+def check_grid_queue_overflow(r, c, n=2000, seed=2, queue_cap=8):
+    """Satellite: a forced queue_cap overflow on the device grid must
+    escalate to the dense level bitwise-exactly and set overflowed."""
+    p = r * c
+    src, dst = generate("erdos_renyi", n, seed=seed, avg_degree=10)
+    g = shard_graph(src, dst, n, p)
+    want = bfs_reference(src, dst, n, [0])
+    mesh2 = make_grid_mesh(r, c)
+    eng = plan(g, BFSOptions(mode="queue", queue_cap=queue_cap), mesh=mesh2,
+               num_sources=1, partition="2d").compile()
+    res = eng.run([0])
+    st = res.stats()
+    ok = np.array_equal(res.dist_host, want) and st.overflowed
+    # a roomy cap on the same graph never overflows
+    eng_big = plan(g, BFSOptions(mode="queue", queue_cap=n), mesh=mesh2,
+                   num_sources=1, partition="2d").compile()
+    res_big = eng_big.run([0])
+    ok &= np.array_equal(res_big.dist_host, want)
+    ok &= not res_big.stats().overflowed
+    print(f"{f'grid-queue-overflow/{r}x{c}/cap={queue_cap}':55s} "
+          f"levels={st.levels:4d} ovf={st.overflowed} "
+          f"-> {'OK' if ok else 'MISMATCH'}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=2)
@@ -81,12 +149,33 @@ def main():
     for kind, kw in (("erdos_renyi", dict(avg_degree=8)), ("star", {}),
                      ("chain", {})):
         ok &= check_grid(args.rows, args.cols, kind, n, [0, 17], seed=1, **kw)
+    # ROADMAP coverage: rmat + small-world through the grid harness
+    ok &= check_grid(args.rows, args.cols, "rmat", n, [0, 9], seed=1,
+                     edge_factor=8)
+    ok &= check_grid(args.rows, args.cols, "small_world", n, [0, 9], seed=1,
+                     k=6, beta=0.1)
     # degenerate grids: fold-only (4x1) and expand-only (1x4) columns/rows
     ok &= check_grid(4, 1, "erdos_renyi", n, [0], seed=2, avg_degree=8)
     ok &= check_grid(1, 4, "erdos_renyi", n, [0], seed=2, avg_degree=8)
     # alternative fold strategy end-to-end
     ok &= check_grid(args.rows, args.cols, "erdos_renyi", n, [5], seed=3,
                      fold="reduce_scatter", avg_degree=8)
+
+    # direction-optimizing hybrid on the grid (acceptance: bitwise parity
+    # over 2x2 / 4x1 / 1x4 with per-level mode switching)
+    for kind, nk, kw in (("erdos_renyi", n, dict(avg_degree=8)),
+                         ("star", n, {}),
+                         ("chain", 600, dict(expect_sparse=True)),
+                         ("rmat", n, dict(edge_factor=8)),
+                         ("small_world", n, dict(k=6, beta=0.1))):
+        ok &= check_grid_auto(args.rows, args.cols, kind, nk, 0, seed=1, **kw)
+    for r, c in ((4, 1), (1, 4)):
+        ok &= check_grid_auto(r, c, "erdos_renyi", n, 0, seed=2,
+                              avg_degree=8)
+        ok &= check_grid_auto(r, c, "chain", 600, 0, seed=2,
+                              expect_sparse=True)
+    # queue overflow -> dense escalation on the real device grid
+    ok &= check_grid_queue_overflow(args.rows, args.cols)
     sys.exit(0 if ok else 1)
 
 

@@ -149,10 +149,12 @@ def test_2d_plan_validation_and_describe():
     n = 300
     src, dst = generate("erdos_renyi", n, seed=2, avg_degree=5)
     g = shard_graph(src, dst, n, p=1)
-    with pytest.raises(ValueError, match="dense"):
-        plan(g, BFSOptions(mode="queue"), partition="2d")
-    with pytest.raises(ValueError, match="dense"):
-        plan(g, BFSOptions(mode="auto"), partition="2d")
+    # every mode plans in 2-D now; the queue frontier stays single-source
+    assert plan(g, BFSOptions(mode="queue"), partition="2d").partition == "2d"
+    assert plan(g, BFSOptions(mode="auto"), num_sources=3,
+                partition="2d").partition == "2d"
+    with pytest.raises(ValueError, match="single source"):
+        plan(g, BFSOptions(mode="queue"), num_sources=2, partition="2d")
     with pytest.raises(ValueError, match="use_kernel"):
         plan(g, BFSOptions(mode="dense", use_kernel=True), partition="2d")
     with pytest.raises(ValueError, match="partition"):
@@ -174,10 +176,143 @@ def test_2d_plan_validation_and_describe():
     assert meta["partition"] == "2d" and meta["grid"] == (1, 1)
     assert meta["expand_exchange"] == "allgather"
     assert meta["fold_exchange"] == "alltoall_reduce"
+    assert meta["expand_sparse_exchange"] == "allgather"
+    assert meta["fold_sparse_exchange"] == "alltoall_direct"
     assert meta["dense_level_bytes"] == 0  # single device: nothing on wire
-    # the 1-D describe is unchanged
+    # per-phase mode/byte split: every level variant is priced
+    assert set(meta["phase_bytes"]) == {"expand", "fold", "expand_sparse",
+                                        "fold_sparse"}
+    assert meta["queue_level_bytes"] == 0 and meta["bottom_up_level_bytes"] == 0
+    # the 1-D describe carries the same per-mode byte keys
     meta1 = plan(g, BFSOptions(mode="dense")).describe()
     assert meta1["partition"] == "1d" and "dense_exchange" in meta1
+    assert "queue_level_bytes" in meta1 and "bottom_up_level_bytes" in meta1
+
+
+# ---------------------------------------------------------------------------
+# direction-optimizing hybrid: queue / bottom-up / auto on the 2-D backend
+# ---------------------------------------------------------------------------
+
+HYBRID_GRAPHS = GRAPHS + (("rmat", dict(edge_factor=6)),)
+
+
+@pytest.mark.parametrize("kind,kw", HYBRID_GRAPHS)
+@pytest.mark.parametrize("mode", ["queue", "auto"])
+def test_2d_hybrid_modes_match_references_single_device(kind, kw, mode):
+    n = 400
+    src, dst = generate(kind, n, seed=3, **kw)
+    g = shard_graph(src, dst, n, p=1)
+    opts = BFSOptions(mode=mode, queue_cap=128)
+    eng = plan(g, opts, num_sources=1, partition="2d").compile()
+    res = eng.run([3])
+    want = bfs_reference(src, dst, n, [3])
+    np.testing.assert_array_equal(res.dist_host, want)
+    # bitwise equal to the 1-D engine in the same mode
+    eng1 = plan(g, opts, num_sources=1).compile()
+    np.testing.assert_array_equal(res.dist_host, eng1.run([3]).dist_host)
+    # ... and to the numpy hybrid phase simulation, schedule included
+    d2, sched = bfs_reference_2d(src, dst, n, [3], 1, 1, mode=mode,
+                                 queue_cap=128, return_schedule=True)
+    np.testing.assert_array_equal(res.dist_host, d2)
+    st = res.stats()
+    counts = {k: sum(1 for e in sched if e["kind"] == k)
+              for k in ("dense", "queue", "bottom_up")}
+    assert st.mode_counts == counts
+    assert st.levels == len(sched)
+
+
+def test_2d_auto_narrow_frontier_rides_sparse_levels():
+    """Acceptance: mode_counts shows non-dense levels on a narrow frontier
+    (every chain level holds <= 2 vertices -> all levels go sparse)."""
+    n = 300
+    src, dst = generate("chain", n, seed=0)
+    g = shard_graph(src, dst, n, p=1)
+    eng = plan(g, BFSOptions(mode="auto"), num_sources=1,
+               partition="2d").compile()
+    res = eng.run([0])
+    np.testing.assert_array_equal(res.dist_host,
+                                  bfs_reference(src, dst, n, [0]))
+    st = res.stats()
+    assert st.mode_counts["queue"] >= 1
+    assert st.mode_counts["queue"] + st.mode_counts["bottom_up"] > 0
+    assert not st.overflowed
+
+
+def test_2d_queue_overflow_escalates_to_dense_exactly():
+    """Satellite: a queue_cap overflow must fall back to the dense level
+    (bitwise-identical result) and set the overflowed flag."""
+    n = 400
+    src, dst = generate("erdos_renyi", n, seed=6, avg_degree=8)
+    g = shard_graph(src, dst, n, p=1)
+    want = bfs_reference(src, dst, n, [0])
+    # cap smaller than the mid-traversal frontier: pack/bucket overflow
+    tiny = plan(g, BFSOptions(mode="queue", queue_cap=4, local_update=False),
+                num_sources=1, partition="2d").compile().run([0])
+    np.testing.assert_array_equal(tiny.dist_host, want)
+    assert tiny.stats().overflowed
+    # with local_update=True the p=1 grid absorbs every target locally,
+    # so the overflow comes from the frontier-id pack instead
+    tiny_lu = plan(g, BFSOptions(mode="queue", queue_cap=4),
+                   num_sources=1, partition="2d").compile().run([0])
+    np.testing.assert_array_equal(tiny_lu.dist_host, want)
+    assert tiny_lu.stats().overflowed
+    # a roomy cap never overflows
+    big = plan(g, BFSOptions(mode="queue", queue_cap=n),
+               num_sources=1, partition="2d").compile().run([0])
+    np.testing.assert_array_equal(big.dist_host, want)
+    assert not big.stats().overflowed
+
+
+def test_2d_auto_multi_source_dense_bottom_up_only():
+    """S > 1 disables sparse levels (id buckets are single-source) but
+    keeps the dense/bottom-up switch; results stay exact."""
+    n = 500
+    src, dst = generate("erdos_renyi", n, seed=7, avg_degree=6)
+    g = shard_graph(src, dst, n, p=1)
+    eng = plan(g, BFSOptions(mode="auto"), num_sources=3,
+               partition="2d").compile()
+    res = eng.run([0, 9, 123])
+    np.testing.assert_array_equal(res.dist_host,
+                                  bfs_reference(src, dst, n, [0, 9, 123]))
+    assert res.stats().mode_counts["queue"] == 0
+
+
+def test_reference_2d_hybrid_schedule_and_validation():
+    n = 257
+    src, dst = generate("erdos_renyi", n, seed=1, avg_degree=6)
+    want = bfs_reference(src, dst, n, [0])
+    for r, c in ((1, 1), (2, 2), (2, 3)):
+        d2, sched = bfs_reference_2d(src, dst, n, [0], r, c, mode="auto",
+                                     queue_cap=64, return_schedule=True)
+        np.testing.assert_array_equal(d2, want, err_msg=f"{r}x{c}")
+        assert {e["kind"] for e in sched} <= {"dense", "queue", "bottom_up"}
+    with pytest.raises(ValueError, match="single source"):
+        bfs_reference_2d(src, dst, n, [0, 5], 1, 1, mode="queue")
+    with pytest.raises(ValueError, match="mode"):
+        bfs_reference_2d(src, dst, n, [0], 1, 1, mode="bogus")
+
+
+def test_shard_graph_2d_in_edges_and_degrees():
+    n, r, c = 50, 2, 3
+    src, dst = generate("erdos_renyi", n, seed=4, avg_degree=4)
+    g2 = shard_graph_2d(src, dst, n, r, c)
+    part = g2.part
+    b = part.shard_size
+    assert int((g2.in_src_global >= 0).sum()) == src.shape[0]
+    # every in-edge sits with the owner cell of its target
+    for cell in range(part.p):
+        sel = g2.in_src_global[cell] >= 0
+        assert (g2.in_dst_local[cell][sel] >= 0).all()
+        assert (g2.in_dst_local[cell][sel] < b).all()
+        v = cell * b + g2.in_dst_local[cell][sel]
+        assert (np.asarray(part.owner(v)) == cell).all()
+        # padded slots mark both endpoints
+        assert (g2.in_dst_local[cell][~sel] == -1).all()
+    assert g2.out_degree.shape == (part.p, b)
+    assert int(g2.out_degree.sum()) == src.shape[0]
+    np.testing.assert_array_equal(
+        g2.out_degree.reshape(-1)[:n],
+        np.bincount(np.asarray(src), minlength=n))
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +326,11 @@ def test_2d_modeled_bytes_strictly_below_1d_at_p4():
     two_d = ex.grid_level_bytes("allgather", "alltoall_reduce",
                                 part.n, 2, 2, s, 1)
     assert two_d < one_d                    # acceptance: strict at p=4
+    # sparse phases (id buffers) sit strictly below the dense bitmap
+    # phases at p=4 for any sane cap — the §5.1 narrow-level payoff
+    sparse = ex.grid_sparse_level_bytes("allgather", "alltoall_direct",
+                                        2, 2, 1024)
+    assert sparse < two_d
     # and the gap widens with p for square grids
     for p in (16, 64, 256):
         r = int(p ** 0.5)

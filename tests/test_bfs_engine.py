@@ -194,3 +194,23 @@ def test_bfs_service_batches_concurrent_requests():
     assert svc.engine.trace_count == svc.engine.compile_traces
     with pytest.raises(ValueError, match="outside"):
         svc.submit(TraversalRequest(rid=9, source=n + 1))
+
+
+def test_bfs_service_truncated_drain_raises():
+    """Satellite: exhausting max_steps with requests still queued must not
+    look like a completed drain."""
+    from repro.serve.bfs_service import BFSService, TraversalRequest
+
+    n = 300
+    src, dst, g = _graph(n, seed=8, deg=5)
+    svc = BFSService(g, BFSOptions(mode="dense"), batch_slots=1)
+    for i, s in enumerate([0, 5, 9]):   # 3 requests, 1 slot -> 3 steps
+        svc.submit(TraversalRequest(rid=i, source=s))
+    with pytest.raises(RuntimeError, match="still pending"):
+        svc.run_until_drained(max_steps=1)
+    # the remaining queue is still there and a full drain completes it
+    rest = svc.run_until_drained()
+    assert svc.pool.drained()
+    assert {r.source for r in rest} == {5, 9}
+    # an empty service drains immediately even with max_steps=0
+    assert svc.run_until_drained(max_steps=0) == []

@@ -86,6 +86,29 @@ def test_owner_matches_numpy_and_jnp():
                                   np.asarray(part.owner(v_j)))
 
 
+def test_expand_bottom_up_masks_both_endpoints():
+    """Regression: a padded in-edge whose destination is the -1 sentinel
+    but whose source field holds a valid id used to wrap (``.at[-1]``)
+    and scatter into the shard's *last* row; an out-of-range local id
+    must be dropped too, not land anywhere."""
+    import jax.numpy as jnp
+    from repro.core import frontier as fr
+
+    shard, n, s = 4, 8, 1
+    fglob = jnp.ones((n, s), jnp.uint8)          # every vertex in frontier
+    # one real edge (src 5 -> local 2); one pad with dst=-1 but src "valid";
+    # one pad with dst == shard (out of range) and src valid
+    in_src = jnp.array([5, 0, 3], jnp.int32)
+    in_dst = jnp.array([2, -1, shard], jnp.int32)
+    cand = fr.expand_bottom_up(fglob, in_src, in_dst, shard)
+    np.testing.assert_array_equal(
+        np.asarray(cand)[:, 0], np.array([0, 0, 1, 0], np.uint8))
+    # fully padded block: nothing scatters
+    cand0 = fr.expand_bottom_up(fglob, jnp.full((3,), -1, jnp.int32),
+                                jnp.full((3,), -1, jnp.int32), shard)
+    assert int(np.asarray(cand0).sum()) == 0
+
+
 def test_multidevice_bfs_subprocess():
     """Full 8-device matrix: strategies x modes x graph families."""
     env = dict(os.environ)

@@ -8,7 +8,8 @@ import pytest
 from repro.core import (BFSOptions, Partition1D, Partition2D, bfs,
                         get_exchange, plan, register_exchange, select_exchange,
                         unregister_exchange, DENSE_STRATEGIES,
-                        EXPAND_ROW_STRATEGIES, FOLD_COL_STRATEGIES,
+                        EXPAND_ROW_STRATEGIES, EXPAND_ROW_SPARSE_STRATEGIES,
+                        FOLD_COL_STRATEGIES, FOLD_COL_SPARSE_STRATEGIES,
                         QUEUE_STRATEGIES)
 from repro.core import exchange as ex
 from repro.graphs import generate, shard_graph
@@ -40,6 +41,54 @@ def test_partition1d_padding_ids_map_to_valid_shards(n_logical, p):
     owners = np.asarray(part.owner(v))
     assert owners.min() >= 0 and owners.max() < p
     assert part.counts_per_owner(v).sum() == part.n  # bincount never raised
+
+
+@pytest.mark.parametrize("n_logical,p", [
+    (10, 4),    # last shard half padding
+    (9, 4),     # one empty tail shard
+    (7, 3),
+])
+def test_queue_bucket_dedupe_sentinel_clears_padding_ids(n_logical, p):
+    """Satellite regression: the dedupe sentinel must sit outside the
+    *padded* id space [0, n).  Feed duplicate targets covering every
+    padded id — including the padding range at the last shard boundary —
+    and check each survives exactly once across buckets + local mask."""
+    import jax.numpy as jnp
+    from repro.core import frontier as fr
+
+    part = Partition1D(n_logical, p)
+    ids = np.arange(part.n, dtype=np.int32)
+    dst = jnp.asarray(np.concatenate([ids, ids]))        # every id twice
+    active = jnp.ones((dst.shape[0],), bool)
+    me = jnp.int32(p - 1)                                # the padded shard
+    buckets, local_mask, n_sent, overflow = fr.build_queue_buckets(
+        dst, active, part, me, cap=part.n, local_update=True, dedupe=True)
+    assert not bool(overflow)
+    sent = np.asarray(buckets).reshape(-1)
+    sent = sent[sent >= 0]
+    # remote shards' ids each exactly once, none lost to the sentinel
+    want_remote = ids[ids < (p - 1) * part.shard_size]
+    np.testing.assert_array_equal(np.sort(sent), want_remote)
+    assert int(n_sent) == want_remote.shape[0]
+    # locally-owned ids (incl. the padding ids) land in the local mask
+    np.testing.assert_array_equal(np.asarray(local_mask),
+                                  np.ones(part.shard_size, np.uint8))
+    # same contract for the 2-D fold-layout builder: sentinel is the
+    # padded fold size, so the maximal fold index dedupes cleanly
+    part2 = Partition2D(n_logical, 2, max(1, p // 2))
+    fold_ids = np.arange(part2.fold_size, dtype=np.int32)
+    dstf = jnp.asarray(np.concatenate([fold_ids, fold_ids]))
+    activef = jnp.ones((dstf.shape[0],), bool)
+    b2, lm2, ns2, ov2 = fr.build_queue_buckets_2d(
+        dstf, activef, part2, jnp.int32(0), cap=part2.fold_size,
+        local_update=True, dedupe=True)
+    assert not bool(ov2)
+    sent2 = np.asarray(b2).reshape(-1)
+    sent2 = sent2[sent2 >= 0]
+    np.testing.assert_array_equal(np.sort(sent2),
+                                  fold_ids[fold_ids >= part2.shard_size])
+    np.testing.assert_array_equal(np.asarray(lm2),
+                                  np.ones(part2.shard_size, np.uint8))
 
 
 def test_partition_shard_slicing_clips_to_logical_range():
@@ -105,6 +154,14 @@ def test_byte_models_monotone_in_n_and_zero_without_peers():
         m = get_exchange("queue", name).bytes_model
         assert m(1, 1024, 4) == 0, name                   # p=1: no wire
         assert m(8, 2048, 4) >= m(8, 1024, 4), name       # monotone in cap
+    for name in EXPAND_ROW_SPARSE_STRATEGIES:
+        m = get_exchange("expand_row_sparse", name).bytes_model
+        assert m(4, 1, 1024, 4) == 0, name                # c=1: no row peers
+        assert m(2, 4, 2048, 4) >= m(2, 4, 1024, 4), name
+    for name in FOLD_COL_SPARSE_STRATEGIES:
+        m = get_exchange("fold_col_sparse", name).bytes_model
+        assert m(1, 4, 1024, 4) == 0, name                # r=1: no col peers
+        assert m(4, 2, 2048, 4) >= m(4, 2, 1024, 4), name
 
 
 def test_select_exchange_picks_cheapest_by_model():
@@ -121,9 +178,17 @@ def test_select_exchange_picks_cheapest_by_model():
     pl = plan(g, BFSOptions(mode="dense", dense_exchange="auto"))
     assert pl.dense_strategy.name in DENSE_STRATEGIES
     pl2 = plan(g, BFSOptions(mode="dense", expand_exchange="auto",
-                             fold_exchange="auto"), partition="2d")
+                             fold_exchange="auto",
+                             expand_sparse_exchange="auto",
+                             fold_sparse_exchange="auto"), partition="2d")
     assert pl2.expand_strategy.name in EXPAND_ROW_STRATEGIES
     assert pl2.fold_strategy.name in FOLD_COL_STRATEGIES
+    assert pl2.expand_sparse_strategy.name in EXPAND_ROW_SPARSE_STRATEGIES
+    assert pl2.fold_sparse_strategy.name in FOLD_COL_SPARSE_STRATEGIES
+    # off the degenerate 1x1 grid the direct fold is strictly cheaper:
+    # (r-1)*cap received vs allgather_merge's (r-1)*r*cap
+    assert ex.select_exchange("fold_col_sparse", 4, 2, 1024,
+                              4).name == "alltoall_direct"
 
 
 # ---------------------------------------------------------------------------
@@ -166,3 +231,7 @@ def test_options_validate_rejects_unknown_2d_strategies():
         BFSOptions(expand_exchange="nope").validate()
     with pytest.raises(ValueError, match="registered"):
         BFSOptions(fold_exchange="nope").validate()
+    with pytest.raises(ValueError, match="registered"):
+        BFSOptions(expand_sparse_exchange="nope").validate()
+    with pytest.raises(ValueError, match="registered"):
+        BFSOptions(fold_sparse_exchange="nope").validate()
