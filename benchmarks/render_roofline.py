@@ -1,10 +1,16 @@
 """Render benchmark JSON ledgers as markdown tables.
 
-Two inputs render here: the §Roofline table from ``dryrun_results.json``,
-and the 1-D vs 2-D partition sweep from a ``BENCH_*.json`` (detected by
-its ``partition_sweep`` key).  Every series label carries the partition
-kind (``erdos_renyi_100k[1d]`` vs ``erdos_renyi_100k[2d]``) so the two
-schemes plot as distinct curves instead of collapsing into one.
+Three inputs render here: the §Roofline table from
+``dryrun_results.json``, and — from a ``BENCH_*.json`` — the 1-D vs 2-D
+partition sweep (``partition_sweep`` key) and the multi-graph serving
+amortization ledger (``serving`` key: per-graph cold compile vs warm run,
+plus the budget-bound eviction pass).  Every sweep series label carries
+the partition kind (``erdos_renyi_100k[1d]`` vs ``erdos_renyi_100k[2d]``)
+so the two schemes plot as distinct curves instead of collapsing into
+one.  A ledger matching none of the known schemas (or a ``--only``
+filtered BENCH json whose sections are empty) renders as an explanatory
+note instead of a KeyError — non-roofline ledgers are skipped
+gracefully.
 """
 
 import json
@@ -44,6 +50,22 @@ def render_partition_sweep(data):
                   f"| {per_run} | {levels} |")
 
 
+def render_serving(data):
+    serving = data["serving"]
+    print("| graph | cold compile (ms) | warm run (ms) | amortization |")
+    print("|---|---|---|---|")
+    for name, g in sorted(serving.get("graphs", {}).items()):
+        print(f"| {name} | {g['cold_ms']:.1f} | {g['warm_ms']:.1f} "
+              f"| {g['amortization']:.1f}x |")
+    ev = serving.get("eviction_pass")
+    if ev:
+        print(f"\neviction pass: budget={ev['budget_bytes']} B, "
+              f"hit_rate={ev['hit_rate']:.2f}, "
+              f"evictions={ev['evictions']}, "
+              f"compile_s={ev['compile_s_total']:.2f} "
+              f"over {ev['rounds']} round-robin rounds")
+
+
 def render_dryrun(data):
     print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
           "t_collective (s) | bottleneck | GiB/dev | useful-flops ratio |")
@@ -69,15 +91,28 @@ def main(path):
     # BENCH ledgers always carry the partition_sweep key (possibly empty
     # under --only filters); dispatch on presence, not truthiness, so a
     # filtered BENCH json never falls through to the dryrun schema.
-    if "partition_sweep" in data:
-        if data["partition_sweep"]:
+    if "partition_sweep" in data or "serving" in data:
+        rendered = False
+        if data.get("partition_sweep"):
             render_partition_sweep(data)
-        else:
-            print("(no partition_sweep rows in this ledger — run "
-                  "benchmarks/run.py without --only, or with "
-                  "--only partition)")
+            rendered = True
+        if data.get("serving"):
+            if rendered:
+                print()
+            render_serving(data)
+            rendered = True
+        if not rendered:
+            print("(no partition_sweep or serving rows in this ledger — "
+                  "run benchmarks/run.py without --only, or with "
+                  "--only partition / --only serving)")
         return
-    render_dryrun(data)
+    if "rows" in data:
+        render_dryrun(data)
+        return
+    # not a roofline/BENCH ledger at all: say so instead of KeyError-ing
+    print(f"(unrecognized ledger schema in {path}: keys "
+          f"{sorted(data)[:8]} — expected a dry-run roofline json or a "
+          "BENCH_*.json; nothing to render)")
 
 
 if __name__ == "__main__":

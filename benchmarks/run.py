@@ -41,6 +41,7 @@ from repro.launch.mesh import default_grid
 _ROWS = []
 _ENGINE_TIMINGS = {}   # bench key -> {compile_s, per_run_s, ...}
 _PARTITION_SWEEP = []  # 1-D vs 2-D scheme rows (modeled + measured bytes)
+_SERVING = {}          # multi-graph serving ledger (cold/warm/hit rate)
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -322,6 +323,94 @@ def bench_partition_1d_vs_2d():
             f"comm_bytes={st.comm_bytes:.0f}")
 
 
+def bench_multi_graph_serving():
+    """Multi-tenant serving: cross-graph compile amortization.
+
+    Phase 1 (unbounded cache): register N graphs in one ``BFSService``
+    and measure, per graph, the *cold* path (plan + compile through the
+    shared ``EngineCache``) vs the *warm* path (cache hit + device-only
+    run) — the amortization the cache buys every tenant after its first
+    request.
+
+    Phase 2 (byte budget sized to hold only part of the engine set):
+    deal requests round-robin across all graphs so the LRU working set
+    exceeds the budget — engines evict and recompile, and the ledger
+    records the achieved hit rate and eviction count.  This is the cost
+    envelope of over-subscribed multi-tenant serving.
+    """
+    from repro.serve.bfs_service import BFSService, TraversalRequest
+    from repro.serve.engine_cache import EngineCache, GraphCatalog
+
+    n = 20_000
+    families = [
+        ("er", "erdos_renyi", n, {"avg_degree": 8.0}),
+        ("star", "star", n, {}),
+        # chain traverses one level per vertex — keep it small so the
+        # deep-traversal tenant doesn't dominate the serving rounds
+        ("chain", "chain", 1_000, {}),
+        ("rmat", "rmat", n, {"edge_factor": 8}),
+    ]
+    slots = 2
+    opts = BFSOptions(mode="dense")
+    graphs = {}
+    for name, kind, gn, kw in families:
+        src, dst = generate(kind, gn, seed=0, **kw)
+        graphs[name] = shard_graph(src, dst, gn, p=1)
+
+    # phase 1: cold compile vs warm run, unbounded budget
+    cache = EngineCache()
+    svc = BFSService(opts=opts, batch_slots=slots, cache=cache,
+                     catalog=GraphCatalog())
+    per_graph = {}
+    for name, g in graphs.items():
+        svc.add_graph(name, g)
+    for rid, name in enumerate(graphs):
+        t0 = time.time()
+        svc.submit(TraversalRequest(rid=rid, source=0, graph=name))
+        svc.run_until_drained()
+        cold_s = time.time() - t0              # includes the lane's compile
+        t0 = time.time()
+        svc.submit(TraversalRequest(rid=100 + rid, source=1, graph=name))
+        svc.run_until_drained()
+        warm_s = time.time() - t0              # cache hit + device-only run
+        per_graph[name] = {"cold_ms": cold_s * 1e3, "warm_ms": warm_s * 1e3,
+                           "amortization": cold_s / max(warm_s, 1e-9)}
+        row(f"serving_cold_vs_warm/{name}", warm_s * 1e6,
+            f"cold_ms={cold_s*1e3:.1f};warm_ms={warm_s*1e3:.1f};"
+            f"amortization={cold_s/max(warm_s, 1e-9):.1f}x")
+    st = cache.stats()
+    assert st["misses"] == len(graphs), st     # each plan compiled once
+    total_engine_bytes = st["device_bytes"]    # whole fleet, all 4 engines
+
+    # phase 2: budget admits ~half the engines -> forced LRU eviction
+    budget = max(1, total_engine_bytes // 2)
+    cache2 = EngineCache(max_device_bytes=budget)
+    svc2 = BFSService(opts=opts, batch_slots=slots, cache=cache2,
+                      catalog=GraphCatalog())
+    for name, g in graphs.items():
+        svc2.add_graph(name, g)
+    t0 = time.time()
+    rounds = 3
+    for k in range(rounds):
+        for rid, name in enumerate(graphs):
+            svc2.submit(TraversalRequest(rid=k * 100 + rid, source=k,
+                                         graph=name))
+        svc2.run_until_drained()
+    wall_s = time.time() - t0
+    st2 = cache2.stats()
+    assert st2["evictions"] >= 1, st2          # the budget must bind
+    row("serving_under_budget", wall_s / (rounds * len(graphs)) * 1e6,
+        f"budget_bytes={budget};evictions={st2['evictions']};"
+        f"hit_rate={st2['hit_rate']:.2f};"
+        f"recompiles={st2['misses'] - len(graphs)}")
+    _SERVING.update({
+        "graphs": per_graph,
+        "unbounded": st,
+        "eviction_pass": {"budget_bytes": budget, "rounds": rounds,
+                          "wall_s": wall_s, **st2},
+    })
+
+
 def bench_multi_source_throughput():
     """Batched multi-source BFS (the MXU formulation): us per source."""
     n = 30_000
@@ -391,6 +480,7 @@ BENCHES = [
     bench_direction_optimizing,
     bench_engine_amortization,
     bench_partition_1d_vs_2d,
+    bench_multi_graph_serving,
     bench_multi_source_throughput,
     bench_kernels,
     bench_roofline_table,
@@ -420,6 +510,7 @@ def main(argv=None) -> None:
                  for n, us, d in _ROWS],
         "engine_timings": _ENGINE_TIMINGS,
         "partition_sweep": _PARTITION_SWEEP,
+        "serving": _SERVING,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),

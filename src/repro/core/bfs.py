@@ -12,8 +12,9 @@ source validation.  The public lifecycle lives in ``core/engine.py``::
     plan(graph, opts, mesh) -> BFSPlan -> .compile() -> BFSEngine -> .run()
 
 ``bfs()`` below is the deprecated one-shot wrapper over that lifecycle; it
-keeps an engine cache per graph so legacy call sites no longer recompile
-on every traversal.
+resolves engines through the process-wide shared cache
+(``repro.serve.engine_cache``) so legacy call sites no longer recompile on
+every traversal and share compiled engines with the serving paths.
 
 Modes (``BFSOptions.mode``):
   * ``dense``  — bitmap frontier, candidate exchange via any strategy
@@ -485,15 +486,18 @@ def bfs(graph: "ShardedGraph", sources, mesh: Optional[Mesh] = None,
     .. deprecated::
         ``bfs()`` is a thin wrapper over the compile-once lifecycle —
         ``plan(graph, opts, mesh).compile().run(sources)`` — kept for
-        existing call sites.  It memoizes one engine per
-        (graph, opts, mesh, axis, S) so repeated calls amortize the
-        compile, but new code should hold a ``BFSEngine`` directly (and
-        use ``run_async`` for pipelined dispatch).
+        existing call sites.  Engines resolve through the process-wide
+        shared ``EngineCache`` (serve/engine_cache.py, LRU over
+        ``plan_key()`` with a configurable device-byte budget), so
+        repeated calls amortize the compile *and* share compiled engines
+        with the serving paths; new code should hold a ``BFSEngine``
+        directly (and use ``run_async`` for pipelined dispatch).
 
     Returns (dist, stats): dist is (n_logical, S) int32 with INF for
     unreachable vertices; stats is a BFSStats.
     """
     from repro.core import engine as _engine  # deferred: engine imports us
+    from repro.serve.engine_cache import default_engine_cache
 
     warnings.warn(
         "repro.core.bfs.bfs() is deprecated; use "
@@ -502,18 +506,7 @@ def bfs(graph: "ShardedGraph", sources, mesh: Optional[Mesh] = None,
     src_arr = validate_sources(sources, graph.part.n_logical)
     s = int(src_arr.shape[0])
 
-    cache = graph.__dict__.setdefault("_bfs_engines", {})
-    axis_key = tuple(axis) if isinstance(axis, (list, tuple)) else axis
-    key = (opts, mesh, axis_key, s)
-    eng = cache.get(key)
-    if eng is None:
-        eng = _engine.plan(graph, opts, mesh=mesh, axis=axis,
-                           num_sources=s).compile()
-        # Bound the per-graph cache (FIFO): option sweeps over one graph
-        # must not accumulate executables without limit.  The big device
-        # buffers are shared per (mesh, axis) regardless (engine.py).
-        if len(cache) >= 8:
-            cache.pop(next(iter(cache)))
-        cache[key] = eng
+    pl = _engine.plan(graph, opts, mesh=mesh, axis=axis, num_sources=s)
+    eng = default_engine_cache().get_or_compile(pl)
     res = eng.run(src_arr)
     return res.dist_host, res.stats()

@@ -213,6 +213,71 @@ class BFSPlan:
             })
         return meta
 
+    def plan_key(self) -> tuple:
+        """Canonical hashable fingerprint of everything a compile depends
+        on: graph content, options, mesh topology, partition scheme,
+        source capacity and the *resolved* exchange strategies.
+
+        Two plans with equal keys compile byte-identical executables, so
+        the cross-graph ``EngineCache`` (serve/engine_cache.py) can hand
+        out one engine for both.  Exchange strategies enter by resolved
+        name — ``"auto"`` and the strategy it resolved to key the same.
+        Graph identity is a content hash (``ShardedGraph.fingerprint``),
+        cached on the container, so two independently built but
+        block-identical graphs share engines too.
+        """
+        mesh_key = (tuple(self.mesh.axis_names),
+                    tuple(int(self.mesh.shape[a])
+                          for a in self.mesh.axis_names),
+                    tuple(int(d.id) for d in self.mesh.devices.flat))
+        o = self.opts
+        opt_key = (o.mode, o.local_update, o.dedupe, o.queue_cap,
+                   o.queue_threshold, o.bottom_up_threshold, o.use_kernel)
+        strat_key = tuple(
+            s.name if s is not None else None
+            for s in (self.dense_strategy, self.queue_strategy,
+                      self.expand_strategy, self.fold_strategy,
+                      self.expand_sparse_strategy, self.fold_sparse_strategy))
+        graph_fp = (self.graph2d.fingerprint() if self.partition == "2d"
+                    else self.graph.fingerprint())
+        axis_key = (tuple(self.axis) if isinstance(self.axis, tuple)
+                    else self.axis)
+        return ("bfs_plan", graph_fp, self.partition, mesh_key, axis_key,
+                opt_key, strat_key, self.num_sources, self.max_levels)
+
+    def estimated_device_bytes(self) -> int:
+        """Upper-bound estimate of the device memory a compiled engine of
+        this plan holds live: edge blocks + validity mask (engine-lifetime
+        residents) plus two generations of (n, S) dist/frontier working
+        buffers (one in flight, one being initialized — the dist buffer is
+        donated so steady state never holds more).
+
+        Derived from the same static shapes the byte models price, so the
+        ``EngineCache`` budget can be enforced before compiling.  It
+        deliberately ignores the cross-engine sharing of device blocks
+        (engine.py dedups them per (mesh, axis, group)): counting each
+        engine's blocks in full makes the estimate an upper bound, which
+        is the safe direction for an eviction budget.  For a 2-D ``auto``
+        plan the lazily built bottom-up blocks are priced at their exact
+        padded capacity (``bottom_up_in_cap()``, a cached bincount —
+        under degree skew it exceeds ``e_cap``, so pricing them at the
+        forward blocks' size would undercount and break the bound).
+        """
+        if self.partition == "2d":
+            g = self.graph2d
+            n = g.part.n
+            edge = 2 * g.p * g.e_cap * 4           # src_rowlocal + dst_fold
+            if self.opts.mode == "auto":
+                # in_src_global + in_dst_local and the (p, b) out-degrees
+                edge += 2 * g.p * g.bottom_up_in_cap() * 4 + n * 4
+        else:
+            g = self.graph
+            n = g.part.n
+            edge = 2 * g.p * (g.e_cap + g.in_e_cap) * 4
+        s = self.num_sources
+        work = 2 * (n * s * 4 + n * s * 1)         # dist (i32) + frontier (u8)
+        return int(edge + n + work)                # + 1-byte validity mask
+
     def compile(self) -> "BFSEngine":
         return BFSEngine(self)
 
@@ -343,6 +408,23 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
 # Engine: AOT-compiled executables + device-resident graph buffers
 # ---------------------------------------------------------------------------
 
+class _BlockGroup:
+    """Weakref-able holder for one group of uploaded device buffers.
+
+    The per-graph dedup map (``graph._device_blocks``) stores these as
+    *weak* values while each engine keeps a strong reference for its
+    lifetime: concurrent engines of one graph share a single upload, and
+    when the last engine holding a group dies (e.g. evicted from the
+    serving ``EngineCache``) the device memory actually frees instead of
+    being pinned forever by the graph object.
+    """
+
+    __slots__ = ("arrays", "__weakref__")
+
+    def __init__(self, arrays):
+        self.arrays = arrays
+
+
 class BFSEngine:
     """A compiled traversal: run unlimited source sets with device-only work.
 
@@ -381,10 +463,12 @@ class BFSEngine:
                 on_trace=self._bump_trace)
             # only the auto hybrid's bottom-up level reads the in-edge
             # blocks and out-degrees; dense/queue engines neither build
-            # nor upload them
-            edge_groups = [("edges", buf_owner.flat)]
+            # nor upload them.  Group names carry the partition kind: a
+            # to_2d view shares its parent's device-buffer dict, and the
+            # two schemes' "edges" payloads differ.
+            edge_groups = [("edges_2d", buf_owner.flat)]
             if opts.mode == "auto":
-                edge_groups.append(("bottom_up", buf_owner.bottom_up_flat))
+                edge_groups.append(("bottom_up_2d", buf_owner.bottom_up_flat))
         else:
             buf_owner = plan_.graph
             part = buf_owner.part
@@ -406,26 +490,39 @@ class BFSEngine:
 
         # Graph blocks + validity mask live on device for the engine's
         # lifetime; every run reuses them with zero H2D traffic.  They are
-        # cached per (mesh, axis, group) and shared across engines —
-        # compiling several option/S/mode variants of one graph must not
-        # duplicate its largest buffers (a 2-D auto engine adds only the
-        # bottom-up group on top of a dense engine's edge blocks).
-        dev_cache = buf_owner.__dict__.setdefault("_device_blocks", {})
+        # deduplicated per (mesh, axis, group) across engines — compiling
+        # several option/S/mode variants of one graph must not duplicate
+        # its largest buffers (a 2-D auto engine adds only the bottom-up
+        # group on top of a dense engine's edge blocks).  The map holds
+        # them *weakly* (engines hold the strong refs), so an evicted/
+        # dropped engine set releases its device memory.  Engine compiles
+        # run from multiple threads (EngineCache.get_or_compile holds no
+        # lock while compiling), so the check-then-insert runs under the
+        # cache's *per-graph* lock: concurrent engines of one graph
+        # cannot upload a group twice, while compiles of unrelated
+        # graphs never wait on each other's host bucketing + uploads.
+        from repro.graphs.formats import device_block_cache
 
-        def _cached(group, build):
-            bufs = dev_cache.get((mesh, axis, group))
-            if bufs is None:
-                bufs = build()
-                dev_cache[(mesh, axis, group)] = bufs
-            return bufs
+        self._block_holders = []
+        blocks = device_block_cache(buf_owner)
+        with blocks.lock:
+            dev_cache = blocks.map
 
-        self._gbufs = ()
-        for group, host_arrays in edge_groups:
-            self._gbufs += _cached(group, lambda ha=host_arrays: tuple(
-                jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
-                for a in ha()))
-        self._valid = _cached("valid", lambda: jax.device_put(
-            np.arange(n) < part.n_logical, sh_edge))
+            def _cached(group, build):
+                holder = dev_cache.get((mesh, axis, group))
+                if holder is None:
+                    holder = _BlockGroup(build())
+                    dev_cache[(mesh, axis, group)] = holder
+                self._block_holders.append(holder)
+                return holder.arrays
+
+            self._gbufs = ()
+            for group, host_arrays in edge_groups:
+                self._gbufs += _cached(group, lambda ha=host_arrays: tuple(
+                    jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
+                    for a in ha()))
+            self._valid = _cached("valid", lambda: jax.device_put(
+                np.arange(n) < part.n_logical, sh_edge))
         n_edge_in = len(self._gbufs)
 
         mapped = shard_map(
@@ -455,6 +552,11 @@ class BFSEngine:
         self.compile_traces = self._trace_count
 
     # ------------------------------------------------------------------ misc
+    def estimated_device_bytes(self) -> int:
+        """Device bytes this engine keeps live (plan-derived estimate;
+        what the serving ``EngineCache`` charges against its budget)."""
+        return self.plan.estimated_device_bytes()
+
     def _bump_trace(self):
         self._trace_count += 1
 

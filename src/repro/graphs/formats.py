@@ -16,12 +16,68 @@ kernel for the blocked hot path) — see kernel_taxonomy §GNN.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import threading
+import weakref
 
 import numpy as np
 
 from repro.core.partition import Partition1D, Partition2D
 
 _ALIGN = 128  # pad per-shard edge capacity to a lane-aligned multiple
+
+# Guards only the creation of each graph's to_2d conversion lock;
+# conversions themselves run under the per-graph lock, so concurrent
+# engine-cache compiles of one catalog graph dedup the (expensive)
+# host bucketing while unrelated graphs convert in parallel.
+_TO2D_CREATE_LOCK = threading.Lock()
+
+# Guards only the *creation* of each graph's DeviceBlockCache; the
+# upload dedup itself uses the cache's own per-graph lock so concurrent
+# engine compiles of unrelated graphs never serialize each other's
+# (expensive) host bucketing + H2D uploads.
+_DEVICE_BLOCKS_CREATE_LOCK = threading.Lock()
+
+
+class DeviceBlockCache:
+    """Per-graph dedup state for uploaded device buffers: a *weak*
+    per-(mesh, axis, group) map plus the lock that guards its
+    check-then-insert.  Engines hold the strong references
+    (core/engine.py ``_BlockGroup``); when the last engine using a group
+    dies, its device memory frees.  A ``to_2d`` view shares its parent's
+    instance, so the two partition schemes dedup against one map under
+    one lock."""
+
+    __slots__ = ("lock", "map")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.map = weakref.WeakValueDictionary()
+
+    def __len__(self) -> int:
+        return len(self.map)
+
+
+def device_block_cache(graph) -> DeviceBlockCache:
+    """Get-or-create ``graph._device_blocks`` (race-free: every creation
+    path — engine compile or ``to_2d`` — funnels through here)."""
+    with _DEVICE_BLOCKS_CREATE_LOCK:
+        m = graph.__dict__.get("_device_blocks")
+        if m is None:
+            m = DeviceBlockCache()
+            graph.__dict__["_device_blocks"] = m
+        return m
+
+
+def _content_fingerprint(meta: tuple, arrays: tuple) -> tuple:
+    """Stable content hash of a graph container: structural metadata plus
+    a digest of the edge blocks.  Two independently built containers with
+    identical blocks fingerprint equal, so the cross-graph engine cache
+    (serve/engine_cache.py) keys on *content*, not object identity."""
+    h = hashlib.sha1(repr(meta).encode())
+    for a in arrays:
+        h.update(np.ascontiguousarray(a).tobytes())
+    return meta + (h.hexdigest(),)
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -88,6 +144,18 @@ class ShardedGraph:
         src = (self.src_local.astype(np.int64) + shard_base)[valid]
         dst = self.dst_global[valid].astype(np.int64)
         return src, dst
+
+    def fingerprint(self) -> tuple:
+        """Content identity for plan/engine cache keys (cached; the blocks
+        are immutable once built)."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            fp = _content_fingerprint(
+                ("sharded_graph_1d", self.part.n_logical, self.p,
+                 self.e_cap, self.n_edges),
+                (self.src_local, self.dst_global))
+            self.__dict__["_fingerprint"] = fp
+        return fp
 
 
 def _bucket(key_owner: np.ndarray, p: int, arrays, e_cap: int, fills):
@@ -205,6 +273,27 @@ class ShardedGraph2D:
         dst = (((vf // b) * c + cell % c) * b + vf % b)[valid]
         return src, dst
 
+    def bottom_up_in_cap(self) -> int:
+        """Padded per-cell capacity of the bottom-up in-edge blocks.
+
+        Exact (a bincount over the edge list, cached) without building
+        the blocks themselves — under degree skew this exceeds ``e_cap``
+        (a star hub's owner holds almost every in-edge), and the engine
+        cache's byte budget must charge the real figure to stay an upper
+        bound."""
+        cached = self.__dict__.get("_bottom_up_blocks")
+        if cached is not None:
+            return cached[0].shape[1]
+        cap = self.__dict__.get("_bottom_up_in_cap")
+        if cap is None:
+            src, dst = self.edge_list()
+            own_d = np.asarray(self.part.owner(dst))
+            max_in = (int(np.bincount(own_d, minlength=self.p).max())
+                      if src.size else 0)
+            cap = max(_pad_to(max(max_in, 1), _ALIGN), _ALIGN)
+            self.__dict__["_bottom_up_in_cap"] = cap
+        return cap
+
     def bottom_up_blocks(self):
         """(in_src_global, in_dst_local, out_degree) — built and cached on
         first use (the ``auto`` engine's bottom-up level needs them; the
@@ -214,9 +303,7 @@ class ShardedGraph2D:
             part = self.part
             src, dst = self.edge_list()
             own_d = np.asarray(part.owner(dst))
-            max_in = (int(np.bincount(own_d, minlength=self.p).max())
-                      if src.size else 0)
-            cap_in = max(_pad_to(max(max_in, 1), _ALIGN), _ALIGN)
+            cap_in = self.bottom_up_in_cap()
             (in_s_glob, in_d_loc), _ = _bucket(
                 own_d, self.p, [src, np.asarray(part.local_id(dst))],
                 cap_in, fills=(-1, -1))
@@ -245,6 +332,22 @@ class ShardedGraph2D:
     @property
     def in_e_cap(self) -> int:
         return self.in_src_global.shape[1]
+
+    def fingerprint(self) -> tuple:
+        """Content identity for plan/engine cache keys (cached).
+
+        Pure content hash of the cell blocks, so plans built from the 1-D
+        parent (``plan(g, partition="2d")``) and from its cached
+        conversion (``plan(to_2d(g, r, c))``) — the *same* object, by the
+        ``to_2d`` cache — key identically in the engine cache."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            fp = _content_fingerprint(
+                ("sharded_graph_2d", self.part.n_logical, self.part.r,
+                 self.part.c, self.e_cap, self.n_edges),
+                (self.src_rowlocal, self.dst_fold))
+            self.__dict__["_fingerprint"] = fp
+        return fp
 
 
 def shard_graph_2d(src: np.ndarray, dst: np.ndarray, n: int, r: int, c: int,
@@ -281,19 +384,32 @@ def shard_graph_2d(src: np.ndarray, dst: np.ndarray, n: int, r: int, c: int,
 def to_2d(graph: ShardedGraph, r: int, c: int) -> ShardedGraph2D:
     """Derive (and cache) the 2-D edge blocks of a 1-D sharded graph.
 
-    ``plan(graph, ..., partition="2d")`` calls this so callers keep one
-    graph object regardless of partition scheme; requires ``r*c`` equal to
-    the graph's shard count so the vertex chunks line up exactly.
+    ``plan(graph, ..., partition="2d")`` and ``GraphCatalog`` both route
+    through this so callers keep one graph object regardless of partition
+    scheme: the same ``ShardedGraph2D`` instance is returned for the same
+    grid (thread-safe — engine-cache compiles may convert concurrently),
+    and the conversion shares the parent's per-(mesh, axis) device-buffer
+    cache so holding both a 1-D and a 2-D plan of one graph never uploads
+    shared buffers (e.g. the validity mask) twice.  Requires ``r*c`` equal
+    to the graph's shard count so the vertex chunks line up exactly.
     """
     if r * c != graph.part.p:
         raise ValueError(f"grid {r}x{c} does not match the graph's "
                          f"p={graph.part.p} vertex chunks")
-    cache = graph.__dict__.setdefault("_graph2d", {})
-    g2 = cache.get((r, c))
-    if g2 is None:
-        src, dst = graph.edge_list()
-        g2 = shard_graph_2d(src, dst, graph.part.n_logical, r, c)
-        cache[(r, c)] = g2
+    with _TO2D_CREATE_LOCK:
+        lock = graph.__dict__.setdefault("_to2d_lock", threading.Lock())
+    with lock:
+        cache = graph.__dict__.setdefault("_graph2d", {})
+        g2 = cache.get((r, c))
+        if g2 is None:
+            src, dst = graph.edge_list()
+            g2 = shard_graph_2d(src, dst, graph.part.n_logical, r, c)
+            # same weak dedup state as the parent (engine.py uploads hold
+            # the strong refs), so shared buffers upload once across the
+            # two partition views of this graph; g2 is not yet published,
+            # so plain assignment cannot race
+            g2.__dict__["_device_blocks"] = device_block_cache(graph)
+            cache[(r, c)] = g2
     return g2
 
 

@@ -42,6 +42,37 @@ def host_devices(n) -> None:
     os.environ["XLA_FLAGS"] = new
 
 
+def parse_graph_spec(spec: str, default_n: int):
+    """Parse a launcher ``--graph`` spec: ``[name=]kind[:n][:RxC]``.
+
+    Returns ``(name, kind, n, grid-or-None)``.  One grammar for every
+    launcher (``bfs_serve`` serves the grid token as a 2-D lane;
+    ``bfs_run`` rejects it in favor of its global ``--partition/--grid``
+    flags) — a spec copied between their command lines either works or
+    fails with a clear message, never a raw ``int()`` traceback.
+    Stdlib-only on purpose: this module must stay importable before JAX.
+    """
+    name, _, rest = spec.partition("=") if "=" in spec else ("", "", spec)
+    parts = rest.split(":")
+    kind = parts[0]
+    n, grid = default_n, None
+    for tok in parts[1:]:
+        if "x" in tok.lower():
+            try:
+                r, c = (int(x) for x in tok.lower().split("x"))
+            except ValueError:
+                raise SystemExit(f"bad grid token {tok!r} in --graph "
+                                 f"{spec!r}; expected RxC, e.g. 2x2")
+            grid = (r, c)
+        else:
+            try:
+                n = int(tok)
+            except ValueError:
+                raise SystemExit(f"bad vertex count {tok!r} in --graph "
+                                 f"{spec!r}; expected [name=]kind[:n][:RxC]")
+    return (name or kind), kind, n, grid
+
+
 def host_devices_from_argv(argv=None) -> None:
     """Apply ``--devices N`` (or ``--devices=N``) from a launcher command
     line, pre-JAX-import."""

@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.bfs_run --workload erdos_renyi_100k
     PYTHONPATH=src python -m repro.launch.bfs_run --graph star --n 4000000
+    PYTHONPATH=src python -m repro.launch.bfs_run \
+        --graph erdos_renyi:100000 --graph star:50000 --repeats 2
 
 Uses every visible device as one 1-D shard row (on a TPU pod slice this is
 the full production run; on CPU it is p=1), or — with ``--partition 2d``
@@ -14,10 +16,13 @@ The launcher drives the compile-once lifecycle: one ``plan().compile()``
 per (graph, options, mesh), then ``--repeats`` traversals from rotating
 source sets against the same engine — compile wall time and per-traversal
 wall time are reported separately, which is the paper's amortization story
-at the CLI.
+at the CLI.  ``--graph`` is repeatable (``KIND[:N]``): every engine
+resolves through the process-wide shared ``EngineCache``, and the final
+stats line shows the cross-graph compile amortization (hits / misses /
+evictions / compile seconds).
 """
 
-from repro.launch import host_devices_from_argv
+from repro.launch import host_devices_from_argv, parse_graph_spec
 
 host_devices_from_argv()  # must precede the jax import below
 
@@ -32,20 +37,26 @@ from repro.configs.base import BFS_WORKLOADS  # noqa: E402
 from repro.core import BFSOptions, plan  # noqa: E402
 from repro.graphs import generate, shard_graph, shard_graph_2d  # noqa: E402
 from repro.launch.mesh import default_grid, make_grid_mesh  # noqa: E402
+from repro.serve.engine_cache import default_engine_cache  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default=None,
                     choices=[w.name for w in BFS_WORKLOADS])
-    ap.add_argument("--graph", default="erdos_renyi")
-    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--graph", action="append", default=None,
+                    metavar="KIND[:N]",
+                    help="graph to traverse; repeatable — each runs "
+                         "against its own cached engine (default: one "
+                         "erdos_renyi of --n vertices)")
+    ap.add_argument("--n", type=int, default=100_000,
+                    help="default vertex count for --graph without :N")
     ap.add_argument("--mode", default="auto",
                     choices=["dense", "queue", "auto"])
     ap.add_argument("--exchange", default="alltoall_direct")
     ap.add_argument("--sources", type=int, default=1)
     ap.add_argument("--repeats", type=int, default=3,
-                    help="traversals to run against the compiled engine")
+                    help="traversals to run against each compiled engine")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
     ap.add_argument("--partition", default="1d", choices=["1d", "2d"],
                     help="vertex blocks over all p shards (1d) or edge "
@@ -55,11 +66,23 @@ def main():
                          "factorization of the device count)")
     args = ap.parse_args()
 
+    if args.workload and args.graph:
+        ap.error("--graph and --workload are mutually exclusive; pass the "
+                 "workload's graph as a --graph spec instead")
     if args.workload:
         wl = next(w for w in BFS_WORKLOADS if w.name == args.workload)
-        kind, n, kw = wl.graph, wl.n_vertices, dict(wl.gen_kwargs)
+        graphs = [(wl.graph, wl.n_vertices, dict(wl.gen_kwargs))]
+    elif args.graph:
+        graphs = []
+        for spec in args.graph:
+            _, kind, n, grid = parse_graph_spec(spec, args.n)
+            if grid is not None:
+                ap.error(f"--graph {spec}: per-spec grids are a bfs_serve "
+                         "feature; here use --partition 2d --grid "
+                         f"{grid[0]}x{grid[1]} (applies to every graph)")
+            graphs.append((kind, n, {}))
     else:
-        kind, n, kw = args.graph, args.n, {}
+        graphs = [("erdos_renyi", args.n, {})]
 
     devs = jax.devices()
     p = len(devs)
@@ -85,50 +108,62 @@ def main():
         # down grid columns, auto switches per level (sparse needs S=1)
         opts = BFSOptions(mode=args.mode, fold_exchange=fold,
                           queue_cap=1 << 15)
-        print(f"graph={kind} n={n} grid={r}x{c} (p={r*c}) mode={args.mode}")
+        print(f"grid={r}x{c} (p={r*c}) mode={args.mode}")
     else:
         mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
         axis = "p"
         opts = BFSOptions(mode=args.mode, dense_exchange=args.exchange,
                           queue_cap=1 << 15)
-        print(f"graph={kind} n={n} shards={p}")
-    t0 = time.time()
-    src, dst = generate(kind, n, seed=0, **kw)
-    if args.partition == "2d":
-        # bucket straight into the r x c edge blocks; the bottom-up
-        # in-edge blocks build lazily iff mode=auto compiles them
-        g = shard_graph_2d(src, dst, n, r, c)
-    else:
-        g = shard_graph(src, dst, n, int(np.prod(list(mesh.shape.values()))))
-    print(f"generated {src.shape[0]} edges in {time.time()-t0:.1f}s")
+        print(f"shards={p} mode={args.mode}")
 
-    t0 = time.time()
-    engine = plan(g, opts, mesh=mesh, axis=axis,
-                  num_sources=args.sources,
-                  partition=args.partition).compile()
-    compile_s = time.time() - t0
-    meta = engine.plan.describe()
-    exchanges = (f"{meta['expand_exchange']}+{meta['fold_exchange']}"
-                 if args.partition == "2d" else meta["dense_exchange"])
-    print(f"plan+compile: {compile_s:.2f}s (S={args.sources}, {exchanges}, "
-          f"level_bytes/chip={meta['dense_level_bytes']:.2e})")
-
-    rng = np.random.default_rng(0)
-    for rep in range(max(1, args.repeats)):
-        sources = (list(range(args.sources)) if rep == 0 else
-                   sorted(rng.choice(n, size=args.sources, replace=False)
-                          .tolist()))
+    cache = default_engine_cache()
+    for kind, n, kw in graphs:
         t0 = time.time()
-        res = engine.run(sources)
-        run_s = time.time() - t0
-        stats = res.stats()
-        print(f"run[{rep}] sources={sources[:4]}"
-              f"{'...' if len(sources) > 4 else ''}: "
-              f"levels={stats.levels} visited={stats.visited} "
-              f"modes={stats.mode_counts} "
-              f"comm_bytes/chip={stats.comm_bytes:.2e} wall={run_s:.3f}s")
-    assert engine.trace_count == engine.compile_traces, \
-        "engine retraced after compile — amortization broken"
+        src, dst = generate(kind, n, seed=0, **kw)
+        if args.partition == "2d":
+            # bucket straight into the r x c edge blocks; the bottom-up
+            # in-edge blocks build lazily iff mode=auto compiles them
+            g = shard_graph_2d(src, dst, n, r, c)
+        else:
+            g = shard_graph(src, dst, n,
+                            int(np.prod(list(mesh.shape.values()))))
+        print(f"graph={kind} n={n}: generated {src.shape[0]} edges "
+              f"in {time.time()-t0:.1f}s")
+
+        t0 = time.time()
+        engine = cache.get_or_compile(
+            plan(g, opts, mesh=mesh, axis=axis, num_sources=args.sources,
+                 partition=args.partition))
+        compile_s = time.time() - t0
+        meta = engine.plan.describe()
+        exchanges = (f"{meta['expand_exchange']}+{meta['fold_exchange']}"
+                     if args.partition == "2d" else meta["dense_exchange"])
+        print(f"plan+get_or_compile: {compile_s:.2f}s (S={args.sources}, "
+              f"{exchanges}, "
+              f"level_bytes/chip={meta['dense_level_bytes']:.2e})")
+
+        rng = np.random.default_rng(0)
+        for rep in range(max(1, args.repeats)):
+            sources = (list(range(args.sources)) if rep == 0 else
+                       sorted(rng.choice(n, size=args.sources,
+                                         replace=False).tolist()))
+            t0 = time.time()
+            res = engine.run(sources)
+            run_s = time.time() - t0
+            stats = res.stats()
+            print(f"run[{rep}] sources={sources[:4]}"
+                  f"{'...' if len(sources) > 4 else ''}: "
+                  f"levels={stats.levels} visited={stats.visited} "
+                  f"modes={stats.mode_counts} "
+                  f"comm_bytes/chip={stats.comm_bytes:.2e} wall={run_s:.3f}s")
+        assert engine.trace_count == engine.compile_traces, \
+            "engine retraced after compile — amortization broken"
+
+    st = cache.stats()
+    print(f"engine cache: hits={st['hits']} misses={st['misses']} "
+          f"evictions={st['evictions']} entries={st['entries']} "
+          f"bytes={st['device_bytes']} "
+          f"compile_s={st['compile_s_total']:.2f}")
 
 
 if __name__ == "__main__":

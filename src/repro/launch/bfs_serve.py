@@ -1,20 +1,33 @@
-"""BFS traversal-service launcher: batched source requests on one engine.
+"""Multi-tenant BFS serving launcher: many graphs, one engine cache.
 
     PYTHONPATH=src python -m repro.launch.bfs_serve --n 50000 --requests 32
-    PYTHONPATH=src python -m repro.launch.bfs_serve --workload erdos_renyi_100k \
-        --slots 8 --devices 4
+    PYTHONPATH=src python -m repro.launch.bfs_serve --devices 4 \
+        --graph er=erdos_renyi:40000 --graph hub=star:20000 \
+        --graph ring=chain:5000:2x2 --requests 24 --cache-budget-mb 64
 
-Compiles one multi-source ``BFSEngine`` sized to ``--slots`` and drains a
-queue of single-source traversal requests through it (serve/bfs_service.py)
-— the serving-path proof that per-request cost is one device dispatch per
-batch, not one compile per request.
+Registers every ``--graph`` spec in a ``GraphCatalog`` and serves them
+through one multi-graph ``BFSService``: each graph gets a serving lane
+(its own slot pool, sized to ``--slots``), requests are routed by graph
+name, and every compiled engine lives in a shared byte-budgeted
+``EngineCache`` — the serving-path proof that per-request cost is one
+device dispatch per batch and per-plan compile cost is paid once across
+the whole tenant set (and bounded: under ``--cache-budget-mb`` pressure
+LRU engines evict and recompile on their lane's next turn).
+
+Graph specs are ``[name=]kind[:n][:RxC]``; a trailing grid selects the
+2-D edge partition for that lane, so one service mixes schemes.  With no
+``--graph`` the launcher serves the single-graph workload flags exactly
+like before.  ``--verify`` checks every finished traversal against the
+numpy reference; ``--expect-eviction`` exits nonzero unless the budget
+actually forced at least one eviction (CI smoke).
 """
 
-from repro.launch import host_devices_from_argv
+from repro.launch import host_devices_from_argv, parse_graph_spec
 
 host_devices_from_argv()  # must precede the jax import below
 
 import argparse  # noqa: E402
+import sys  # noqa: E402
 import time  # noqa: E402
 
 import numpy as np  # noqa: E402
@@ -24,56 +37,142 @@ from jax.sharding import Mesh  # noqa: E402
 from repro.configs.base import BFS_WORKLOADS  # noqa: E402
 from repro.core import BFSOptions  # noqa: E402
 from repro.graphs import generate, shard_graph  # noqa: E402
+from repro.launch.mesh import make_grid_mesh  # noqa: E402
 from repro.serve.bfs_service import BFSService, TraversalRequest  # noqa: E402
+from repro.serve.engine_cache import (EngineCache,  # noqa: E402
+                                      GraphCatalog)
+
+_GEN_DEFAULTS = {
+    "erdos_renyi": {"avg_degree": 8.0},
+    "small_world": {"k": 8, "beta": 0.1},
+    "rmat": {"edge_factor": 8},
+}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default=None,
                     choices=[w.name for w in BFS_WORKLOADS])
-    ap.add_argument("--graph", default="erdos_renyi")
-    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--graph", action="append", default=None,
+                    metavar="[NAME=]KIND[:N][:RxC]",
+                    help="graph spec; repeatable — each spec opens one "
+                         "serving lane (a trailing RxC grid selects the "
+                         "2-D edge partition for that lane)")
+    ap.add_argument("--n", type=int, default=50_000,
+                    help="default vertex count for specs without :N")
     ap.add_argument("--mode", default="dense", choices=["dense", "auto"])
     ap.add_argument("--exchange", default="alltoall_direct")
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="total requests, dealt round-robin across graphs")
+    ap.add_argument("--cache-budget-mb", type=float, default=0.0,
+                    help="engine-cache device-byte budget (0 = unbounded)")
+    ap.add_argument("--verify", action="store_true",
+                    help="check every traversal against the numpy reference")
+    ap.add_argument("--expect-eviction", action="store_true",
+                    help="exit nonzero unless the cache evicted >= 1 engine")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
     args = ap.parse_args()
 
-    if args.workload:
+    # spec rows: (name, kind, n, grid, generator kwargs) — a named
+    # workload keeps its configured gen_kwargs; ad-hoc specs use the
+    # per-kind defaults
+    if args.graph and args.workload:
+        # bfs_run resolves this pair the other way; refuse the ambiguity
+        # instead of silently serving different graphs per launcher
+        ap.error("--graph and --workload are mutually exclusive; pass the "
+                 "workload's graph as a --graph spec instead")
+    if args.graph:
+        specs = []
+        for s in args.graph:
+            name, kind, n, grid = parse_graph_spec(s, args.n)
+            specs.append((name, kind, n, grid,
+                          dict(_GEN_DEFAULTS.get(kind, {}))))
+        names = [s[0] for s in specs]
+        dupes = sorted({x for x in names if names.count(x) > 1})
+        if dupes:
+            ap.error(f"duplicate graph name(s) {dupes}: lane names must "
+                     "be unique — disambiguate with a name= prefix, e.g. "
+                     f"--graph small={dupes[0]}:10000")
+    elif args.workload:
         wl = next(w for w in BFS_WORKLOADS if w.name == args.workload)
-        kind, n, kw = wl.graph, wl.n_vertices, dict(wl.gen_kwargs)
+        specs = [(wl.name, wl.graph, wl.n_vertices, None,
+                  dict(wl.gen_kwargs))]
     else:
-        kind, n, kw = args.graph, args.n, {"avg_degree": 8.0} \
-            if args.graph == "erdos_renyi" else {}
+        specs = [("default", "erdos_renyi", args.n, None,
+                  dict(_GEN_DEFAULTS["erdos_renyi"]))]
 
     devs = jax.devices()
     p = len(devs)
-    mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
-    src, dst = generate(kind, n, seed=0, **kw)
-    g = shard_graph(src, dst, n, p)
-    print(f"graph={kind} n={n} edges={src.shape[0]} shards={p} "
-          f"slots={args.slots}")
+    mesh_1d = Mesh(np.asarray(devs).reshape(p), ("p",))
 
+    cache = EngineCache(
+        max_device_bytes=(int(args.cache_budget_mb * 2**20)
+                          if args.cache_budget_mb > 0 else None))
+    catalog = GraphCatalog()
+    svc = BFSService(opts=BFSOptions(mode=args.mode,
+                                     dense_exchange=args.exchange,
+                                     queue_cap=1 << 15),
+                     mesh=mesh_1d, axis="p", batch_slots=args.slots,
+                     cache=cache, catalog=catalog)
+
+    edge_lists = {}
     t0 = time.time()
-    svc = BFSService(g, BFSOptions(mode=args.mode,
-                                   dense_exchange=args.exchange,
-                                   queue_cap=1 << 15),
-                     mesh=mesh, axis="p", batch_slots=args.slots)
-    print(f"service up (plan+compile) in {time.time()-t0:.2f}s")
+    for name, kind, n, grid, kw in specs:
+        src, dst = generate(kind, n, seed=0, **kw)
+        edge_lists[name] = (src, dst, n)
+        g = shard_graph(src, dst, n, p)
+        if grid:
+            svc.add_graph(name, g, mesh=make_grid_mesh(*grid), axis=None,
+                          partition="2d")
+        else:
+            svc.add_graph(name, g)
+        part_lbl = f"2d:{grid[0]}x{grid[1]}" if grid else "1d"
+        print(f"lane {name}: kind={kind} n={n} edges={src.shape[0]} "
+              f"partition={part_lbl}")
+    print(f"{len(specs)} lane(s) registered in {time.time()-t0:.2f}s "
+          f"(shards={p}, slots={args.slots}, "
+          f"budget={args.cache_budget_mb or 'unbounded'} MB)")
 
     rng = np.random.default_rng(0)
+    names = svc.graph_names()
     for i in range(args.requests):
-        svc.submit(TraversalRequest(rid=i, source=int(rng.integers(0, n))))
+        name = names[i % len(names)]
+        n = edge_lists[name][2]
+        svc.submit(TraversalRequest(rid=i, source=int(rng.integers(0, n)),
+                                    graph=name))
     t0 = time.time()
     done = svc.run_until_drained()
     dt = time.time() - t0
-    print(f"{len(done)} traversals in {dt:.2f}s "
+    print(f"{len(done)} traversals over {len(names)} graph(s) in {dt:.2f}s "
           f"({len(done)/max(dt, 1e-9):.1f} req/s, "
           f"{dt/max(len(done), 1)*1e3:.1f} ms/req)")
     for r in done[:4]:
-        print(f"  rid={r.rid} source={r.source} levels={r.levels} "
-              f"visited={r.visited}")
+        print(f"  rid={r.rid} graph={r.graph} source={r.source} "
+              f"levels={r.levels} visited={r.visited}")
+
+    st = svc.cache_stats()
+    print(f"cache: hits={st['hits']} misses={st['misses']} "
+          f"evictions={st['evictions']} entries={st['entries']} "
+          f"bytes={st['device_bytes']}/{st['max_device_bytes'] or 'inf'} "
+          f"hit_rate={st['hit_rate']:.2f} "
+          f"compile_s={st['compile_s_total']:.2f}")
+
+    if args.verify:
+        from repro.core.ref import bfs_reference
+        for r in done:
+            src, dst, n = edge_lists[r.graph]
+            want = bfs_reference(src, dst, n, [r.source])[:, 0]
+            if not np.array_equal(r.dist, want):
+                print(f"VERIFY FAILED: rid={r.rid} graph={r.graph} "
+                      f"source={r.source}")
+                sys.exit(1)
+        print(f"verify: {len(done)} traversals match the numpy reference")
+
+    if args.expect_eviction and st["evictions"] == 0:
+        print("EXPECTED at least one cache eviction under "
+              f"--cache-budget-mb {args.cache_budget_mb}; none happened")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,114 +1,252 @@
-"""Traversal-as-a-service: batched multi-source BFS over a compiled engine.
+"""Multi-tenant traversal service: one router, many graphs, one cache.
 
-The serving counterpart of the compile-once lifecycle (core/engine.py):
-one ``BFSEngine`` is compiled per (graph, opts, mesh) with a source-batch
-capacity equal to the slot count, then concurrent single-source requests
-are packed into the engine's source columns — one device dispatch serves
-up to ``batch_slots`` requests (Graph500-style batched traversal as the
-serving batch dimension).  Slot recycling reuses the LM server's
-``SlotPool`` (serve/batcher.py): requests queue up, finished slots are
-refilled without draining the batch.
+The serving counterpart of the compile-once lifecycle (core/engine.py),
+rewritten as a multi-graph router.  Graphs register by name in a
+``GraphCatalog``; each registered (graph, plan) pair is a *lane* — its
+own ``SlotPool`` (serve/batcher.py) packing concurrent single-source
+requests into the engine's source columns (Graph500-style batched
+traversal as the serving batch dimension).  Requests carry a graph name
+and are routed to their lane's queue.
 
-Unlike token decoding, a traversal completes in a single engine run, so
-every ``step()`` finishes all admitted requests; the pool earns its keep
-under sustained load, where each step drains up to a full batch from the
-queue.  Duplicate sources across concurrent requests share one engine
-column (the engine itself rejects duplicate source *columns*).
+Engines are never owned by the service: every lane resolves its compiled
+engine through a shared ``EngineCache`` (serve/engine_cache.py) keyed by
+``BFSPlan.plan_key()``, so
+
+  * two services (or a service and the ``bfs()`` wrapper) serving the
+    same graph/options share one compiled engine,
+  * the cache's device-byte budget bounds total engine memory across all
+    tenants — a lane whose engine was evicted transparently recompiles
+    on its next step,
+  * hit/miss/evict/compile-time counters account the whole fleet.
+
+``step()`` round-robins the lanes, dispatching every lane with live
+slots via ``run_async`` *before* blocking on any result, so device work
+for graph B overlaps host-side unpacking for graph A.  A traversal
+completes in a single engine run, so every admitted request finishes
+within its step; the rotation only decides admission order under
+sustained load.  Duplicate sources within a lane share one engine column.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.bfs import BFSOptions, INF, validate_sources
 from repro.core.engine import plan
 from repro.serve.batcher import SlotPool
+from repro.serve.engine_cache import (EngineCache, GraphCatalog,
+                                      default_engine_cache)
+
+DEFAULT_GRAPH = "default"
+
+_UNSET = object()   # distinguishes "inherit the service default" from an
+                    # explicit None (which plan() interprets, e.g. axis)
 
 
 @dataclasses.dataclass
 class TraversalRequest:
     rid: int
     source: int
+    graph: Optional[str] = None          # None -> the sole registered graph
     dist: Optional[np.ndarray] = None    # (n_logical,) int32 when done
     levels: int = 0                      # eccentricity of this source's tree
     visited: int = 0
     done: bool = False
 
 
+class _Lane:
+    """One served (graph, plan) pair: routing state + its slot pool.
+
+    Holds the *plan* (cheap metadata), never the engine — the engine is
+    re-resolved through the cache at every step so budget evictions stay
+    transparent to the lane.
+    """
+
+    def __init__(self, name: str, graph, plan_, batch_slots: int):
+        self.name = name
+        self.graph = graph
+        self.plan = plan_
+        self.pool = SlotPool(batch_slots)
+        self.n_logical = plan_.graph.part.n_logical
+
+    def drained(self) -> bool:
+        return self.pool.drained()
+
+
 class BFSService:
-    def __init__(self, graph, opts: BFSOptions = BFSOptions(), *,
+    """Route traversal requests across many registered graphs.
+
+    ``graphs`` may be a single sharded graph (registered under
+    ``"default"`` — the single-tenant form older call sites use), a
+    ``{name: graph}`` dict, or None (register lanes later via
+    ``add_graph``).  Constructor keywords are per-service defaults;
+    ``add_graph`` can override any of them per lane, so one service can
+    mix 1-D and 2-D partitions, meshes and option sets.
+    """
+
+    def __init__(self, graphs=None, opts: BFSOptions = BFSOptions(), *,
                  mesh=None, axis=None, batch_slots: int = 4,
-                 partition=None):
+                 partition=None, cache: Optional[EngineCache] = None,
+                 catalog: Optional[GraphCatalog] = None):
+        self.catalog = catalog if catalog is not None else GraphCatalog()
+        self.cache = cache if cache is not None else default_engine_cache()
+        self._defaults = dict(opts=opts, mesh=mesh, axis=axis,
+                              batch_slots=batch_slots, partition=partition)
+        self._lanes: Dict[str, _Lane] = {}
+        self._order: List[str] = []      # registration order, for rotation
+        self._rr = 0
+        if graphs is None:
+            pass
+        elif isinstance(graphs, dict):
+            for name, g in graphs.items():
+                self.add_graph(name, g)
+        else:
+            self.add_graph(DEFAULT_GRAPH, graphs)
+
+    # ------------------------------------------------------------ registry
+    def add_graph(self, name: str, graph=None, *, opts=_UNSET, mesh=_UNSET,
+                  axis=_UNSET, batch_slots=_UNSET, partition=_UNSET) -> str:
+        """Register a graph (or adopt one already in the catalog) and
+        open its serving lane.  Planning happens now — invalid options
+        fail at registration; compiling waits for the first step that
+        serves the lane (through the shared cache).  Passing any keyword
+        (including an explicit None, e.g. ``mesh=None`` for a p=1 2-D
+        lane) overrides the service default for this lane only."""
+        if name in self._lanes:
+            raise ValueError(f"graph {name!r} already has a serving lane")
+        if graph is None:
+            graph = self.catalog.get(name)
+        else:
+            self.catalog.register(name, graph)
+        d = self._defaults
+
+        def pick(val, key):
+            return d[key] if val is _UNSET else val
+
+        opts = pick(opts, "opts")
         if opts.mode == "queue":
             raise ValueError("BFSService batches sources; queue mode is "
                              "single-source — use dense or auto")
-        self.graph = graph
-        # partition passes straight through the lifecycle: serving over
-        # the 2-D edge-partitioned engine is the same code path, and the
-        # direction-optimizing mode="auto" works over grids too (per-level
-        # dense/bottom-up switching; sparse levels need S=1, which batched
-        # serving never compiles).
-        self.engine = plan(graph, opts, mesh=mesh, axis=axis,
-                           num_sources=batch_slots,
-                           partition=partition).compile()
-        self.pool = SlotPool(batch_slots)
-        self._n_logical = graph.part.n_logical
+        slots = pick(batch_slots, "batch_slots")
+        lane_mesh = pick(mesh, "mesh")
+        lane_axis = axis if axis is not _UNSET else (
+            d["axis"] if lane_mesh is d["mesh"] else None)
+        lane_plan = plan(
+            graph, opts, mesh=lane_mesh, axis=lane_axis,
+            num_sources=slots, partition=pick(partition, "partition"))
+        self._lanes[name] = _Lane(name, graph, lane_plan, slots)
+        self._order.append(name)
+        return name
 
+    def graph_names(self) -> List[str]:
+        return list(self._order)
+
+    def lane(self, name: str) -> _Lane:
+        try:
+            return self._lanes[name]
+        except KeyError:
+            raise KeyError(f"no serving lane for graph {name!r}; lanes: "
+                           f"{sorted(self._lanes)}") from None
+
+    def _sole_lane(self) -> _Lane:
+        if len(self._lanes) != 1:
+            raise ValueError(
+                f"service has {len(self._lanes)} lanes "
+                f"({sorted(self._lanes)}); requests must name their graph")
+        return self._lanes[self._order[0]]
+
+    # single-tenant conveniences (the pre-router surface)
+    @property
+    def engine(self):
+        """The sole lane's compiled engine (single-graph services)."""
+        return self.cache.get_or_compile(self._sole_lane().plan)
+
+    @property
+    def pool(self) -> SlotPool:
+        return self._sole_lane().pool
+
+    @property
+    def graph(self):
+        return self._sole_lane().graph
+
+    def cache_stats(self) -> dict:
+        return self.cache.stats()
+
+    # ------------------------------------------------------------- serving
     def submit(self, req: TraversalRequest) -> None:
+        lane = (self.lane(req.graph) if req.graph is not None
+                else self._sole_lane())
+        req.graph = lane.name
         # Fail fast at the door instead of poisoning a whole batch.
-        validate_sources([req.source], self._n_logical)
-        self.pool.submit(req)
+        validate_sources([req.source], lane.n_logical)
+        lane.pool.submit(req)
 
     def step(self) -> List[TraversalRequest]:
-        """Admit queued requests and serve every live slot in one engine
-        run; returns the finished requests (all live ones)."""
-        self.pool.admit()
-        live = self.pool.live()
-        if not live.any():
+        """Serve one round: admit queued requests on every lane (rotating
+        the start lane for fairness), dispatch all live lanes through
+        ``run_async``, then collect.  Returns the finished requests."""
+        if not self._order:
             return []
-        # Requests for the same vertex share a source column.
-        col_of = {}
-        for i in np.where(live)[0]:
-            src = self.pool.slots[i].source
-            if src not in col_of:
-                col_of[src] = len(col_of)
-        uniq = sorted(col_of, key=col_of.get)
+        k = len(self._order)
+        rotation = [self._order[(self._rr + i) % k] for i in range(k)]
+        self._rr = (self._rr + 1) % k
 
-        res = self.engine.run(uniq)
-        dist = res.dist_host                       # (n_logical, len(uniq))
+        inflight = []
+        for name in rotation:
+            lane = self._lanes[name]
+            lane.pool.admit()
+            live = lane.pool.live()
+            if not live.any():
+                continue
+            # Requests for the same vertex share a source column.
+            col_of = {}
+            for i in np.where(live)[0]:
+                src = lane.pool.slots[i].source
+                if src not in col_of:
+                    col_of[src] = len(col_of)
+            uniq = sorted(col_of, key=col_of.get)
+            engine = self.cache.get_or_compile(lane.plan)
+            # dispatch only; blocking waits until every lane is in flight
+            inflight.append((lane, live, col_of, engine.run_async(uniq)))
 
         finished = []
-        for i in np.where(live)[0]:
-            r = self.pool.slots[i]
-            # copy: columns are views into one shared result buffer, and
-            # requests for the same source share a column
-            col = dist[:, col_of[r.source]].copy()
-            reached = col < int(INF)
-            r.dist = col
-            r.levels = int(col[reached].max()) if reached.any() else 0
-            r.visited = int(reached.sum())
-            r.done = True
-            finished.append(r)
+        for lane, live, col_of, res in inflight:
+            dist = res.block().dist_host       # (n_logical, len(uniq))
+            for i in np.where(live)[0]:
+                r = lane.pool.slots[i]
+                # copy: columns are views into one shared result buffer,
+                # and requests for the same source share a column
+                col = dist[:, col_of[r.source]].copy()
+                reached = col < int(INF)
+                r.dist = col
+                r.levels = int(col[reached].max()) if reached.any() else 0
+                r.visited = int(reached.sum())
+                r.done = True
+                finished.append(r)
         return finished
 
-    def run_until_drained(self, max_steps: int = 10_000):
-        """Step until every submitted request has finished.
+    def drained(self) -> bool:
+        return all(lane.drained() for lane in self._lanes.values())
 
-        Raises ``RuntimeError`` if the queue is not drained within
-        ``max_steps`` engine runs — previously this returned the partial
+    def run_until_drained(self, max_steps: int = 10_000):
+        """Step until every submitted request on every lane has finished.
+
+        Raises ``RuntimeError`` if the queues are not drained within
+        ``max_steps`` service steps — previously this returned the partial
         result list silently, so a caller could mistake a truncated drain
         for completion and never see the still-queued requests.
         """
         done = []
         for _ in range(max_steps):
-            if self.pool.drained():
+            if self.drained():
                 break
             done += self.step()
-        if not self.pool.drained():
-            pending = len(self.pool.queue) + int(self.pool.live().sum())
+        if not self.drained():
+            pending = sum(len(l.pool.queue) + int(l.pool.live().sum())
+                          for l in self._lanes.values())
             raise RuntimeError(
                 f"run_until_drained: {pending} request(s) still pending "
                 f"after max_steps={max_steps} engine runs ({len(done)} "

@@ -13,6 +13,11 @@ degenerate 4x1 / 1x4 shapes — bitwise against the 1-D auto engine and the
 numpy hybrid-schedule simulation (mode_counts included) — and forces a
 queue_cap overflow to prove the dense escalation stays exact and sets the
 overflowed flag.
+
+The serving section runs one multi-graph ``BFSService`` with mixed 1-D
+and 2-D lanes over the real device meshes behind a shared
+``EngineCache`` — request parity, compile-exactly-once accounting, and
+exactness across a budget-forced LRU eviction.
 """
 
 import argparse
@@ -136,6 +141,84 @@ def check_grid_queue_overflow(r, c, n=2000, seed=2, queue_cap=8):
     return ok
 
 
+def check_multi_graph_serving(r, c, n=2000, seed=1):
+    """Multi-tenant serving over real device meshes: one ``BFSService``
+    with mixed 1-D (all-p row) and 2-D (r x c grid) lanes behind a
+    byte-budgeted shared ``EngineCache``.  Checks request-level parity
+    against the serial reference, compile-exactly-once accounting while
+    under budget, and exactness across a forced LRU eviction/recompile.
+    """
+    from repro.core import BFSOptions as _Opts
+    from repro.serve.bfs_service import BFSService, TraversalRequest
+    from repro.serve.engine_cache import EngineCache
+
+    p = r * c
+    mesh1 = Mesh(np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+    families = (("erdos_renyi", dict(avg_degree=8)), ("star", {}),
+                ("chain", {}), ("rmat", dict(edge_factor=8)))
+    data = {}
+    cache = EngineCache()
+    svc = BFSService(opts=_Opts(mode="dense"), mesh=mesh1, axis="p",
+                     batch_slots=2, cache=cache)
+    for i, (kind, kw) in enumerate(families):
+        src, dst = generate(kind, n, seed=seed + i, **kw)
+        g = shard_graph(src, dst, n, p)
+        data[kind] = (src, dst)
+        if i % 2:                  # alternate partition schemes per lane
+            svc.add_graph(kind, g, mesh=make_grid_mesh(r, c),
+                          partition="2d")
+        else:
+            svc.add_graph(kind, g)
+
+    ok = True
+    for rnd in range(2):
+        reqs = [TraversalRequest(rid=rnd * 100 + i * 10 + j,
+                                 source=(13 * j + i + rnd) % n, graph=kind)
+                for i, kind in enumerate(data) for j in range(3)]
+        for q in reqs:
+            svc.submit(q)
+        done = svc.run_until_drained()
+        ok &= len(done) == len(reqs)
+        for q in done:
+            src, dst = data[q.graph]
+            want = bfs_reference(src, dst, n, [q.source])[:, 0]
+            ok &= np.array_equal(q.dist, want)
+    st = cache.stats()
+    ok &= st["misses"] == len(data)            # one compile per lane plan
+    ok &= st["evictions"] == 0
+    for kind in data:
+        eng = cache.get(svc.lane(kind).plan)
+        ok &= eng.trace_count == eng.compile_traces
+    print(f"{f'serving/multi-graph/{r}x{c}+1d':55s} lanes={len(data)} "
+          f"hits={st['hits']} misses={st['misses']} "
+          f"-> {'OK' if ok else 'MISMATCH'}")
+
+    # under a budget that holds ~1.5 engines the round-robin working set
+    # must evict and transparently recompile, staying exact
+    unit = svc.lane("erdos_renyi").plan.estimated_device_bytes()
+    cache_small = EngineCache(max_device_bytes=int(1.5 * unit))
+    svc2 = BFSService(opts=_Opts(mode="dense"), mesh=mesh1, axis="p",
+                      batch_slots=2, cache=cache_small)
+    for kind in ("erdos_renyi", "star", "chain"):
+        svc2.add_graph(kind, svc.catalog.get(kind))
+    ok2 = True
+    for rnd in range(2):
+        for i, kind in enumerate(("erdos_renyi", "star", "chain")):
+            svc2.submit(TraversalRequest(rid=rnd * 10 + i,
+                                         source=rnd + i, graph=kind))
+        for q in svc2.run_until_drained():
+            src, dst = data[q.graph]
+            want = bfs_reference(src, dst, n, [q.source])[:, 0]
+            ok2 &= np.array_equal(q.dist, want)
+    st2 = cache_small.stats()
+    ok2 &= st2["evictions"] >= 1 and st2["misses"] > 3
+    ok2 &= st2["device_bytes"] <= cache_small.max_device_bytes
+    print(f"{f'serving/eviction-budget/{r}x{c}':55s} "
+          f"evictions={st2['evictions']} misses={st2['misses']} "
+          f"-> {'OK' if ok2 else 'MISMATCH'}")
+    return ok and ok2
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=2)
@@ -176,6 +259,9 @@ def main():
                               expect_sparse=True)
     # queue overflow -> dense escalation on the real device grid
     ok &= check_grid_queue_overflow(args.rows, args.cols)
+    # multi-tenant serving: mixed 1-D/2-D lanes, shared engine cache,
+    # compile-once accounting + budget-forced eviction recovery
+    ok &= check_multi_graph_serving(args.rows, args.cols)
     sys.exit(0 if ok else 1)
 
 

@@ -116,22 +116,26 @@ def test_options_validation_raises_value_error():
 # ---------------------------------------------------------------------------
 
 def test_bfs_wrapper_deprecated_but_equivalent_and_cached():
+    from repro.serve.engine_cache import EngineCache, use_default_cache
+
     n = 600
     src, dst, g = _graph(n)
     want = bfs_reference(src, dst, n, [0])
-    with pytest.deprecated_call():
-        got, stats = bfs(g, [0], opts=BFSOptions(mode="dense"))
-    np.testing.assert_array_equal(got, want)
-    assert stats.visited == int((want < int(INF)).sum())
-    # second call reuses the cached engine (no second compile)
-    cache = g.__dict__["_bfs_engines"]
-    assert len(cache) == 1
-    eng = next(iter(cache.values()))
-    traces = eng.trace_count
-    with pytest.deprecated_call():
-        got2, _ = bfs(g, [77], opts=BFSOptions(mode="dense"))
-    assert len(cache) == 1 and eng.trace_count == traces
-    np.testing.assert_array_equal(got2, bfs_reference(src, dst, n, [77]))
+    with use_default_cache(EngineCache()) as cache:
+        with pytest.deprecated_call():
+            got, stats = bfs(g, [0], opts=BFSOptions(mode="dense"))
+        np.testing.assert_array_equal(got, want)
+        assert stats.visited == int((want < int(INF)).sum())
+        # second call reuses the cached engine (no second compile, no
+        # retrace) from the shared cache
+        assert len(cache) == 1
+        eng = cache.get(cache.keys()[0])
+        traces = eng.trace_count
+        with pytest.deprecated_call():
+            got2, _ = bfs(g, [77], opts=BFSOptions(mode="dense"))
+        assert len(cache) == 1 and eng.trace_count == traces
+        assert cache.stats()["misses"] == 1
+        np.testing.assert_array_equal(got2, bfs_reference(src, dst, n, [77]))
 
 
 # ---------------------------------------------------------------------------

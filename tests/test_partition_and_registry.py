@@ -204,26 +204,39 @@ def test_bfs_wrapper_emits_deprecation_warning():
         bfs(g, [0], opts=BFSOptions(mode="dense", max_levels=4))
 
 
-def test_bfs_wrapper_engine_cache_evicts_fifo():
+def test_bfs_wrapper_shared_cache_evicts_lru():
+    """The wrapper's private FIFO memo is gone: engines resolve through
+    the shared ``EngineCache``, whose eviction is LRU — a re-touched old
+    entry survives an insertion that a FIFO would have evicted it on."""
+    from repro.serve.engine_cache import EngineCache, use_default_cache
+
     n = 64
     src, dst = generate("erdos_renyi", n, seed=2, avg_degree=3)
     g = shard_graph(src, dst, n, p=1)
-    # 9 distinct option keys against the 8-entry FIFO cap; max_levels keeps
+    # 10 distinct option keys against an 8-entry cap; max_levels keeps
     # each throwaway compile tiny
-    variants = [BFSOptions(mode="dense", max_levels=2 + i) for i in range(9)]
-    with pytest.warns(DeprecationWarning):
-        bfs(g, [0], opts=variants[0])
-    cache = g.__dict__["_bfs_engines"]
-    first_key = next(iter(cache))
-    with pytest.warns(DeprecationWarning):
-        for o in variants[1:8]:
-            bfs(g, [0], opts=o)
-    assert len(cache) == 8 and first_key in cache
-    with pytest.warns(DeprecationWarning):
-        bfs(g, [0], opts=variants[8])      # 9th key: evicts the oldest
-    assert len(cache) == 8 and first_key not in cache
-    # the survivor set is the 8 most recent plans
-    assert {k[0] for k in cache} == set(variants[1:])
+    variants = [BFSOptions(mode="dense", max_levels=2 + i) for i in range(10)]
+    with use_default_cache(EngineCache(max_entries=8)) as cache:
+        with pytest.warns(DeprecationWarning):
+            bfs(g, [0], opts=variants[0])
+        first_key = cache.keys()[0]
+        with pytest.warns(DeprecationWarning):
+            for o in variants[1:8]:
+                bfs(g, [0], opts=o)
+        assert len(cache) == 8 and first_key in cache
+        with pytest.warns(DeprecationWarning):
+            bfs(g, [0], opts=variants[0])  # hit: refreshes LRU recency
+        with pytest.warns(DeprecationWarning):
+            bfs(g, [0], opts=variants[8])  # 9th key: evicts variants[1]
+        assert len(cache) == 8
+        assert first_key in cache          # survived — FIFO would drop it
+        assert cache.keys()[-1] != first_key
+        with pytest.warns(DeprecationWarning):
+            bfs(g, [0], opts=variants[9])  # 10th key: evicts variants[2]
+        assert first_key in cache
+        st = cache.stats()
+        assert st["misses"] == 10 and st["hits"] == 1
+        assert st["evictions"] == 2 and st["entries"] == 8
 
 
 def test_options_validate_rejects_unknown_2d_strategies():
