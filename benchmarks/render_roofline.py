@@ -1,10 +1,12 @@
 """Render benchmark JSON ledgers as markdown tables.
 
-Three inputs render here: the §Roofline table from
-``dryrun_results.json``, and — from a ``BENCH_*.json`` — the 1-D vs 2-D
+Four inputs render here: the §Roofline table from
+``dryrun_results.json``; from a ``BENCH_*.json`` the 1-D vs 2-D
 partition sweep (``partition_sweep`` key) and the multi-graph serving
 amortization ledger (``serving`` key: per-graph cold compile vs warm run,
-plus the budget-bound eviction pass).  Every sweep series label carries
+plus the budget-bound eviction pass); and the standalone
+``BENCH_wire_format.json`` ledger (``wire_format`` key: packed vs bytes
+dense exchanges, modeled + measured + HLO-parsed collective bytes).  Every sweep series label carries
 the partition kind (``erdos_renyi_100k[1d]`` vs ``erdos_renyi_100k[2d]``)
 so the two schemes plot as distinct curves instead of collapsing into
 one.  A ledger matching none of the known schemas (or a ``--only``
@@ -66,6 +68,35 @@ def render_serving(data):
               f"over {ev['rounds']} round-robin rounds")
 
 
+def render_wire_format(data):
+    """BENCH_wire_format.json: packed vs bytes rows grouped per series.
+
+    ``auto`` rows (what the plan resolved per phase) print after the
+    table so the table columns stay uniform.
+    """
+    rows = [r for r in data["wire_format"] if "resolved" not in r]
+    autos = [r for r in data["wire_format"] if "resolved" in r]
+    print("| series | p | grid | wire | modeled B/level | measured B/level "
+          "| HLO collective B | per-run (s) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda x: (series_label(x), x["p"],
+                                         bool(x.get("measured")),
+                                         x["wire_format"])):
+        modeled = (f"{r['modeled_level_bytes']:.0f}"
+                   if "modeled_level_bytes" in r else "-")
+        meas = (f"{r['measured_level_bytes']:.0f}"
+                if "measured_level_bytes" in r else "-")
+        hlo = (f"{r['hlo_collective_bytes']:.0f}"
+               if "hlo_collective_bytes" in r else "-")
+        per_run = fmt_s(r["per_run_s"]) if "per_run_s" in r else "-"
+        print(f"| {series_label(r)} | {r['p']} | {r['r']}x{r['c']} "
+              f"| {r['wire_format']} | {modeled} | {meas} | {hlo} "
+              f"| {per_run} |")
+    for r in autos:
+        print(f"\nauto @ {series_label(r)} p={r['p']}: "
+              f"resolved {r['resolved']}")
+
+
 def render_dryrun(data):
     print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
           "t_collective (s) | bottleneck | GiB/dev | useful-flops ratio |")
@@ -91,6 +122,14 @@ def main(path):
     # BENCH ledgers always carry the partition_sweep key (possibly empty
     # under --only filters); dispatch on presence, not truthiness, so a
     # filtered BENCH json never falls through to the dryrun schema.
+    if "wire_format" in data and "partition_sweep" not in data:
+        # the standalone BENCH_wire_format.json ledger
+        if data.get("wire_format"):
+            render_wire_format(data)
+        else:
+            print("(empty wire_format ledger — run benchmarks/run.py "
+                  "--only wire_format)")
+        return
     if "partition_sweep" in data or "serving" in data:
         rendered = False
         if data.get("partition_sweep"):

@@ -42,6 +42,8 @@ _ROWS = []
 _ENGINE_TIMINGS = {}   # bench key -> {compile_s, per_run_s, ...}
 _PARTITION_SWEEP = []  # 1-D vs 2-D scheme rows (modeled + measured bytes)
 _SERVING = {}          # multi-graph serving ledger (cold/warm/hit rate)
+_WIRE_FORMAT = []      # packed vs bytes wire rows (own BENCH_wire_format
+                       # ledger; see --wire-out)
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -323,6 +325,132 @@ def bench_partition_1d_vs_2d():
             f"comm_bytes={st.comm_bytes:.0f}")
 
 
+def bench_wire_format_sweep():
+    """Packed-bitset vs byte-mask dense wire format (the §5-adjacent
+    "Compression and Sieve" optimization).
+
+    Modeled rows price the per-level dense exchange of both formats for
+    both partition schemes at growing shard counts (packed words model
+    8× below the uint8 mask).  Measured rows compile real engines per
+    (wire_format, partition) on every shard count the local device set
+    hosts and record (a) the run's accumulated per-level exchange bytes
+    and (b) the collective bytes XLA actually emitted in the compiled
+    loop body (``hlo_stats.collective_bytes`` over the engine
+    executable) — compiler ground truth for the on-wire reduction.  A
+    final row per p records what ``wire_format="auto"`` resolved to.
+    Everything lands in the ``BENCH_wire_format.json`` ledger
+    (``--wire-out``), rendered by ``render_roofline.py``.
+    """
+    import numpy as _np
+    from jax.sharding import Mesh
+    from repro.launch.hlo_stats import collective_bytes
+    from repro.launch.mesh import make_grid_mesh
+
+    n_model, s = 100_000, 1
+    pairs_1d = (("bytes", "alltoall_direct"),
+                ("packed", "alltoall_direct_packed"))
+    pairs_2d = (("bytes", ("allgather", "alltoall_reduce")),
+                ("packed", ("allgather_packed", "alltoall_reduce_packed")))
+
+    for p in (4, 16, 64):
+        r, c = default_grid(p)
+        n_pad = Partition1D(n_model, p).n
+        modeled = {}
+        for fmt, strat in pairs_1d:
+            b = ex.dense_level_bytes(strat, n_pad, p, s, 1)
+            modeled[("1d", fmt)] = b
+            _WIRE_FORMAT.append({
+                "graph": f"erdos_renyi_{n_model // 1000}k",
+                "partition": "1d", "wire_format": fmt, "p": p, "r": 1,
+                "c": p, "strategy": strat, "modeled_level_bytes": b,
+            })
+        for fmt, (es, fs) in pairs_2d:
+            b = ex.grid_level_bytes(es, fs, n_pad, r, c, s, 1)
+            modeled[("2d", fmt)] = b
+            _WIRE_FORMAT.append({
+                "graph": f"erdos_renyi_{n_model // 1000}k",
+                "partition": "2d", "wire_format": fmt, "p": p, "r": r,
+                "c": c, "strategy": f"{es}+{fs}", "modeled_level_bytes": b,
+            })
+        row(f"wire_modeled/p={p}", 0.0,
+            f"1d_bytes={modeled['1d', 'bytes']:.0f};"
+            f"1d_packed={modeled['1d', 'packed']:.0f};"
+            f"2d_bytes={modeled['2d', 'bytes']:.0f};"
+            f"2d_packed={modeled['2d', 'packed']:.0f};"
+            f"ratio_1d={modeled['1d', 'bytes'] / modeled['1d', 'packed']:.1f}")
+
+    # measured: real engines on the local device set (CI's 4-device job
+    # measures the p=4 collectives; smaller n keeps the CPU loop fast)
+    n_meas = 20_000
+    src, dst = generate("erdos_renyi", n_meas, seed=0, avg_degree=16.0)
+    p_avail = jax.device_count()
+    for p in sorted({1, 4} & set(range(1, p_avail + 1))):
+        g = shard_graph(src, dst, n_meas, p)
+        r, c = default_grid(p)
+        meshes = {
+            "1d": (Mesh(_np.asarray(jax.devices()[:p]).reshape(p), ("p",)),
+                   "p"),
+            "2d": (make_grid_mesh(r, c), None),
+        }
+        for kind, (mesh, axis) in meshes.items():
+            meas, hlo_meas = {}, {}
+            for fmt in ("bytes", "packed"):
+                pl = plan(g, BFSOptions(mode="dense", wire_format=fmt),
+                          mesh=mesh, axis=axis, num_sources=s,
+                          partition=kind)
+                t0 = time.time()
+                eng = pl.compile()
+                compile_s = time.time() - t0
+                res = eng.run([0])                 # warmup
+                t0 = time.time()
+                for i in range(3):
+                    res = eng.run([7 * i + 1])
+                per_run = (time.time() - t0) / 3
+                stats = res.stats()
+                hlo = collective_bytes(eng.compiled_hlo())
+                level_bytes = (stats.comm_bytes / stats.levels
+                               if stats.levels else 0.0)
+                meas[fmt] = level_bytes
+                hlo_meas[fmt] = hlo["total"]
+                meta = pl.describe()
+                _WIRE_FORMAT.append({
+                    "graph": f"erdos_renyi_{n_meas // 1000}k",
+                    "partition": kind, "wire_format": fmt, "p": p,
+                    "r": r if kind == "2d" else 1,
+                    "c": c if kind == "2d" else p, "measured": True,
+                    "levels": stats.levels, "per_run_s": per_run,
+                    "compile_s": compile_s,
+                    "run_comm_bytes": stats.comm_bytes,
+                    "measured_level_bytes": level_bytes,
+                    "hlo_collective_bytes": hlo["total"],
+                    "wire_formats": meta["wire_formats"],
+                })
+                row(f"wire_measured/{kind}/p={p}/{fmt}", per_run * 1e6,
+                    f"levels={stats.levels};level_bytes={level_bytes:.0f};"
+                    f"hlo_collective_bytes={hlo['total']:.0f}")
+            if p > 1:
+                # the tentpole claim, checked on compiler ground truth:
+                # the collective buffer bytes XLA emitted for the packed
+                # loop must be >= 4x below the bytes loop's (the run-stat
+                # ratio is the analytic model and would hold trivially)
+                assert (hlo_meas["bytes"] / max(hlo_meas["packed"], 1)
+                        >= 4), hlo_meas
+            # what "auto" resolves to at this topology (packed for dense
+            # phases whenever p > 1 — the byte model decides)
+            auto_meta = plan(g, BFSOptions(mode="dense", wire_format="auto"),
+                             mesh=mesh, axis=axis, num_sources=s,
+                             partition=kind).describe()
+            _WIRE_FORMAT.append({
+                "graph": f"erdos_renyi_{n_meas // 1000}k",
+                "partition": kind, "wire_format": "auto", "p": p,
+                "r": r if kind == "2d" else 1,
+                "c": c if kind == "2d" else p,
+                "resolved": auto_meta["wire_formats"],
+            })
+            row(f"wire_auto/{kind}/p={p}", 0.0,
+                f"resolved={auto_meta['wire_formats']}")
+
+
 def bench_multi_graph_serving():
     """Multi-tenant serving: cross-graph compile amortization.
 
@@ -480,6 +608,7 @@ BENCHES = [
     bench_direction_optimizing,
     bench_engine_amortization,
     bench_partition_1d_vs_2d,
+    bench_wire_format_sweep,
     bench_multi_graph_serving,
     bench_multi_source_throughput,
     bench_kernels,
@@ -491,6 +620,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_results.json",
                     help="JSON ledger path (compile vs per-run split)")
+    ap.add_argument("--wire-out", default="BENCH_wire_format.json",
+                    help="wire-format sweep ledger path (written when the "
+                         "wire_format bench runs)")
     ap.add_argument("--only", default=None,
                     help="substring filter on bench function names")
     args = ap.parse_args(argv)
@@ -519,6 +651,19 @@ def main(argv=None) -> None:
         json.dump(ledger, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out} ({len(_ROWS)} rows, "
           f"{len(_ENGINE_TIMINGS)} engine timings)", flush=True)
+
+    if _WIRE_FORMAT:
+        wire_ledger = {
+            "wire_format": _WIRE_FORMAT,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "device_count": jax.device_count(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.wire_out, "w") as f:
+            json.dump(wire_ledger, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.wire_out} ({len(_WIRE_FORMAT)} wire rows)",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -80,12 +80,23 @@ class BFSOptions:
     queue_threshold: float = 1 / 64           # frontier edges below -> queue
     bottom_up_threshold: float = 0.05         # frontier verts above -> bottom-up
     use_kernel: bool = False                  # Pallas bsr_spmm expansion
-                                              # (dense mode, single shard)
+                                              # (dense mode, 1-D partition;
+                                              # runs per shard under the
+                                              # multi-device loop)
+    # Dense-phase wire layout: "packed" ships uint32 bitset words (8x
+    # smaller, OR merges), "bytes" the uint8 mask, "auto" prices both per
+    # phase at plan time (exchange.select_exchange / the _packed strategy
+    # twins) and picks the cheaper — packed on real meshes, bytes on a
+    # single device where nothing crosses the wire.
+    wire_format: str = "auto"                 # packed | bytes | auto
 
     def validate(self):
         if self.mode not in ("dense", "queue", "auto"):
             raise ValueError(f"unknown BFS mode {self.mode!r}; "
                              "expected dense | queue | auto")
+        if self.wire_format not in ("packed", "bytes", "auto"):
+            raise ValueError(f"unknown wire_format {self.wire_format!r}; "
+                             "expected packed | bytes | auto")
         # get_exchange raises a ValueError naming the registered strategies;
         # "auto" defers to the byte-model selection at plan time.
         for kind, name in (("dense", self.dense_exchange),
@@ -167,37 +178,65 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
                    axis, axes_sizes, opts: BFSOptions, max_levels: int,
                    dense_strategy: ex.ExchangeStrategy,
                    queue_strategy: ex.ExchangeStrategy,
-                   expand_fn=None, on_trace=None):
+                   expand_fn=None, expand_emits_packed: bool = False,
+                   n_kernel_args: int = 0, bottom_up_wire: str = "bytes",
+                   on_trace=None):
     """Builds the per-shard BFS body (runs under shard_map).
 
     Exchange strategies arrive pre-resolved from the registry (plan time),
-    so the loop body never consults strategy names.  ``on_trace`` is
-    invoked once per trace — engines use it to prove compile-once reuse.
+    so the loop body never consults strategy names; the strategy's
+    ``wire`` field decides whether candidates cross the exchange packed
+    (uint32 bitset words, OR merges) or as the uint8 mask.  ``expand_fn``
+    (the Pallas bsr_spmm path) receives the frontier plus
+    ``n_kernel_args`` extra per-shard operands (the device-resident
+    blocked adjacency); with ``expand_emits_packed`` its output is
+    already the per-shard-blocked word array, so a packed exchange
+    consumes it with no pack step.  ``on_trace`` is invoked once per
+    trace — engines use it to prove compile-once reuse.
     """
     p, shard, n = part.p, part.shard_size, part.n
-    itemsize = 1  # uint8 masks on the wire
+    itemsize = 1  # uint8 masks (the "bytes" wire format)
+    w_shard = fr.packed_words(shard)
     queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
     bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part.n_logical))
     dense_bytes = dense_strategy.bytes_model(n, p, s, itemsize, axes_sizes)
     queue_bytes = queue_strategy.bytes_model(p, opts.queue_cap, 4)
+    bottom_up_bytes = ex.bottomup_level_bytes(n, p, s, itemsize,
+                                              wire=bottom_up_wire)
 
-    def dense_level(frontier, dist, level, src_local, dst_global):
+    def dense_level(frontier, dist, level, src_local, dst_global, kargs):
         if expand_fn is not None:
-            cand = expand_fn(frontier)
+            cand = expand_fn(frontier, *kargs)
         else:
             cand = fr.expand_dense(frontier, src_local, dst_global, n)
-        own = dense_strategy.impl(cand, axis)
+        if dense_strategy.wire == "packed":
+            # keep candidates packed through the collective: pack once
+            # (unless the kernel already emitted words), OR-merge on the
+            # wire payload, unpack only the owned W-word slice
+            words = cand if (expand_fn is not None and expand_emits_packed
+                             ) else fr.pack_bits(cand, n_blocks=p)
+            own = fr.unpack_bits(dense_strategy.impl(words, axis), shard)
+        else:
+            own = dense_strategy.impl(cand, axis)
         dist, new = _owned_update(dist, own, level)
         return dist, new, jnp.float32(dense_bytes)
 
     def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
-        fglob = ex.allgather_frontier(frontier, axis)      # (n, S)
-        cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local, shard)
+        if bottom_up_wire == "packed":
+            # gather the packed frontier (8x smaller) and read source
+            # bits straight out of the words — no (n, S) unpack
+            fw = fr.pack_bits(frontier)                    # (W, S)
+            fglob_w = ex.allgather_frontier(fw, axis)      # (p*W, S)
+            cand = fr.expand_bottom_up_packed(fglob_w, in_src_global,
+                                              in_dst_local, shard, w_shard)
+        else:
+            fglob = ex.allgather_frontier(frontier, axis)  # (n, S)
+            cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local,
+                                       shard)
         dist, new = _owned_update(dist, cand, level)
-        bytes_ = ex.bottomup_level_bytes(n, p, s, itemsize)
-        return dist, new, jnp.float32(bytes_)
+        return dist, new, jnp.float32(bottom_up_bytes)
 
-    def queue_level(frontier, dist, level, src_local, dst_global):
+    def queue_level(frontier, dist, level, src_local, dst_global, kargs):
         me = lax.axis_index(axis)
         valid = dst_global >= 0
         active = (frontier[src_local, 0] > 0) & valid
@@ -216,23 +255,24 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             return d2, new, jnp.float32(queue_bytes)
 
         def dense_branch():
-            return dense_level(frontier, dist, level, src_local, dst_global)
+            return dense_level(frontier, dist, level, src_local, dst_global,
+                               kargs)
 
         d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
         return d2, new, bytes_, overflow_any
 
     def body(state, src_local, dst_global, in_src_global, in_dst_local,
-             valid_local):
+             kargs, valid_local):
         dist, frontier, level, _, bytes_acc, overflowed, modes = state
 
         if opts.mode == "dense":
             dist, new, b = dense_level(frontier, dist, level, src_local,
-                                       dst_global)
+                                       dst_global, kargs)
             modes = modes.at[0].add(1)
             ovf = jnp.bool_(False)
         elif opts.mode == "queue":
             dist, new, b, ovf = queue_level(frontier, dist, level, src_local,
-                                            dst_global)
+                                            dst_global, kargs)
             modes = modes.at[1].add(1)
         else:  # auto: direction-optimizing hybrid
             f_verts = lax.psum(frontier.sum(dtype=jnp.int32), axis)
@@ -249,12 +289,12 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
 
             def do_queue():
                 d, nw, b, ovf = queue_level(frontier, dist, level, src_local,
-                                            dst_global)
+                                            dst_global, kargs)
                 return d, nw, b, ovf, jnp.int32(1)
 
             def do_dense():
                 d, nw, b = dense_level(frontier, dist, level, src_local,
-                                       dst_global)
+                                       dst_global, kargs)
                 return d, nw, b, jnp.bool_(False), jnp.int32(0)
 
             if s == 1:
@@ -272,10 +312,11 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         return (dist, new, level + 1, active, bytes_acc + b,
                 overflowed | ovf, modes)
 
-    def shard_fn(src_local, dst_global, in_src_global, in_dst_local,
-                 dist0, frontier0, valid_local):
+    def shard_fn(src_local, dst_global, in_src_global, in_dst_local, *rest):
         if on_trace is not None:
             on_trace()
+        kargs = rest[:n_kernel_args]
+        dist0, frontier0, valid_local = rest[n_kernel_args:]
         state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
                   jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32))
 
@@ -284,7 +325,7 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
 
         def body_fn(st):
             return body(st, src_local, dst_global, in_src_global,
-                        in_dst_local, valid_local)
+                        in_dst_local, kargs, valid_local)
 
         dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
             cond, body_fn, state0)
@@ -299,6 +340,7 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
                       fold_strategy: ex.ExchangeStrategy,
                       expand_sparse_strategy: ex.ExchangeStrategy,
                       fold_sparse_strategy: ex.ExchangeStrategy,
+                      bottom_up_wire: str = "bytes",
                       on_trace=None):
     """Per-device body of the 2-D two-phase BFS level loop (shard_map).
 
@@ -337,6 +379,7 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
     r, c, b = part2.r, part2.c, part2.shard_size
     p = part2.p
     fold_len = part2.fold_size
+    w_chunk = fr.packed_words(b)
     grid_axes = (row_axis, col_axis)
     queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
     bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part2.n_logical))
@@ -347,20 +390,37 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
         expand_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4))
     sparse_bytes = expand_sparse_bytes + jnp.float32(
         fold_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4))
-    bottom_up_bytes = jnp.float32(ex.bottomup_level_bytes(part2.n, p, s, 1))
+    bottom_up_bytes = jnp.float32(ex.bottomup_level_bytes(
+        part2.n, p, s, 1, wire=bottom_up_wire))
 
     def dense_level(frontier, dist, level, src_rowlocal, dst_fold):
-        frow = expand_strategy.impl(frontier, col_axis)          # (c*b, S)
+        if expand_strategy.wire == "packed":
+            # ship the frontier chunk as words; the c gathered segments
+            # unpack blockwise into the row frontier the expansion reads
+            fw = expand_strategy.impl(fr.pack_bits(frontier), col_axis)
+            frow = fr.unpack_bits(fw, b, n_blocks=c)             # (c*b, S)
+        else:
+            frow = expand_strategy.impl(frontier, col_axis)      # (c*b, S)
         cand = fr.expand_dense_2d(frow, src_rowlocal, dst_fold, fold_len)
-        own = fold_strategy.impl(cand, row_axis)                 # (b, S)
+        if fold_strategy.wire == "packed":
+            cw = fold_strategy.impl(fr.pack_bits(cand, n_blocks=r), row_axis)
+            own = fr.unpack_bits(cw, b)                          # (b, S)
+        else:
+            own = fold_strategy.impl(cand, row_axis)             # (b, S)
         dist, new = _owned_update(dist, own, level)
         return dist, new, dense_bytes
 
     def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
         # gather over (rows, cols) is chunk-id order: chunk k lives on
         # grid device (k // c, k % c), the same major-first linearization
-        fglob = ex.allgather_frontier(frontier, grid_axes)       # (n, S)
-        cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local, b)
+        if bottom_up_wire == "packed":
+            fw = fr.pack_bits(frontier)                          # (Wb, S)
+            fglob_w = ex.allgather_frontier(fw, grid_axes)       # (p*Wb, S)
+            cand = fr.expand_bottom_up_packed(fglob_w, in_src_global,
+                                              in_dst_local, b, w_chunk)
+        else:
+            fglob = ex.allgather_frontier(frontier, grid_axes)   # (n, S)
+            cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local, b)
         dist, new = _owned_update(dist, cand, level)
         return dist, new, bottom_up_bytes
 

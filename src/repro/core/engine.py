@@ -147,6 +147,10 @@ class BFSPlan:
     fold_strategy: Optional[ex.ExchangeStrategy] = None
     expand_sparse_strategy: Optional[ex.ExchangeStrategy] = None
     fold_sparse_strategy: Optional[ex.ExchangeStrategy] = None
+    # resolved wire layout of the bottom-up frontier gather (the one dense
+    # exchange that is not a registry strategy); "auto" resolves here at
+    # plan time just like the per-phase strategies resolve above
+    bottom_up_wire: str = "bytes"
 
     def describe(self) -> dict:
         """Static plan metadata (the non-per-run half of the old BFSStats)."""
@@ -184,6 +188,15 @@ class BFSPlan:
                 "fold_exchange": self.fold_strategy.name,
                 "expand_sparse_exchange": self.expand_sparse_strategy.name,
                 "fold_sparse_exchange": self.fold_sparse_strategy.name,
+                # per-phase wire layout the plan resolved (what "auto"
+                # actually picked); sparse phases always ship int32 ids
+                "wire_formats": {
+                    "expand": self.expand_strategy.wire,
+                    "fold": self.fold_strategy.wire,
+                    "expand_sparse": "ids",
+                    "fold_sparse": "ids",
+                    "bottom_up": self.bottom_up_wire,
+                },
                 # (no in_e_cap here: the bottom-up blocks build lazily at
                 # compile time for auto plans; describe() must stay cheap)
                 "e_cap": self.graph2d.e_cap,
@@ -196,12 +209,17 @@ class BFSPlan:
                 "queue_level_bytes": (phase_bytes["expand_sparse"]
                                       + phase_bytes["fold_sparse"]),
                 "bottom_up_level_bytes": ex.bottomup_level_bytes(
-                    part2.n, part2.p, s, 1),
+                    part2.n, part2.p, s, 1, wire=self.bottom_up_wire),
             })
         else:
             meta.update({
                 "dense_exchange": self.dense_strategy.name,
                 "queue_exchange": self.queue_strategy.name,
+                "wire_formats": {
+                    "dense": self.dense_strategy.wire,
+                    "queue": "ids",
+                    "bottom_up": self.bottom_up_wire,
+                },
                 "e_cap": self.graph.e_cap,
                 "in_e_cap": self.graph.in_e_cap,
                 "dense_level_bytes": self.dense_strategy.bytes_model(
@@ -209,7 +227,8 @@ class BFSPlan:
                 "queue_level_bytes": self.queue_strategy.bytes_model(
                     part.p, self.opts.queue_cap, 4),
                 "bottom_up_level_bytes": ex.bottomup_level_bytes(
-                    part.n, part.p, self.num_sources, 1),
+                    part.n, part.p, self.num_sources, 1,
+                    wire=self.bottom_up_wire),
             })
         return meta
 
@@ -232,7 +251,12 @@ class BFSPlan:
                     tuple(int(d.id) for d in self.mesh.devices.flat))
         o = self.opts
         opt_key = (o.mode, o.local_update, o.dedupe, o.queue_cap,
-                   o.queue_threshold, o.bottom_up_threshold, o.use_kernel)
+                   o.queue_threshold, o.bottom_up_threshold, o.use_kernel,
+                   # wire formats key by what they *resolved* to: the
+                   # packed-vs-bytes choice of each phase is in the
+                   # resolved strategy names below; the bottom-up gather
+                   # has no registry strategy so its resolution keys here
+                   self.bottom_up_wire)
         strat_key = tuple(
             s.name if s is not None else None
             for s in (self.dense_strategy, self.queue_strategy,
@@ -266,27 +290,89 @@ class BFSPlan:
         if self.partition == "2d":
             g = self.graph2d
             n = g.part.n
+            b = g.part.shard_size
             edge = 2 * g.p * g.e_cap * 4           # src_rowlocal + dst_fold
             if self.opts.mode == "auto":
                 # in_src_global + in_dst_local and the (p, b) out-degrees
                 edge += 2 * g.p * g.bottom_up_in_cap() * 4 + n * 4
+            # packed phases keep a loop-live word array per device: the
+            # gathered row words (c*Wb) and/or the fold words (r*Wb)
+            wire = 0
+            if self.expand_strategy.wire == "packed":
+                wire += g.part.c * fr.packed_words(b) * 4
+            if self.fold_strategy.wire == "packed":
+                wire += g.part.r * fr.packed_words(b) * 4
         else:
             g = self.graph
             n = g.part.n
             edge = 2 * g.p * (g.e_cap + g.in_e_cap) * 4
+            # the packed candidate word array ((p*W, S) uint32) is live
+            # across the dense exchange
+            wire = (g.p * fr.packed_words(g.part.shard_size) * 4
+                    if self.dense_strategy.wire == "packed" else 0)
+            if self.opts.use_kernel:
+                # per-shard blocked adjacency resident on device for the
+                # engine's lifetime (tile values + block row/col indices),
+                # priced from the tile *count* alone — materializing the
+                # dense tiles belongs to compile(), not cache admission
+                kmax, blk = g.bsr_shard_caps()
+                edge += g.p * kmax * (blk * blk * 4 + 2 * 4)
         s = self.num_sources
         work = 2 * (n * s * 4 + n * s * 1)         # dist (i32) + frontier (u8)
-        return int(edge + n + work)                # + 1-byte validity mask
+        return int(edge + n + work + wire * s)     # + 1-byte validity mask
 
     def compile(self) -> "BFSEngine":
         return BFSEngine(self)
 
 
-def _resolve_strategy(kind: str, name: str, model_args: tuple):
-    """Registry lookup, or byte-model auto-selection for name="auto"."""
+def _resolve_strategy(kind: str, name: str, model_args: tuple,
+                      wire_format: str = "bytes"):
+    """Registry lookup, or byte-model auto-selection for name="auto".
+
+    ``wire_format`` (``BFSOptions.wire_format``) resolves the packed-vs-
+    bytes layout of the dense-phase kinds at plan time:
+
+      * ``"bytes"``  — the named strategy as registered (uint8 masks).
+      * ``"packed"`` — the strategy's ``<name>_packed`` twin (uint32
+        bitset words); a clear error if no twin exists.
+      * ``"auto"``   — whichever of the two models fewer bytes for this
+        plan's shapes; ties keep ``bytes`` (no pack/unpack work when
+        nothing crosses the wire, e.g. p = 1).
+
+    A name that already ends in ``_packed`` is an explicit packed choice
+    and short-circuits the resolution; ``name="auto"`` spans every
+    registered strategy of the wire formats the option admits.
+    """
     if name == "auto":
-        return ex.select_exchange(kind, *model_args)
-    return ex.get_exchange(kind, name)
+        wire = None if wire_format == "auto" else wire_format
+        return ex.select_exchange(kind, *model_args, wire=wire)
+    if wire_format == "bytes" or name.endswith("_packed"):
+        return ex.get_exchange(kind, name)
+    try:
+        packed = ex.get_exchange(kind, name + "_packed")
+    except ValueError:
+        if wire_format == "packed":
+            raise ValueError(
+                f"{kind} strategy {name!r} has no packed variant; use "
+                f"wire_format='bytes' or 'auto'") from None
+        return ex.get_exchange(kind, name)
+    base = ex.get_exchange(kind, name)
+    if wire_format == "packed":
+        return packed
+    return (packed if packed.bytes_model(*model_args)
+            < base.bytes_model(*model_args) else base)
+
+
+def _resolve_bottom_up_wire(wire_format: str, n: int, p: int, s: int) -> str:
+    """Packed-vs-bytes for the bottom-up frontier gather (not a registry
+    strategy; same resolution rules as ``_resolve_strategy``)."""
+    if wire_format == "packed":
+        return "packed"
+    if wire_format == "auto" and (
+            ex.bottomup_level_bytes(n, p, s, wire="packed")
+            < ex.bottomup_level_bytes(n, p, s)):
+        return "packed"
+    return "bytes"
 
 
 def plan(graph, opts: BFSOptions = BFSOptions(), *,
@@ -321,11 +407,19 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
     if opts.mode == "queue" and num_sources != 1:
         raise ValueError("queue frontier supports a single source "
                          f"(num_sources={num_sources})")
+    if opts.use_kernel and opts.mode != "dense":
+        # unsupported combos fail loudly instead of silently ignoring the
+        # flag: the queue/auto level loops take the segment-scatter
+        # expansion paths the kernel does not implement
+        raise ValueError(
+            f"use_kernel requires mode='dense' (got mode={opts.mode!r}); "
+            "the Pallas bsr_spmm expansion has no queue/bottom-up analog")
 
     if partition == "2d":
         if opts.use_kernel:
-            raise ValueError("use_kernel is a single-shard 1-D dense path; "
-                             "not available with partition='2d'")
+            raise ValueError("use_kernel is a 1-D dense path (the blocked "
+                             "adjacency is encoded per vertex shard); not "
+                             "available with partition='2d'")
         if mesh is None:
             if part.p != 1:
                 raise ValueError("pass a 2-axis mesh whose r*c equals the "
@@ -360,23 +454,25 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
             max_levels=opts.max_levels or part.n_logical,
             partition="2d", graph2d=graph2d,
             expand_strategy=_resolve_strategy(
-                "expand_row", opts.expand_exchange, grid_args),
+                "expand_row", opts.expand_exchange, grid_args,
+                opts.wire_format),
             fold_strategy=_resolve_strategy(
-                "fold_col", opts.fold_exchange, grid_args),
+                "fold_col", opts.fold_exchange, grid_args,
+                opts.wire_format),
+            # sparse phases ship int32 ids — already compact; wire_format
+            # does not apply to them
             expand_sparse_strategy=_resolve_strategy(
                 "expand_row_sparse", opts.expand_sparse_exchange,
                 sparse_args),
             fold_sparse_strategy=_resolve_strategy(
                 "fold_col_sparse", opts.fold_sparse_exchange, sparse_args),
+            bottom_up_wire=_resolve_bottom_up_wire(
+                opts.wire_format, graph2d.part.n, part.p, s),
         )
 
     if isinstance(graph, ShardedGraph2D):
         raise ValueError("partition='1d' needs a 1-D ShardedGraph; this "
                          "graph holds 2-D edge blocks")
-    if opts.use_kernel:
-        # Pallas path precondition; AssertionError kept for back-compat.
-        assert part.p == 1 and opts.mode == "dense", \
-            "use_kernel requires p == 1 and mode == 'dense'"
 
     if mesh is None:
         dev = jax.devices()[:1]
@@ -398,9 +494,11 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         max_levels=opts.max_levels or part.n_logical,
         dense_strategy=_resolve_strategy(
             "dense", opts.dense_exchange,
-            (part.n, part.p, s, 1, axes_sizes)),
+            (part.n, part.p, s, 1, axes_sizes), opts.wire_format),
         queue_strategy=_resolve_strategy(
             "queue", opts.queue_exchange, (part.p, opts.queue_cap, 4)),
+        bottom_up_wire=_resolve_bottom_up_wire(
+            opts.wire_format, part.n, part.p, s),
     )
 
 
@@ -460,6 +558,7 @@ class BFSEngine:
                 part, buf_owner.n_edges, s, axis[0], axis[1], opts,
                 plan_.max_levels, plan_.expand_strategy, plan_.fold_strategy,
                 plan_.expand_sparse_strategy, plan_.fold_sparse_strategy,
+                bottom_up_wire=plan_.bottom_up_wire,
                 on_trace=self._bump_trace)
             # only the auto hybrid's bottom-up level reads the in-edge
             # blocks and out-degrees; dense/queue engines neither build
@@ -472,13 +571,22 @@ class BFSEngine:
         else:
             buf_owner = plan_.graph
             part = buf_owner.part
-            expand_fn = (self._build_kernel_expand() if opts.use_kernel
-                         else None)
+            edge_groups = [("edges", buf_owner.flat)]
+            expand_fn, expand_packed, n_kernel_args = None, False, 0
+            if opts.use_kernel:
+                # the per-shard blocked adjacency rides the same sharded
+                # upload path as the edge blocks (one more device group)
+                expand_fn, expand_packed, kernel_arrays = \
+                    self._build_kernel_expand()
+                edge_groups.append(("kernel_bsr", kernel_arrays))
+                n_kernel_args = 3
             shard_fn = _make_shard_fn(
                 part, buf_owner.n_edges, s, axis, plan_.axes_sizes, opts,
                 plan_.max_levels, plan_.dense_strategy, plan_.queue_strategy,
-                expand_fn=expand_fn, on_trace=self._bump_trace)
-            edge_groups = [("edges", buf_owner.flat)]
+                expand_fn=expand_fn, expand_emits_packed=expand_packed,
+                n_kernel_args=n_kernel_args,
+                bottom_up_wire=plan_.bottom_up_wire,
+                on_trace=self._bump_trace)
         n = part.n
 
         spec_edge = P(axis)
@@ -518,8 +626,10 @@ class BFSEngine:
 
             self._gbufs = ()
             for group, host_arrays in edge_groups:
+                # dtype-preserving upload: edge/bottom-up blocks are int32,
+                # the kernel group's adjacency tile values are float32
                 self._gbufs += _cached(group, lambda ha=host_arrays: tuple(
-                    jax.device_put(np.asarray(a, dtype=np.int32), sh_edge)
+                    jax.device_put(np.asarray(a), sh_edge)
                     for a in ha()))
             self._valid = _cached("valid", lambda: jax.device_put(
                 np.arange(n) < part.n_logical, sh_edge))
@@ -557,6 +667,16 @@ class BFSEngine:
         what the serving ``EngineCache`` charges against its budget)."""
         return self.plan.estimated_device_bytes()
 
+    def compiled_hlo(self) -> str:
+        """Optimized HLO text of the compiled traversal loop.
+
+        What the wire-format benchmark parses (launch/hlo_stats
+        ``collective_bytes``) to cross-check the analytic byte models
+        against compiler-emitted collective buffer sizes — the measured
+        half of the packed-vs-bytes ledger.
+        """
+        return self._run_c.as_text()
+
     def _bump_trace(self):
         self._trace_count += 1
 
@@ -565,33 +685,49 @@ class BFSEngine:
         return self._trace_count
 
     def _build_kernel_expand(self):
-        # Pallas bsr_spmm frontier expansion: block-CSR adjacency on the
-        # MXU (boolean semiring via sum + >0).  Single-shard dense mode —
-        # the multi-shard path keeps the segment-scatter expansion.
-        from repro.graphs.formats import block_sparse_adjacency
+        """Pallas bsr_spmm frontier expansion, per shard.
+
+        Each device's 128x128-blocked *transposed* adjacency slice
+        (rows = global candidate ids, cols = the shard's local sources;
+        candidates = A_shard^T @ f_local on the MXU, boolean semiring via
+        sum + >0) travels as a shard_map operand like the edge blocks, so
+        ``use_kernel=True`` runs on every shard of the multi-device 1-D
+        loop — the old single-shard restriction baked the adjacency into
+        the trace as a replicated constant.  With a packed dense wire the
+        kernel path emits the per-shard-blocked uint32 candidate words
+        directly (``frontier_expand_packed``), so the packed exchange
+        consumes them with no separate pack step.
+
+        Returns ``(expand_fn, emits_packed, host_arrays_fn)``;
+        ``expand_fn(frontier, blocks_flat, block_rows, block_cols)`` runs
+        inside the shard body on that shard's slices.
+        """
         from repro.kernels.bsr_spmm import ops as spmm_ops
 
         graph = self.plan.graph
-        n = graph.part.n
-        src_local, dst_global, _, _ = graph.flat()
-        valid_e = dst_global >= 0
-        src_g = np.asarray(src_local)[valid_e]
-        dst_g = np.asarray(dst_global)[valid_e]
-        blocks, brr, bcc, n_pad_b = block_sparse_adjacency(
-            dst_g, src_g, n)  # transposed: candidates = A^T @ f
-        blocks_j = jnp.asarray(blocks)
-        br_j = jnp.asarray(brr)
-        bc_j = jnp.asarray(bcc)
+        part = graph.part
+        p, shard, n = part.p, part.shard_size, part.n
+        blocks, brs, bcs, row_pad, col_pad = graph.bsr_shards()
+        kmax, blk = blocks.shape[1], blocks.shape[2]
+        packed = self.plan.dense_strategy.wire == "packed"
 
-        def expand_fn(frontier):  # (n, S) uint8 -> (n, S) uint8
-            f = frontier
-            if n_pad_b > n:
-                f = jnp.pad(f, ((0, n_pad_b - n), (0, 0)))
-            cand = spmm_ops.frontier_expand(
-                blocks_j, br_j, bc_j, f, n_rows_pad=n_pad_b)
+        def host_arrays():
+            return (blocks.reshape(-1), brs.reshape(-1), bcs.reshape(-1))
+
+        def expand_fn(frontier, kb_flat, kbr, kbc):
+            kb = kb_flat.reshape(kmax, blk, blk)
+            f = frontier                                   # (shard, S)
+            if col_pad > shard:
+                f = jnp.pad(f, ((0, col_pad - shard), (0, 0)))
+            if packed:
+                return spmm_ops.frontier_expand_packed(
+                    kb, kbr, kbc, f, n_rows_pad=row_pad, n_valid=n,
+                    n_blocks=p)
+            cand = spmm_ops.frontier_expand(kb, kbr, kbc, f,
+                                            n_rows_pad=row_pad)
             return cand[:n]
 
-        return expand_fn
+        return expand_fn, packed, host_arrays
 
     # ------------------------------------------------------------------- run
     def run_async(self, sources) -> BFSResult:

@@ -15,9 +15,17 @@ The paper's two optimizations over Buluç-Madduri [2]:
       number of processors") and an ``all-to-all``/``reduce-scatter`` where
       each chip receives only what it owns (bytes ∝ n, independent of p).
 
+Beyond the paper, every dense-phase collective also has a *packed-bitset*
+twin (``<name>_packed``): the ``uint8`` candidate/frontier mask packs into
+``uint32`` words (``frontier.pack_bits``, 32 vertices per word) before the
+collective and merges with bitwise OR — 8× fewer bytes per chip per dense
+level, the "Compression and Sieve" / Buluç-Madduri word-packed-frontier
+optimization.  ``BFSOptions.wire_format`` selects the layout per plan
+("packed" | "bytes" | "auto", the last pricing both per phase).
+
 Strategies are *pluggable*: each one is a function registered with
-``@register_exchange(kind, name, bytes_model)`` which pairs the collective
-implementation with its analytic per-chip byte model.  ``BFSPlan``
+``@register_exchange(kind, name, bytes_model, wire=...)`` which pairs the
+collective implementation with its analytic per-chip byte model.  ``BFSPlan``
 (core/engine.py) resolves strategy names through this registry at plan
 time, so new exchange algorithms slot in without touching the BFS engine.
 ``DENSE_STRATEGIES`` / ``QUEUE_STRATEGIES`` remain as live, tuple-like
@@ -33,12 +41,16 @@ and recsys embedding lookup (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import frontier as _fr
+
 AxisName = Union[str, tuple]
+
+WIRE_FORMATS = ("bytes", "packed")   # dense-phase wire layouts
 
 
 # ---------------------------------------------------------------------------
@@ -53,12 +65,21 @@ class ExchangeStrategy:
     kind-specific: dense ``(n, p, s, itemsize, axes_sizes)``, queue
     ``(p, cap, itemsize)``.  Both return bytes *received* per chip per
     level — the quantity the paper's §4 scalability analysis is built on.
+
+    ``wire`` declares the on-wire layout the impl operates on: ``"bytes"``
+    (one uint8 per vertex, merge by max) or ``"packed"`` (``uint32``
+    bitset words from ``frontier.pack_bits``, merge by bitwise OR — 8×
+    smaller payloads).  The loop bodies pack/unpack at the exchange
+    boundary based on this field, so a strategy's wire format is part of
+    its registered identity and the ``"auto"`` selection can price the
+    two layouts against each other.
     """
 
     name: str
     kind: str                 # see KINDS below
     impl: Callable
     bytes_model: Callable
+    wire: str = "bytes"       # see WIRE_FORMATS
 
 
 _REGISTRY: dict = {}          # (kind, name) -> ExchangeStrategy
@@ -86,18 +107,24 @@ def _check_kind(kind: str) -> None:
                          f"expected one of: {', '.join(KINDS)}")
 
 
-def register_exchange(kind: str, name: str, bytes_model: Callable):
+def register_exchange(kind: str, name: str, bytes_model: Callable,
+                      wire: str = "bytes"):
     """Decorator: register an exchange impl under ``(kind, name)``.
 
-    ``kind`` is one of ``KINDS`` (see above).  Re-registering a name
-    overwrites it, which keeps iterative strategy development
-    REPL-friendly.
+    ``kind`` is one of ``KINDS`` (see above); ``wire`` is one of
+    ``WIRE_FORMATS`` and declares the payload layout the impl consumes.
+    Re-registering a name overwrites it, which keeps iterative strategy
+    development REPL-friendly.
     """
     _check_kind(kind)
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"unknown wire format {wire!r}; "
+                         f"expected one of: {', '.join(WIRE_FORMATS)}")
 
     def deco(fn):
         _REGISTRY[(kind, name)] = ExchangeStrategy(
-            name=name, kind=kind, impl=fn, bytes_model=bytes_model)
+            name=name, kind=kind, impl=fn, bytes_model=bytes_model,
+            wire=wire)
         return fn
 
     return deco
@@ -119,18 +146,26 @@ def get_exchange(kind: str, name: str) -> ExchangeStrategy:
             f"registered: {avail}") from None
 
 
-def select_exchange(kind: str, *model_args) -> ExchangeStrategy:
+def select_exchange(kind: str, *model_args,
+                    wire: Optional[str] = None) -> ExchangeStrategy:
     """Auto-select the registered strategy with the smallest modeled bytes.
 
     ``model_args`` must match the kind's byte-model signature.  Plans
     resolve the ``"auto"`` strategy name through this, so auto-selection
     spans every registered strategy of both partition schemes; ties break
-    by name for determinism.
+    by name for determinism (which also prefers a ``"bytes"`` impl over
+    its ``_packed`` twin when both model to zero, e.g. at p = 1 — no
+    pointless pack/unpack on a single device).  ``wire`` restricts the
+    candidate set to one wire format (``None`` spans both, which is how
+    ``BFSOptions.wire_format="auto"`` resolves packed-vs-bytes per phase
+    at plan time).
     """
     _check_kind(kind)
-    cands = [st for (k, _), st in _REGISTRY.items() if k == kind]
+    cands = [st for (k, _), st in _REGISTRY.items()
+             if k == kind and (wire is None or st.wire == wire)]
     if not cands:
-        raise ValueError(f"no exchange strategies registered for {kind!r}")
+        raise ValueError(f"no exchange strategies registered for {kind!r}"
+                         + (f" with wire format {wire!r}" if wire else ""))
     return min(cands, key=lambda st: (st.bytes_model(*model_args), st.name))
 
 
@@ -257,17 +292,114 @@ def _dense_hierarchical(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
     return out
 
 
+# --- packed dense strategies: uint32 bitset words on the wire ------------
+# The same four collectives over frontier.pack_bits output — one word per
+# 32 vertices, bitwise-OR merges.  8× fewer bytes per chip per level than
+# the uint8 mask (4-byte words for 32 one-byte slots).  Packing is blocked
+# per shard, so the per-shard word count is ceil((n/p)/32) and every
+# split/slice below stays static.  Byte models share the dense signature
+# (n, p, s, itemsize, axes_sizes); the mask itemsize is irrelevant — the
+# wire carries 4-byte words.
+
+def _or_reduce(x: jnp.ndarray, axis_num: int = 0) -> jnp.ndarray:
+    """Bitwise-OR reduction over one positional axis (packed-word merge)."""
+    return lax.reduce(x, x.dtype.type(0), lax.bitwise_or, (axis_num,))
+
+
+def _words_per_shard(n, p):
+    return _fr.packed_words(n // p)
+
+
+def _bytes_allgather_merge_packed(n, p, s, itemsize, axes_sizes):
+    return (p - 1) * p * _words_per_shard(n, p) * 4 * s
+
+
+@register_exchange("dense", "allgather_merge_packed",
+                   _bytes_allgather_merge_packed, wire="packed")
+def _dense_allgather_merge_packed(words: jnp.ndarray,
+                                  axis: AxisName) -> jnp.ndarray:
+    # [2]-style aggregate-then-scatter on packed words: every shard
+    # receives all p packed candidate sets and ORs them.
+    p = axis_size(axis)
+    w = words.shape[0] // p
+    allw = lax.all_gather(words, axis)           # (p, p*W, S)
+    merged = _or_reduce(allw, 0)
+    me = axis_index(axis)
+    return lax.dynamic_slice_in_dim(merged, me * w, w, axis=0)
+
+
+def _bytes_alltoall_direct_packed(n, p, s, itemsize, axes_sizes):
+    return (p - 1) * _words_per_shard(n, p) * 4 * s
+
+
+@register_exchange("dense", "alltoall_direct_packed",
+                   _bytes_alltoall_direct_packed, wire="packed")
+def _dense_alltoall_direct_packed(words: jnp.ndarray,
+                                  axis: AxisName) -> jnp.ndarray:
+    # Paper §5.1-2 on packed words: each owner's W-word block goes straight
+    # to it; the p received partial bitsets OR locally.
+    p = axis_size(axis)
+    w = words.shape[0] // p
+    recv = lax.all_to_all(words, axis, split_axis=0, concat_axis=0,
+                          tiled=True)            # (p*W, S): p blocks of W
+    return _or_reduce(recv.reshape(p, w, *words.shape[1:]), 0)
+
+
+@register_exchange("dense", "reduce_scatter_packed",
+                   _bytes_alltoall_direct_packed, wire="packed")
+def _dense_reduce_scatter_packed(words: jnp.ndarray,
+                                 axis: AxisName) -> jnp.ndarray:
+    # The network cannot OR packed words (psum carries across bit lanes),
+    # so the packed twin routes word blocks directly and ORs locally —
+    # all_to_all bytes, kept under this name so wire_format="packed"
+    # composes with every strategy name a caller may have pinned.
+    return _dense_alltoall_direct_packed(words, axis)
+
+
+def _bytes_hierarchical_packed(n, p, s, itemsize, axes_sizes):
+    sizes = list(axes_sizes) or [p]
+    w = _words_per_shard(n, p)
+    return sum((sz - 1) / sz * p * w * 4 * s for sz in sizes)
+
+
+@register_exchange("dense", "hierarchical_packed",
+                   _bytes_hierarchical_packed, wire="packed")
+def _dense_hierarchical_packed(words: jnp.ndarray,
+                               axis: AxisName) -> jnp.ndarray:
+    # Topology-matched two-phase exchange over packed words; same
+    # major-first axis order as the bytes impl, OR-merge after each hop.
+    axes = _axes_tuple(axis)
+    if len(axes) == 1:
+        return _dense_alltoall_direct_packed(words, axes[0])
+    out = words
+    for ax in axes:
+        sz = lax.psum(1, ax)
+        recv = lax.all_to_all(out, ax, split_axis=0, concat_axis=0,
+                              tiled=True)
+        out = _or_reduce(recv.reshape(sz, out.shape[0] // sz, *out.shape[1:]),
+                         0)
+    return out
+
+
 def exchange_dense(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
     """Merge per-shard candidate masks; return this shard's owned slice.
 
     cand: (n, S) uint8/int32 0-1 mask over ALL global vertices, produced by
     this shard's edge expansion.  Result: (n/p, S) of the same dtype with
-    OR/merge semantics across shards.
+    OR/merge semantics across shards.  Packed strategies are transparent
+    here — the mask is packed per shard before the collective and the
+    owned words unpacked after — so callers (and the HLO byte-model
+    harness) can name any registered strategy; the engine loop bodies
+    instead keep candidates packed across the exchange boundary.
     """
     p = axis_size(axis)
     n = cand.shape[0]
     assert n % p == 0, f"dense exchange needs n ({n}) divisible by p ({p})"
-    return get_exchange("dense", strategy).impl(cand, axis)
+    st = get_exchange("dense", strategy)
+    if st.wire == "packed":
+        own_words = st.impl(_fr.pack_bits(cand, n_blocks=p), axis)
+        return _fr.unpack_bits(own_words, n // p).astype(cand.dtype)
+    return st.impl(cand, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -321,6 +453,56 @@ def _fold_col_reduce_scatter(cand: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
     return (own > 0).astype(cand.dtype)
 
 
+# --- packed 2-D phases: the grid collectives over uint32 bitset words.
+# Chunk size b = n/(r*c) packs to Wb = ceil(b/32) words; the expand
+# allgather ships (c-1)·Wb·4 bytes instead of (c-1)·b, the fold
+# all-to-all (r-1)·Wb·4 instead of (r-1)·b — the same 8× dense-phase
+# saving as the 1-D packed strategies, applied per phase.
+
+def _grid_words(n, r, c):
+    return _fr.packed_words(n // (r * c))
+
+
+def _bytes_expand_allgather_packed(n, r, c, s, itemsize):
+    return (c - 1) * _grid_words(n, r, c) * 4 * s
+
+
+@register_exchange("expand_row", "allgather_packed",
+                   _bytes_expand_allgather_packed, wire="packed")
+def _expand_row_allgather_packed(fwords: jnp.ndarray,
+                                 axis: AxisName) -> jnp.ndarray:
+    # (Wb, S) packed frontier chunk -> (c*Wb, S) packed row frontier;
+    # segment j = grid column j's words (blocked packing keeps the
+    # per-chunk word offsets static for the unpack).
+    return lax.all_gather(fwords, axis, tiled=True)
+
+
+def _bytes_fold_alltoall_packed(n, r, c, s, itemsize):
+    return (r - 1) * _grid_words(n, r, c) * 4 * s
+
+
+@register_exchange("fold_col", "alltoall_reduce_packed",
+                   _bytes_fold_alltoall_packed, wire="packed")
+def _fold_col_alltoall_packed(cwords: jnp.ndarray,
+                              axis: AxisName) -> jnp.ndarray:
+    # (r*Wb, S) fold-ordered packed candidates -> (Wb, S) owned OR-merge.
+    r = axis_size(axis)
+    w = cwords.shape[0] // r
+    recv = lax.all_to_all(cwords, axis, split_axis=0, concat_axis=0,
+                          tiled=True)
+    return _or_reduce(recv.reshape(r, w, *cwords.shape[1:]), 0)
+
+
+@register_exchange("fold_col", "reduce_scatter_packed",
+                   _bytes_fold_alltoall_packed, wire="packed")
+def _fold_col_reduce_scatter_packed(cwords: jnp.ndarray,
+                                    axis: AxisName) -> jnp.ndarray:
+    # psum carries across bit lanes, so the packed twin routes word
+    # blocks directly and ORs locally (same rationale as the dense
+    # reduce_scatter_packed strategy).
+    return _fold_col_alltoall_packed(cwords, axis)
+
+
 # --- sparse 2-D phases: ship ids instead of bitmaps (paper §5.1 on the
 # grid).  Payload scales with the frontier (cap ids), not with n/p, so the
 # narrow first/last levels cost (c-1)·cap + (r-1)·cap id-bytes instead of
@@ -368,16 +550,33 @@ def _fold_col_sparse_allgather(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndar
 
 
 def expand_row(frontier: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
-    """2-D expand phase: (b, S) chunk -> (c*b, S) grid-row frontier."""
-    return get_exchange("expand_row", strategy).impl(frontier, axis)
+    """2-D expand phase: (b, S) chunk -> (c*b, S) grid-row frontier.
+
+    Packed strategies are transparent (pack before, unpack after); the
+    engine loop keeps the words packed across the wire instead.
+    """
+    st = get_exchange("expand_row", strategy)
+    if st.wire == "packed":
+        c = axis_size(axis)
+        words = st.impl(_fr.pack_bits(frontier), axis)
+        return _fr.unpack_bits(words, frontier.shape[0],
+                               n_blocks=c).astype(frontier.dtype)
+    return st.impl(frontier, axis)
 
 
 def fold_col(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
-    """2-D fold phase: (r*b, S) fold-ordered candidates -> (b, S) owned."""
+    """2-D fold phase: (r*b, S) fold-ordered candidates -> (b, S) owned.
+
+    Packed strategies are transparent here (see ``expand_row``).
+    """
     r = axis_size(axis)
     assert cand.shape[0] % r == 0, \
         f"fold needs len ({cand.shape[0]}) divisible by r ({r})"
-    return get_exchange("fold_col", strategy).impl(cand, axis)
+    st = get_exchange("fold_col", strategy)
+    if st.wire == "packed":
+        words = st.impl(_fr.pack_bits(cand, n_blocks=r), axis)
+        return _fr.unpack_bits(words, cand.shape[0] // r).astype(cand.dtype)
+    return st.impl(cand, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -444,7 +643,17 @@ def queue_level_bytes(strategy: str, p: int, cap: int, itemsize: int = 4) -> flo
     return get_exchange("queue", strategy).bytes_model(p, cap, itemsize)
 
 
-def bottomup_level_bytes(n: int, p: int, s: int = 1, itemsize: int = 1) -> float:
+def bottomup_level_bytes(n: int, p: int, s: int = 1, itemsize: int = 1,
+                         wire: str = "bytes") -> float:
+    """Bytes received per chip for one bottom-up frontier allgather.
+
+    ``wire="packed"`` prices the packed-bitset gather: each peer ships
+    its ``ceil((n/p)/32)`` uint32 frontier words instead of ``n/p`` mask
+    bytes (the bottom-up expansion then reads bits straight out of the
+    gathered words — see ``frontier.expand_bottom_up_packed``).
+    """
+    if wire == "packed":
+        return (p - 1) * _words_per_shard(n, p) * 4 * s
     return (p - 1) / p * n * s * itemsize
 
 

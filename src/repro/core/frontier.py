@@ -24,6 +24,18 @@ allgather sparse (ship active ids, not the bitmap), and
 ``build_queue_buckets_2d`` buckets fold-layout candidates by column-owner
 row rank — the §5.1 local-update exclusion and dense-escalation-on-
 overflow contracts carry over unchanged.
+
+``pack_bits``/``unpack_bits`` are the *packed-bitset* wire format of the
+dense phases (Lv et al.'s "Compression and Sieve", Buluç & Madduri's
+word-packed frontiers): 32 mask bytes collapse into one ``uint32`` word,
+so every dense collective ships 8× fewer bytes and merges with bitwise
+OR instead of a byte-wise max.  Packing is *blocked* — each owner's
+segment packs into its own ``ceil(m/32)`` words — so block boundaries
+stay word-aligned for any shard size and the per-shard slices of the
+collectives (all-to-all splits, allgather offsets) remain static.  The
+pad bits of a block's last word are zero by construction and OR-merges
+preserve zeros, so padding can never leak a phantom candidate across the
+merge (regression-pinned in tests/test_wire_format.py).
 """
 
 from __future__ import annotations
@@ -93,6 +105,81 @@ def expand_dense_2d(frontier_row: jnp.ndarray, src_rowlocal: jnp.ndarray,
                      dtype=frontier_row.dtype)
     cand = cand.at[idx].max(fvals)
     return cand[:fold_len]
+
+
+# ---------------------------------------------------------------------------
+# Packed-bitset wire format (dense phases)
+# ---------------------------------------------------------------------------
+
+def packed_words(n_bits: int) -> int:
+    """Words needed to hold ``n_bits`` mask bits (ceil(n_bits / 32))."""
+    return -(-n_bits // 32)
+
+
+def pack_bits(mask: jnp.ndarray, n_blocks: int = 1) -> jnp.ndarray:
+    """Pack a ``(n_blocks * m, S)`` 0/1 mask into ``(n_blocks * W, S)``
+    uint32 words, ``W = ceil(m / 32)``.
+
+    Each length-``m`` block packs independently (bit ``i`` of word
+    ``b*W + i//32`` is row ``b*m + i``), so block boundaries are always
+    word-aligned regardless of ``m % 32`` — the per-owner slices of a
+    packed collective stay static.  A block's trailing pad bits are zero.
+    """
+    total, s = mask.shape
+    m = total // n_blocks
+    assert m * n_blocks == total, (total, n_blocks)
+    w = packed_words(m)
+    x = (mask > 0).astype(jnp.uint32).reshape(n_blocks, m, s)
+    if w * 32 != m:
+        x = jnp.pad(x, ((0, 0), (0, w * 32 - m), (0, 0)))
+    x = x.reshape(n_blocks, w, 32, s)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words = (x << shifts[None, None, :, None]).sum(axis=2, dtype=jnp.uint32)
+    return words.reshape(n_blocks * w, s)
+
+
+def unpack_bits(words: jnp.ndarray, m: int, n_blocks: int = 1) -> jnp.ndarray:
+    """Inverse of ``pack_bits``: ``(n_blocks * W, S)`` uint32 words back to
+    a ``(n_blocks * m, S)`` uint8 0/1 mask.  Each block's trailing pad
+    bits (rows ``m .. W*32``) are dropped, never surfaced as vertices.
+    """
+    total_w, s = words.shape
+    w = total_w // n_blocks
+    assert w * n_blocks == total_w, (total_w, n_blocks)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words.reshape(n_blocks, w, 1, s) >> shifts[None, None, :, None]
+            ) & jnp.uint32(1)
+    bits = bits.reshape(n_blocks, w * 32, s)[:, :m, :]
+    return bits.reshape(n_blocks * m, s).astype(jnp.uint8)
+
+
+def expand_bottom_up_packed(frontier_words: jnp.ndarray,
+                            in_src_global: jnp.ndarray,
+                            in_dst_local: jnp.ndarray, shard: int,
+                            words_per_block: int) -> jnp.ndarray:
+    """Bottom-up expansion straight from the *packed* replicated frontier.
+
+    ``frontier_words`` is the allgather of every shard's packed frontier
+    (``(p * W, S)`` uint32, block ``k`` = shard ``k``'s ``pack_bits``
+    output).  Each in-edge gathers one word and extracts its source's bit
+    — the ``(n, S)`` byte mask is never materialized, so the 8× wire
+    saving of the packed gather is not given back to an unpack.  Same
+    both-endpoints masking contract as ``expand_bottom_up``.
+    """
+    valid = ((in_src_global >= 0)
+             & (in_dst_local >= 0) & (in_dst_local < shard))
+    src = jnp.where(valid, in_src_global, 0)
+    blk = src // shard
+    loc = src - blk * shard
+    widx = blk * words_per_block + loc // 32
+    wvals = frontier_words[widx]                               # (E, S)
+    bit = (loc % 32).astype(jnp.uint32)
+    vals = ((wvals >> bit[:, None]) & jnp.uint32(1)).astype(jnp.uint8)
+    vals = vals * valid[:, None].astype(jnp.uint8)
+    idx = jnp.where(valid, in_dst_local, shard)
+    cand = jnp.zeros((shard + 1, frontier_words.shape[1]),
+                     jnp.uint8).at[idx].max(vals)
+    return cand[:shard]
 
 
 def expand_bottom_up(frontier_global: jnp.ndarray, in_src_global: jnp.ndarray,

@@ -157,6 +157,78 @@ class ShardedGraph:
             self.__dict__["_fingerprint"] = fp
         return fp
 
+    def bsr_shard_caps(self, block: int = 128):
+        """``(kmax, block)`` of ``bsr_shards()`` without materializing the
+        dense tiles — O(E) work and transient memory, so pricing a
+        ``use_kernel`` plan (``estimated_device_bytes``, cache admission)
+        never allocates the (p, K, 128, 128) host mirror of an engine
+        that may never compile.  Reuses either cache when present."""
+        built = self.__dict__.get("_bsr_shards")
+        if built is not None and built[0].shape[2] == block:
+            return built[0].shape[1], block
+        caps = self.__dict__.setdefault("_bsr_shard_caps", {})
+        kmax = caps.get(block)
+        if kmax is None:
+            nb = -(-self.part.n // block)
+            kmax = 1
+            for j in range(self.p):
+                valid = self.dst_global[j] >= 0
+                keys = ((self.dst_global[j][valid].astype(np.int64) // block)
+                        * nb + self.src_local[j][valid] // block)
+                kmax = max(kmax, np.unique(keys).size)
+            caps[block] = kmax
+        return kmax, block
+
+    def bsr_shards(self, block: int = 128):
+        """Per-shard blocked *transposed* adjacency for the Pallas
+        ``bsr_spmm`` frontier expansion (built and cached on first use —
+        non-kernel engines never pay the host tiling).
+
+        Shard ``j``'s matrix has rows = global candidate ids (padded to a
+        block multiple of ``part.n``) and cols = local source ids (padded
+        to a block multiple of ``shard_size``), so ``A_j^T @ f_local``
+        is the shard's dense expansion.  Shards are padded to a common
+        tile count with all-zero tiles so the arrays shard uniformly
+        under shard_map; a pad tile repeats the shard's last block row
+        (never a *smaller* row — the kernel's ``row_changed`` accumulator
+        reset fires on block-row transitions, and a backwards jump would
+        re-zero a finished output tile).
+
+        Returns ``(blocks (p, K, B, B) f32, block_rows (p, K) i32,
+        block_cols (p, K) i32, n_rows_pad, n_cols_pad)``.
+        """
+        cached = self.__dict__.get("_bsr_shards")
+        if cached is not None and cached[0].shape[2] == block:
+            return cached
+        part = self.part
+        p, shard = self.p, part.shard_size
+        n_rows_pad = _pad_to(part.n, block)
+        n_cols_pad = _pad_to(shard, block)
+        per_shard = []
+        for j in range(p):
+            valid = self.dst_global[j] >= 0
+            src_l = self.src_local[j][valid].astype(np.int64)   # cols
+            dst_g = self.dst_global[j][valid].astype(np.int64)  # rows
+            blocks, brr, bcc, _ = block_sparse_adjacency(
+                dst_g, src_l, part.n, block=block)
+            per_shard.append((blocks, brr, bcc))
+        # at least one (all-zero) tile so an edgeless shard still hands
+        # the kernel a nonempty grid
+        kmax = max(1, max(b.shape[0] for b, _, _ in per_shard))
+        blocks_out = np.zeros((p, kmax, block, block), np.float32)
+        br_out = np.zeros((p, kmax), np.int32)
+        bc_out = np.zeros((p, kmax), np.int32)
+        for j, (blocks, brr, bcc) in enumerate(per_shard):
+            k = blocks.shape[0]
+            blocks_out[j, :k] = blocks
+            br_out[j, :k] = brr
+            bc_out[j, :k] = bcc
+            if k < kmax:                  # pad rows stay monotone (see doc)
+                br_out[j, k:] = brr[-1] if k else 0
+        cached = (blocks_out, br_out, bc_out, n_rows_pad, n_cols_pad)
+        self.__dict__["_bsr_shards"] = cached
+        return cached
+
 
 def _bucket(key_owner: np.ndarray, p: int, arrays, e_cap: int, fills):
     """Stable-sort ``arrays`` by owner and pack into (p, e_cap) blocks."""

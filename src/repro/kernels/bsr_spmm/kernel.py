@@ -95,3 +95,37 @@ def bsr_spmm(blocks: jnp.ndarray, block_rows: jnp.ndarray,
             dimension_semantics=("parallel", "arbitrary")),
     )(block_rows, block_cols, blocks, x)
     return out[:, :d]
+
+
+def _bitpack_kernel(x_ref, out_ref):
+    """One grid step: fold a (32, S) 0/1 tile into one (1, S) uint32 word
+    row — bit ``i`` of the word is row ``i`` of the tile (LSB-first, the
+    ``frontier.pack_bits`` layout)."""
+    bits = (x_ref[...] > 0).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    out_ref[...] = (bits << shifts[:, None]).sum(
+        axis=0, dtype=jnp.uint32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitpack_words(mask: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Pack a ``(32*W, S)`` candidate mask into ``(W, S)`` uint32 words on
+    device — the packed-wire emission of the kernel expansion path.
+
+    The row count must be 32-aligned (the bsr_spmm output rows are padded
+    to 128, so a whole-output pack always is); unaligned *segmented*
+    packing falls back to ``frontier.pack_bits`` in the ops wrapper.
+    """
+    m, s = mask.shape
+    assert m % 32 == 0, m
+    w = m // 32
+    return pl.pallas_call(
+        _bitpack_kernel,
+        grid=(w,),
+        in_specs=[pl.BlockSpec((32, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, s), jnp.uint32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+    )(mask)

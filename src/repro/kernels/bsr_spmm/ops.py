@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bsr_spmm.kernel import DEFAULT_BLOCK, bsr_spmm
+from repro.kernels.bsr_spmm.kernel import (DEFAULT_BLOCK, bitpack_words,
+                                           bsr_spmm)
 from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
 
 
@@ -32,6 +33,33 @@ def frontier_expand(blocks, block_rows, block_cols, frontier, *, n_rows_pad,
     y = spmm(blocks, block_rows, block_cols, frontier.astype(jnp.float32),
              n_rows_pad=n_rows_pad, block=block, interpret=interpret)
     return (y > 0).astype(jnp.uint8)
+
+
+def frontier_expand_packed(blocks, block_rows, block_cols, frontier, *,
+                           n_rows_pad, n_valid, n_blocks,
+                           block: int = DEFAULT_BLOCK,
+                           interpret: bool | None = None):
+    """Kernel expansion emitting *packed* candidate words.
+
+    Runs the bsr_spmm expansion, then packs the boolean candidates into
+    the per-owner-blocked uint32 bitset layout the packed dense exchange
+    ships (``n_blocks`` segments of ``n_valid / n_blocks`` bits, each
+    padded to whole words — ``frontier.pack_bits`` semantics).  When the
+    segment size is word-aligned the pack itself runs as the Pallas
+    ``bitpack_words`` kernel (blocked == flat packing in that case); an
+    unaligned segment falls back to the jnp pack, fused into the same
+    jit.  Returns ``(n_blocks * ceil(seg/32), S)`` uint32.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    y = spmm(blocks, block_rows, block_cols,
+             frontier.astype(jnp.float32), n_rows_pad=n_rows_pad,
+             block=block, interpret=interp)
+    seg = n_valid // n_blocks
+    assert seg * n_blocks == n_valid, (n_valid, n_blocks)
+    if seg % 32 == 0:
+        return bitpack_words(y[:n_valid], interpret=interp)
+    from repro.core.frontier import pack_bits
+    return pack_bits((y[:n_valid] > 0).astype(jnp.uint8), n_blocks)
 
 
 def spmm_reference(blocks, block_rows, block_cols, x, *, n_rows_pad):

@@ -54,6 +54,16 @@ def main():
     ap.add_argument("--mode", default="auto",
                     choices=["dense", "queue", "auto"])
     ap.add_argument("--exchange", default="alltoall_direct")
+    ap.add_argument("--wire-format", default="auto",
+                    choices=["packed", "bytes", "auto"],
+                    help="dense-phase wire layout: packed uint32 bitset "
+                         "words (8x smaller), uint8 mask bytes, or byte-"
+                         "model auto-selection per phase")
+    ap.add_argument("--describe", action="store_true",
+                    help="print the compiled plan's full describe() "
+                         "metadata — per-phase strategies, the wire "
+                         "format 'auto' chose for each, and per-level "
+                         "byte pricing")
     ap.add_argument("--sources", type=int, default=1)
     ap.add_argument("--repeats", type=int, default=3,
                     help="traversals to run against each compiled engine")
@@ -107,14 +117,15 @@ def main():
         # every mode works over grids: queue levels bucket fold-layout ids
         # down grid columns, auto switches per level (sparse needs S=1)
         opts = BFSOptions(mode=args.mode, fold_exchange=fold,
-                          queue_cap=1 << 15)
-        print(f"grid={r}x{c} (p={r*c}) mode={args.mode}")
+                          wire_format=args.wire_format, queue_cap=1 << 15)
+        print(f"grid={r}x{c} (p={r*c}) mode={args.mode} "
+              f"wire={args.wire_format}")
     else:
         mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
         axis = "p"
         opts = BFSOptions(mode=args.mode, dense_exchange=args.exchange,
-                          queue_cap=1 << 15)
-        print(f"shards={p} mode={args.mode}")
+                          wire_format=args.wire_format, queue_cap=1 << 15)
+        print(f"shards={p} mode={args.mode} wire={args.wire_format}")
 
     cache = default_engine_cache()
     for kind, n, kw in graphs:
@@ -138,9 +149,26 @@ def main():
         meta = engine.plan.describe()
         exchanges = (f"{meta['expand_exchange']}+{meta['fold_exchange']}"
                      if args.partition == "2d" else meta["dense_exchange"])
+        wires = meta["wire_formats"]
         print(f"plan+get_or_compile: {compile_s:.2f}s (S={args.sources}, "
               f"{exchanges}, "
               f"level_bytes/chip={meta['dense_level_bytes']:.2e})")
+        # per-level-variant pricing with the wire format each phase
+        # resolved to (what "auto" actually chose for this topology); a
+        # 2-D dense level has two phases which may resolve differently
+        # (a degenerate grid's peerless phase keeps bytes), so both show
+        dense_wire = (wires["dense"] if args.partition != "2d"
+                      else f"{wires['expand']}+{wires['fold']}")
+        queue_wire = wires["queue" if args.partition != "2d"
+                           else "fold_sparse"]
+        print("  level variants: "
+              f"dense={meta['dense_level_bytes']:.2e}B[{dense_wire}]  "
+              f"queue={meta['queue_level_bytes']:.2e}B[{queue_wire}]  "
+              f"bottom_up={meta['bottom_up_level_bytes']:.2e}B"
+              f"[{wires['bottom_up']}]")
+        if args.describe:
+            for k in sorted(meta):
+                print(f"  describe.{k} = {meta[k]}")
 
         rng = np.random.default_rng(0)
         for rep in range(max(1, args.repeats)):

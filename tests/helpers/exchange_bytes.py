@@ -62,6 +62,12 @@ def main():
     base = ex.dense_level_bytes("allgather_merge", n, p, s, 1)
     opt = ex.dense_level_bytes("alltoall_direct", n, p, s, 1)
     ok &= base / opt > p * 0.9  # paper claim: baseline grows ~linearly in p
+    # packed-bitset claim: the _packed twin models 8x below its bytes twin
+    # (exact here: the 512-vertex shard is word-aligned), and the HLO
+    # ratios above already pinned the packed models to compiler output
+    packed = ex.dense_level_bytes("alltoall_direct_packed", n, p, s, 1)
+    print(f"dense/packed-vs-bytes ratio={opt / packed:.2f} (model)")
+    ok &= opt / packed == 8.0
 
     for strategy in ex.QUEUE_STRATEGIES:
         fn = functools.partial(ex.exchange_queue, axis="p", strategy=strategy)

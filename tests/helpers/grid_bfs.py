@@ -14,6 +14,11 @@ numpy hybrid-schedule simulation (mode_counts included) — and forces a
 queue_cap overflow to prove the dense escalation stays exact and sets the
 overflowed flag.
 
+The wire-format section runs the packed-bitset dense pipeline on the
+grid: bitwise parity with the bytes path on both partition schemes, the
+>= 4x dense bytes/level reduction, ``wire_format="auto"`` resolving to
+packed, and packed hybrid (auto-mode) schedule parity.
+
 The serving section runs one multi-graph ``BFSService`` with mixed 1-D
 and 2-D lanes over the real device meshes behind a shared
 ``EngineCache`` — request parity, compile-exactly-once accounting, and
@@ -141,6 +146,70 @@ def check_grid_queue_overflow(r, c, n=2000, seed=2, queue_cap=8):
     return ok
 
 
+def check_wire_format(r, c, n=2000, seed=5):
+    """Packed-bitset wire format on the real device grid: bitwise parity
+    with the bytes path and the serial reference on both partition
+    schemes, >= 4x fewer dense bytes/level (modeled 8x), auto resolution
+    picking packed, and auto-mode (hybrid) parity with the packed
+    frontier gather on the bottom-up levels."""
+    p = r * c
+    src, dst = generate("erdos_renyi", n, seed=seed, avg_degree=8)
+    g = shard_graph(src, dst, n, p)
+    want = bfs_reference(src, dst, n, [0, 9])
+    mesh2 = make_grid_mesh(r, c)
+    mesh1 = Mesh(np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+    meshes = {"1d": (mesh1, "p"), "2d": (mesh2, None)}
+
+    ok = True
+    for kind, (mesh, axis) in meshes.items():
+        k_ok = True
+        per_level = {}
+        for wf in ("bytes", "packed"):
+            pl = plan(g, BFSOptions(mode="dense", wire_format=wf),
+                      mesh=mesh, axis=axis, num_sources=2, partition=kind)
+            eng = pl.compile()
+            res = eng.run([0, 9])
+            k_ok &= np.array_equal(res.dist_host, want)
+            st = res.stats()
+            per_level[wf] = st.comm_bytes / max(st.levels, 1)
+            k_ok &= eng.trace_count == eng.compile_traces
+        ratio = per_level["bytes"] / max(per_level["packed"], 1)
+        k_ok &= ratio >= 4                     # tentpole: 8x modeled
+        auto_meta = plan(g, BFSOptions(mode="dense", wire_format="auto"),
+                         mesh=mesh, axis=axis, num_sources=2,
+                         partition=kind).describe()
+        # on a degenerate grid one 2-D phase has no peers (models 0 both
+        # ways, ties keep bytes) — check the phase that does exchange
+        wf_key = ("dense" if kind == "1d" else
+                  "fold" if r > 1 else "expand")
+        k_ok &= auto_meta["wire_formats"][wf_key] == "packed"
+        ok &= k_ok
+        print(f"{f'wire/{kind}/{r}x{c}':55s} "
+              f"bytes={per_level['bytes']:.0f}B/level "
+              f"packed={per_level['packed']:.0f}B/level ratio={ratio:.1f} "
+              f"auto={auto_meta['wire_formats'][wf_key]} "
+              f"-> {'OK' if k_ok else 'MISMATCH'}")
+
+    # hybrid schedule parity under the packed wire (bottom-up gathers
+    # packed words over both grid axes)
+    for wf in ("bytes", "packed"):
+        eng = plan(g, BFSOptions(mode="auto", wire_format=wf,
+                                 queue_cap=1024), mesh=mesh2,
+                   num_sources=1, partition="2d").compile()
+        res = eng.run([0])
+        a_ok = np.array_equal(res.dist_host[:, 0], want[:, 0])
+        _, sched = bfs_reference_2d(src, dst, n, [0], r, c, mode="auto",
+                                    queue_cap=1024, return_schedule=True)
+        counts = {k: sum(1 for e in sched if e["kind"] == k)
+                  for k in ("dense", "queue", "bottom_up")}
+        a_ok &= res.stats().mode_counts == counts
+        ok &= a_ok
+        print(f"{f'wire/2d-auto/{r}x{c}/wire={wf}':55s} "
+              f"modes={res.stats().mode_counts} "
+              f"-> {'OK' if a_ok else 'MISMATCH'}")
+    return ok
+
+
 def check_multi_graph_serving(r, c, n=2000, seed=1):
     """Multi-tenant serving over real device meshes: one ``BFSService``
     with mixed 1-D (all-p row) and 2-D (r x c grid) lanes behind a
@@ -259,6 +328,9 @@ def main():
                               expect_sparse=True)
     # queue overflow -> dense escalation on the real device grid
     ok &= check_grid_queue_overflow(args.rows, args.cols)
+    # packed-bitset wire format: parity + >= 4x dense-byte reduction +
+    # auto resolution, 1-D and 2-D, alongside the bytes-path runs above
+    ok &= check_wire_format(args.rows, args.cols)
     # multi-tenant serving: mixed 1-D/2-D lanes, shared engine cache,
     # compile-once accounting + budget-forced eviction recovery
     ok &= check_multi_graph_serving(args.rows, args.cols)

@@ -49,14 +49,19 @@ def main():
     ok = True
     n = 3000
     srcs = [0]
-    # every dense strategy, flat and tuple axes
+    # every dense strategy, flat and tuple axes, both wire formats (the
+    # default wire_format="auto" resolves to the packed twin on a real
+    # mesh; "bytes" pins the uint8-mask path so both stay covered)
     for strat in ("allgather_merge", "alltoall_direct", "reduce_scatter",
                   "hierarchical"):
-        o = BFSOptions(mode="dense", dense_exchange=strat)
-        ok &= check(f"dense/{strat}/er/1d", "erdos_renyi", n, o, srcs,
-                    mesh1d, "p", avg_degree=8)
-        ok &= check(f"dense/{strat}/er/2d-tuple", "erdos_renyi", n, o, srcs,
-                    mesh2d, ("data", "model"), avg_degree=8)
+        for wf in ("bytes", "auto"):
+            o = BFSOptions(mode="dense", dense_exchange=strat,
+                           wire_format=wf)
+            ok &= check(f"dense/{strat}/wire={wf}/er/1d", "erdos_renyi", n,
+                        o, srcs, mesh1d, "p", avg_degree=8)
+            ok &= check(f"dense/{strat}/wire={wf}/er/2d-tuple",
+                        "erdos_renyi", n, o, srcs, mesh2d,
+                        ("data", "model"), avg_degree=8)
     # batched multi-source dense
     o = BFSOptions(mode="dense")
     ok &= check("dense/multi-source(S=5)/smallworld", "small_world", n, o,
@@ -77,12 +82,14 @@ def main():
                 mesh2d, ("data", "model"))
     ok &= check("queue/star", "star", 2048,
                 BFSOptions(mode="queue", queue_cap=4096), srcs, mesh1d, "p")
-    # auto (direction-optimizing) on all three paper graph families
+    # auto (direction-optimizing) on all three paper graph families, with
+    # the bottom-up levels riding both frontier-gather wire formats
     for kind, kw in (("erdos_renyi", dict(avg_degree=8)),
                      ("small_world", dict(k=6, beta=0.05)), ("star", {})):
-        o = BFSOptions(mode="auto", queue_cap=4096)
-        ok &= check(f"auto/{kind}", kind, n, o, srcs, mesh2d,
-                    ("data", "model"), **kw)
+        for wf in ("bytes", "packed"):
+            o = BFSOptions(mode="auto", queue_cap=4096, wire_format=wf)
+            ok &= check(f"auto/{kind}/wire={wf}", kind, n, o, srcs, mesh2d,
+                        ("data", "model"), **kw)
     # rmat (scale-free, like the social graphs of paper §1)
     ok &= check("auto/rmat", "rmat", 2048, BFSOptions(mode="auto", queue_cap=8192),
                 srcs, mesh1d, "p", edge_factor=8)
@@ -107,6 +114,43 @@ def main():
     ok &= e_ok
     print(f"{'engine/8shard-reuse-no-retrace':55s} -> "
           f"{'OK' if e_ok else 'MISMATCH'}")
+
+    # packed wire must be bitwise-equal to bytes AND >= 4x cheaper on the
+    # dense levels (the tentpole claim on a real 8-device mesh)
+    per_level = {}
+    for wf in ("bytes", "packed"):
+        e = plan(g, BFSOptions(mode="dense", wire_format=wf), mesh=mesh1d,
+                 axis="p", num_sources=1).compile()
+        r = e.run([0])
+        w_ok = np.array_equal(r.dist_host,
+                              bfs_reference(src, dst, n, [0]))
+        st = r.stats()
+        per_level[wf] = st.comm_bytes / max(st.levels, 1)
+        ok &= w_ok
+    w_ok = per_level["bytes"] / max(per_level["packed"], 1) >= 4
+    ok &= w_ok
+    print(f"{'dense/wire-reduction-8shard':55s} "
+          f"bytes={per_level['bytes']:.0f}B/level "
+          f"packed={per_level['packed']:.0f}B/level -> "
+          f"{'OK' if w_ok else 'MISMATCH'}")
+
+    # Pallas bsr_spmm expansion per shard inside the 8-device loop (the
+    # lifted single-shard restriction), on both wire formats: the packed
+    # run consumes kernel-emitted candidate words directly
+    nk = 1024
+    srck, dstk = generate("erdos_renyi", nk, seed=4, avg_degree=6)
+    gk = shard_graph(srck, dstk, nk, 8)
+    wantk = bfs_reference(srck, dstk, nk, [0, 17])
+    for wf in ("bytes", "packed"):
+        e = plan(gk, BFSOptions(mode="dense", use_kernel=True,
+                                wire_format=wf), mesh=mesh1d, axis="p",
+                 num_sources=2).compile()
+        got = e.run([0, 17]).dist_host
+        k_ok = (np.array_equal(got, wantk)
+                and e.trace_count == e.compile_traces)
+        ok &= k_ok
+        print(f"{f'kernel/8shard/wire={wf}':55s} -> "
+              f"{'OK' if k_ok else 'MISMATCH'}")
 
     sys.exit(0 if ok else 1)
 

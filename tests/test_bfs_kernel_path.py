@@ -1,9 +1,14 @@
-"""BFS engine with the Pallas bsr_spmm expansion (kernel-in-system path)."""
+"""BFS engine with the Pallas bsr_spmm expansion (kernel-in-system path).
+
+The kernel runs per shard inside the 1-D loop (multi-device parity is
+covered by tests/helpers/multidev_bfs.py); here the single-device session
+checks oracle parity, orientation, the per-shard blocked-adjacency
+builder, and the unsupported-combo rejections."""
 
 import numpy as np
 import pytest
 
-from repro.core import BFSOptions, bfs
+from repro.core import BFSOptions, bfs, plan
 from repro.core.ref import bfs_reference
 from repro.graphs import generate, shard_graph
 
@@ -36,8 +41,46 @@ def test_kernel_expansion_directed_orientation():
     np.testing.assert_array_equal(got, want)
 
 
-def test_kernel_path_rejects_multishard():
+def test_kernel_path_rejects_non_dense_modes():
+    """The old single-shard AssertionError became a planable multi-shard
+    path; what still (clearly) rejects is a non-dense mode, which has no
+    kernel analog."""
     src, dst = generate("erdos_renyi", 128, seed=0, avg_degree=4)
-    g = shard_graph(src, dst, 128, 2)
-    with pytest.raises(AssertionError):
-        bfs(g, [0], opts=BFSOptions(mode="dense", use_kernel=True))
+    g = shard_graph(src, dst, 128, 1)
+    for mode in ("queue", "auto"):
+        with pytest.raises(ValueError, match="mode='dense'"):
+            plan(g, BFSOptions(mode=mode, use_kernel=True))
+
+
+def test_bsr_shards_builder_pads_uniform_tiles():
+    """Per-shard blocked adjacency: uniform K across shards, zero pad
+    tiles whose block rows never jump backwards (the kernel's accumulator
+    reset fires on row transitions)."""
+    n, p = 700, 4
+    src, dst = generate("erdos_renyi", n, seed=3, avg_degree=5)
+    g = shard_graph(src, dst, n, p)
+    blocks, brs, bcs, row_pad, col_pad = g.bsr_shards()
+    shard = g.part.shard_size
+    assert blocks.shape[0] == p and brs.shape == bcs.shape == blocks.shape[:2]
+    assert row_pad % 128 == 0 and row_pad >= g.part.n
+    assert col_pad % 128 == 0 and col_pad >= shard
+    for j in range(p):
+        assert (np.diff(brs[j]) >= 0).all(), j       # sorted incl. pads
+        assert brs[j].max() < row_pad // 128
+        assert bcs[j].max() < col_pad // 128
+        # the shard's tiles reproduce exactly its edge set (transposed)
+        dense = np.zeros((row_pad, col_pad), np.float32)
+        for k in range(blocks.shape[1]):
+            dense[brs[j, k] * 128:(brs[j, k] + 1) * 128,
+                  bcs[j, k] * 128:(bcs[j, k] + 1) * 128] += blocks[j, k]
+        valid = g.dst_global[j] >= 0
+        want = np.zeros_like(dense)
+        want[g.dst_global[j][valid], g.src_local[j][valid]] = 1.0
+        np.testing.assert_array_equal(dense, want)
+    # builder result is cached, and the cheap cap probe agrees with (and
+    # after a build, reads from) it without re-tiling
+    assert g.bsr_shards()[0] is blocks
+    assert g.bsr_shard_caps() == (blocks.shape[1], 128)
+    g2 = shard_graph(src, dst, n, p)          # fresh graph: caps-only path
+    assert g2.bsr_shard_caps() == (blocks.shape[1], 128)
+    assert "_bsr_shards" not in g2.__dict__   # no dense tiles materialized

@@ -1,0 +1,280 @@
+"""Packed-bitset wire format: pack/unpack boundary behavior, padding-bit
+containment across OR merges, plan-time packed-vs-bytes resolution, and
+single-device engine parity of every wire format (multi-device parity
+lives in tests/helpers/multidev_bfs.py and grid_bfs.py)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (BFSOptions, plan, register_exchange,
+                        unregister_exchange)
+from repro.core import exchange as ex
+from repro.core import frontier as fr
+from repro.core.ref import bfs_reference
+from repro.graphs import generate, shard_graph
+
+
+def _pack_ref(mask: np.ndarray, n_blocks: int = 1) -> np.ndarray:
+    """Independent numpy word packer (LSB-first within each 32-bit word,
+    blocked per segment) — no shared code with frontier.pack_bits."""
+    total, s = mask.shape
+    m = total // n_blocks
+    w = -(-m // 32)
+    out = np.zeros((n_blocks * w, s), np.uint32)
+    for b in range(n_blocks):
+        for i in range(m):
+            out[b * w + i // 32] |= (
+                (mask[b * m + i] > 0).astype(np.uint32) << np.uint32(i % 32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n_blocks,s", [
+    (1, 1, 1),      # single bit
+    (31, 1, 2),     # just below one word
+    (32, 1, 1),     # exactly one word
+    (33, 1, 1),     # one bit into the second word
+    (5, 4, 2),      # n < 32 per block, multiple blocks
+    (500, 4, 1),    # the 2000/4 shard size of the grid harness
+    (96, 3, 3),     # word-aligned blocks
+])
+def test_pack_unpack_roundtrip_and_word_layout(m, n_blocks, s):
+    rng = np.random.default_rng(m * 1000 + n_blocks)
+    mask = (rng.random((m * n_blocks, s)) < 0.4).astype(np.uint8)
+    words = np.asarray(fr.pack_bits(jnp.asarray(mask), n_blocks=n_blocks))
+    assert words.shape == (n_blocks * fr.packed_words(m), s)
+    assert words.dtype == np.uint32
+    np.testing.assert_array_equal(words, _pack_ref(mask, n_blocks))
+    back = np.asarray(fr.unpack_bits(jnp.asarray(words), m,
+                                     n_blocks=n_blocks))
+    np.testing.assert_array_equal(back, mask)
+
+
+def test_pack_unpack_property_random_shapes():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.integers(1, 200), n_blocks=st.integers(1, 6),
+           s=st.integers(1, 3), seed=st.integers(0, 2 ** 16))
+    def prop(m, n_blocks, s, seed):
+        rng = np.random.default_rng(seed)
+        mask = (rng.random((m * n_blocks, s)) < 0.3).astype(np.uint8)
+        words = fr.pack_bits(jnp.asarray(mask), n_blocks=n_blocks)
+        back = np.asarray(fr.unpack_bits(words, m, n_blocks=n_blocks))
+        assert np.array_equal(back, mask)
+        assert np.array_equal(np.asarray(words), _pack_ref(mask, n_blocks))
+
+    prop()
+
+
+def test_padding_bits_never_leak_into_merge():
+    """The padding-id word at the last shard boundary: a full-ones mask
+    leaves the pad bits of each block's last word zero, an OR merge of
+    such words cannot invent them, and unpack drops even *forged* pad
+    bits — so a phantom candidate can never surface past the exchange."""
+    m, n_blocks, s = 37, 3, 2                   # 37 % 32 = 5 pad-heavy words
+    w = fr.packed_words(m)
+    ones = np.ones((m * n_blocks, s), np.uint8)
+    words = np.asarray(fr.pack_bits(jnp.asarray(ones), n_blocks=n_blocks))
+    # pad bits (rows m..w*32 of each block) must be zero even for all-ones
+    for b in range(n_blocks):
+        last = words[b * w + (m - 1) // 32]
+        assert (last >> np.uint32(m % 32)).max() == 0
+    # an OR merge across blocks of zero pad bits stays zero
+    merged = words[:w] | words[w:2 * w] | words[2 * w:]
+    assert np.array_equal(np.asarray(fr.unpack_bits(jnp.asarray(merged), m)),
+                          np.ones((m, s), np.uint8))
+    # forge every pad bit high: unpack must still drop them all
+    forged = words.copy().reshape(n_blocks, w, s)
+    forged[:, -1] |= np.uint32(0xFFFFFFFF) << np.uint32(m % 32)
+    back = np.asarray(fr.unpack_bits(jnp.asarray(forged.reshape(-1, s)), m,
+                                     n_blocks=n_blocks))
+    np.testing.assert_array_equal(back, ones)
+
+
+def test_packed_bottom_up_matches_unpacked():
+    rng = np.random.default_rng(3)
+    shard, p, s = 37, 4, 2                      # unaligned shard boundary
+    n = shard * p
+    fglob = (rng.random((n, s)) < 0.5).astype(np.uint8)
+    in_src = np.array([0, 36, n - 1, 5, -1, 70], np.int32)
+    in_dst = np.array([2, 0, shard - 1, -1, 3, shard], np.int32)
+    want = fr.expand_bottom_up(jnp.asarray(fglob), jnp.asarray(in_src),
+                               jnp.asarray(in_dst), shard)
+    words = fr.pack_bits(jnp.asarray(fglob), n_blocks=p)
+    got = fr.expand_bottom_up_packed(words, jnp.asarray(in_src),
+                                     jnp.asarray(in_dst), shard,
+                                     fr.packed_words(shard))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# registry + plan-time resolution
+# ---------------------------------------------------------------------------
+
+def test_packed_strategies_registered_with_8x_models():
+    n, p, s = 4096, 8, 2                        # shard 512: exact 8x
+    for name in ("allgather_merge", "alltoall_direct"):
+        plain = ex.dense_level_bytes(name, n, p, s, 1)
+        packed = ex.dense_level_bytes(name + "_packed", n, p, s, 1)
+        assert plain / packed == 8.0, name
+        assert ex.get_exchange("dense", name + "_packed").wire == "packed"
+        assert ex.get_exchange("dense", name).wire == "bytes"
+    # bottom-up gather prices the same reduction
+    assert (ex.bottomup_level_bytes(n, p, s)
+            / ex.bottomup_level_bytes(n, p, s, wire="packed")) == 8.0
+
+
+def test_select_exchange_wire_filter():
+    args = (4096, 8, 1, 1, (8,))
+    st_b = ex.select_exchange("dense", *args, wire="bytes")
+    st_p = ex.select_exchange("dense", *args, wire="packed")
+    assert st_b.wire == "bytes" and st_p.wire == "packed"
+    # spanning both formats picks the packed minimum off one device
+    assert ex.select_exchange("dense", *args).wire == "packed"
+    with pytest.raises(ValueError, match="wire"):
+        register_exchange("dense", "bad_wire", lambda *a: 0, wire="zstd")
+
+
+def test_plan_resolves_wire_format():
+    n = 300
+    src, dst = generate("erdos_renyi", n, seed=1, avg_degree=5)
+    g = shard_graph(src, dst, n, p=1)
+    # explicit packed: the _packed twin, even at p=1
+    pl = plan(g, BFSOptions(mode="dense", wire_format="packed"))
+    assert pl.dense_strategy.name == "alltoall_direct_packed"
+    assert pl.bottom_up_wire == "packed"
+    assert pl.describe()["wire_formats"]["dense"] == "packed"
+    # auto at p=1: nothing on the wire, ties keep bytes (no pack work)
+    pl = plan(g, BFSOptions(mode="dense", wire_format="auto"))
+    assert pl.dense_strategy.wire == "bytes"
+    assert pl.bottom_up_wire == "bytes"
+    # explicit _packed strategy name short-circuits wire_format
+    pl = plan(g, BFSOptions(mode="dense",
+                            dense_exchange="reduce_scatter_packed",
+                            wire_format="bytes"))
+    assert pl.dense_strategy.wire == "packed"
+    # a strategy with no packed twin fails loudly under "packed"
+    name = "tmp_bytes_only_strategy"
+    register_exchange("dense", name, lambda *a: 0.0)(lambda cand, axis: cand)
+    try:
+        with pytest.raises(ValueError, match="no packed variant"):
+            plan(g, BFSOptions(mode="dense", dense_exchange=name,
+                               wire_format="packed"))
+        # ... but "auto" degrades to the bytes impl instead of raising
+        pl = plan(g, BFSOptions(mode="dense", dense_exchange=name,
+                                wire_format="auto"))
+        assert pl.dense_strategy.name == name
+    finally:
+        unregister_exchange("dense", name)
+    # 2-D: both phases resolve independently
+    pl2 = plan(g, BFSOptions(mode="dense", wire_format="packed"),
+               partition="2d")
+    assert pl2.expand_strategy.name == "allgather_packed"
+    assert pl2.fold_strategy.name == "alltoall_reduce_packed"
+    meta = pl2.describe()
+    assert meta["wire_formats"]["expand"] == "packed"
+    assert meta["wire_formats"]["expand_sparse"] == "ids"
+    with pytest.raises(ValueError, match="wire_format"):
+        BFSOptions(wire_format="zip").validate()
+
+
+def test_plan_key_distinguishes_wire_formats():
+    n = 200
+    src, dst = generate("erdos_renyi", n, seed=2, avg_degree=4)
+    g = shard_graph(src, dst, n, p=1)
+    kb = plan(g, BFSOptions(mode="dense", wire_format="bytes")).plan_key()
+    kp = plan(g, BFSOptions(mode="dense", wire_format="packed")).plan_key()
+    ka = plan(g, BFSOptions(mode="dense", wire_format="auto")).plan_key()
+    assert kb != kp
+    assert ka == kb          # auto resolved to bytes at p=1 -> same engine
+
+
+# ---------------------------------------------------------------------------
+# plan() unsupported-combo rejection (satellite)
+# ---------------------------------------------------------------------------
+
+def test_plan_rejects_unsupported_kernel_combos():
+    n = 256
+    src, dst = generate("erdos_renyi", n, seed=0, avg_degree=4)
+    g = shard_graph(src, dst, n, p=1)
+    with pytest.raises(ValueError, match="use_kernel"):
+        plan(g, BFSOptions(mode="dense", use_kernel=True), partition="2d")
+    with pytest.raises(ValueError, match="mode='dense'"):
+        plan(g, BFSOptions(mode="queue", use_kernel=True))
+    with pytest.raises(ValueError, match="mode='dense'"):
+        plan(g, BFSOptions(mode="auto", use_kernel=True))
+
+
+# ---------------------------------------------------------------------------
+# single-device engine parity across wire formats (incl. the kernel path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["1d", "2d"])
+@pytest.mark.parametrize("wire", ["bytes", "packed", "auto"])
+def test_engine_parity_across_wire_formats(partition, wire):
+    n = 500
+    src, dst = generate("erdos_renyi", n, seed=4, avg_degree=6)
+    g = shard_graph(src, dst, n, p=1)
+    want = bfs_reference(src, dst, n, [0, 13])
+    eng = plan(g, BFSOptions(mode="dense", wire_format=wire),
+               num_sources=2, partition=partition).compile()
+    np.testing.assert_array_equal(eng.run([0, 13]).dist_host, want)
+    assert eng.trace_count == eng.compile_traces
+
+
+@pytest.mark.parametrize("wire", ["bytes", "packed"])
+def test_auto_mode_parity_across_wire_formats(wire):
+    """The hybrid's bottom-up levels ride the packed frontier gather."""
+    n = 600
+    src, dst = generate("rmat", n, seed=5, edge_factor=6)
+    g = shard_graph(src, dst, n, p=1)
+    want = bfs_reference(src, dst, n, [0])
+    eng = plan(g, BFSOptions(mode="auto", wire_format=wire,
+                             queue_cap=4096)).compile()
+    res = eng.run([0])
+    np.testing.assert_array_equal(res.dist_host, want)
+    assert res.stats().mode_counts["bottom_up"] >= 1
+
+
+@pytest.mark.parametrize("n", [512, 400])   # 512: Pallas bitpack kernel
+                                            # (32-aligned); 400: jnp pack
+def test_kernel_packed_emission_matches_oracle(n):
+    src, dst = generate("erdos_renyi", n, seed=6, avg_degree=6)
+    g = shard_graph(src, dst, n, p=1)
+    want = bfs_reference(src, dst, n, [0, 7])
+    eng = plan(g, BFSOptions(mode="dense", use_kernel=True,
+                             wire_format="packed"), num_sources=2).compile()
+    np.testing.assert_array_equal(eng.run([0, 7]).dist_host, want)
+
+
+def test_bitpack_kernel_matches_pack_bits():
+    from repro.kernels.bsr_spmm.ops import bitpack_words
+
+    rng = np.random.default_rng(7)
+    mask = (rng.random((128, 3)) < 0.5).astype(np.float32)  # spmm-style f32
+    got = np.asarray(bitpack_words(jnp.asarray(mask), interpret=True))
+    want = np.asarray(fr.pack_bits(jnp.asarray(mask > 0).astype(jnp.uint8)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_estimated_device_bytes_prices_packed_and_kernel():
+    n = 512
+    src, dst = generate("erdos_renyi", n, seed=8, avg_degree=5)
+    g = shard_graph(src, dst, n, p=1)
+    base = plan(g, BFSOptions(mode="dense",
+                              wire_format="bytes")).estimated_device_bytes()
+    packed = plan(g, BFSOptions(mode="dense",
+                                wire_format="packed")
+                  ).estimated_device_bytes()
+    kernel = plan(g, BFSOptions(mode="dense", use_kernel=True,
+                                wire_format="bytes")
+                  ).estimated_device_bytes()
+    assert packed > base          # the loop-live word array is charged
+    assert kernel > base          # resident blocked adjacency is charged
