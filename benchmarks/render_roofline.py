@@ -6,7 +6,10 @@ partition sweep (``partition_sweep`` key) and the multi-graph serving
 amortization ledger (``serving`` key: per-graph cold compile vs warm run,
 plus the budget-bound eviction pass); and the standalone
 ``BENCH_wire_format.json`` ledger (``wire_format`` key: packed vs bytes
-dense exchanges, modeled + measured + HLO-parsed collective bytes).  Every sweep series label carries
+dense exchanges, modeled + measured + HLO-parsed collective bytes) and
+the standalone ``BENCH_serving_latency.json`` ledger
+(``serving_latency`` key: remote-front-end bucket-ladder latencies and
+the bounded-queue overload pass).  Every sweep series label carries
 the partition kind (``erdos_renyi_100k[1d]`` vs ``erdos_renyi_100k[2d]``)
 so the two schemes plot as distinct curves instead of collapsing into
 one.  A ledger matching none of the known schemas (or a ``--only``
@@ -97,6 +100,32 @@ def render_wire_format(data):
               f"resolved {r['resolved']}")
 
 
+def render_serving_latency(data):
+    """BENCH_serving_latency.json: bucket-ladder latency + overload."""
+    sl = data["serving_latency"]
+    print(f"bucket ladder {sl['ladder']} on "
+          f"{sl['graph']['kind']} n={sl['graph']['n']}\n")
+    print("| batch | bucket | cold (ms) | warm (ms) | warm us/source | "
+          "queue wait (ms) | device (ms) |")
+    print("|---|---|---|---|---|---|---|")
+    for batch, b in sorted(sl["batches"].items(), key=lambda kv: int(kv[0])):
+        t = b["timing_ms"]
+        print(f"| {batch} | {b['bucket']} | {b['cold_ms']:.1f} "
+              f"| {b['warm_ms']:.1f} | {b['warm_us_per_source']:.0f} "
+              f"| {t['queue_wait']:.1f} | {t['device']:.1f} |")
+    ov = sl["overload"]
+    print(f"\noverload: {ov['clients']} clients vs queue_depth="
+          f"{ov['queue_depth']} -> {ov['admitted']} admitted, "
+          f"{ov['rejected_429']} x 429 "
+          f"(retry-after hints {ov['retry_after_s']} s)")
+    e2e = sl["lane_metrics"]["e2e"]
+    cache = sl.get("engine_cache", {})
+    print(f"lane e2e: count={e2e['count']} p50={e2e['p50_ms']}ms "
+          f"p95={e2e['p95_ms']}ms; cache hit_rate="
+          f"{cache.get('hit_rate', 0):.2f} over {cache.get('entries', 0)} "
+          "engines")
+
+
 def render_dryrun(data):
     print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
           "t_collective (s) | bottleneck | GiB/dev | useful-flops ratio |")
@@ -122,6 +151,14 @@ def main(path):
     # BENCH ledgers always carry the partition_sweep key (possibly empty
     # under --only filters); dispatch on presence, not truthiness, so a
     # filtered BENCH json never falls through to the dryrun schema.
+    if "serving_latency" in data and "partition_sweep" not in data:
+        # the standalone BENCH_serving_latency.json ledger
+        if data.get("serving_latency"):
+            render_serving_latency(data)
+        else:
+            print("(empty serving_latency ledger — run benchmarks/run.py "
+                  "--only serving_latency)")
+        return
     if "wire_format" in data and "partition_sweep" not in data:
         # the standalone BENCH_wire_format.json ledger
         if data.get("wire_format"):

@@ -44,6 +44,9 @@ _PARTITION_SWEEP = []  # 1-D vs 2-D scheme rows (modeled + measured bytes)
 _SERVING = {}          # multi-graph serving ledger (cold/warm/hit rate)
 _WIRE_FORMAT = []      # packed vs bytes wire rows (own BENCH_wire_format
                        # ledger; see --wire-out)
+_SERVING_LATENCY = {}  # remote front-end ledger: bucket ladder latencies +
+                       # overload 429s (own BENCH_serving_latency ledger;
+                       # see --serving-out)
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -539,6 +542,112 @@ def bench_multi_graph_serving():
     })
 
 
+def bench_serving_latency():
+    """Remote front-end: bucket-ladder latency + bounded-queue overload.
+
+    Drives the transport-agnostic ``BFSFrontend`` in process (the same
+    submit/dispatch/complete path ``POST /v1/traverse`` rides, minus
+    HTTP framing) over one lane compiled at the 1/8/64 bucket ladder.
+
+    Phase 1 — per batch size: the *cold* request (first touch of its
+    bucket pays the compile through the shared cache) vs *warm* repeats,
+    with the dispatcher's own queue-wait/device split from the response
+    timing.  Batch 3 lands between rungs and must be served by bucket 8
+    — its warm per-source cost is the price of ladder padding.
+
+    Phase 2 — overload: queue bound 1 with the dispatcher parked, then
+    a synchronized 8-client burst.  Exactly one request is admitted and
+    the rest get 429s with retry-after hints; the dispatcher then starts
+    and drains the survivor.  Deterministic *and* concurrent.
+    """
+    import threading as _threading
+
+    from repro.serve.bfs_service import BFSService
+    from repro.serve.engine_cache import EngineCache, GraphCatalog
+    from repro.serve.frontend import AdmissionError, BFSFrontend
+
+    n, ladder = 20_000, (1, 8, 64)
+    src, dst = generate("erdos_renyi", n, seed=0, avg_degree=8.0)
+    g = shard_graph(src, dst, n, p=1)
+    svc = BFSService(opts=BFSOptions(mode="dense"), batch_buckets=ladder,
+                     cache=EngineCache(), catalog=GraphCatalog())
+    svc.add_graph("er", g)
+
+    fe = BFSFrontend(svc, max_queue_depth=64)
+    per_batch = {}
+    reps = 3
+    for batch in (1, 8, 3, 64):        # 3 after 8: its bucket is pre-warmed
+        t0 = time.time()
+        out = fe.traverse("er", list(range(batch)))
+        cold_s = time.time() - t0
+        t0 = time.time()
+        for i in range(reps):
+            out = fe.traverse(
+                "er", [(batch * 7 + i * 131 + v) % n for v in range(batch)])
+        warm_s = (time.time() - t0) / reps
+        per_batch[batch] = {
+            "bucket": out["bucket"], "cold_ms": cold_s * 1e3,
+            "warm_ms": warm_s * 1e3,
+            "warm_us_per_source": warm_s * 1e6 / batch,
+            "timing_ms": out["timing_ms"],
+        }
+        row(f"serving_latency/batch={batch}", warm_s * 1e6 / batch,
+            f"bucket={out['bucket']};cold_ms={cold_s*1e3:.1f};"
+            f"warm_ms={warm_s*1e3:.1f};"
+            f"queue_wait_ms={out['timing_ms']['queue_wait']:.1f};"
+            f"device_ms={out['timing_ms']['device']:.1f}")
+    assert per_batch[3]["bucket"] == 8, per_batch   # between-rung routing
+    lane_snap = fe.metrics_payload()
+    fe.shutdown()
+
+    clients = 8
+    fe2 = BFSFrontend(svc, max_queue_depth=1, start_dispatcher=False)
+    admitted, rejected = [], []
+    lock = _threading.Lock()
+    barrier = _threading.Barrier(clients)
+
+    def fire(i):
+        barrier.wait()
+        try:
+            p = fe2.submit("er", [i])
+            with lock:
+                admitted.append(p)
+        except AdmissionError as exc:
+            with lock:
+                rejected.append(exc)
+
+    threads = [_threading.Thread(target=fire, args=(i,))
+               for i in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(admitted) == 1 and len(rejected) == clients - 1, (
+        len(admitted), len(rejected))
+    fe2.start()                        # un-park: drain the one survivor
+    for p in admitted:
+        fe2.wait(p, timeout_s=60.0)
+    fe2.shutdown()
+    row("serving_overload", 0.0,
+        f"clients={clients};queue_depth=1;admitted={len(admitted)};"
+        f"rejected_429={len(rejected)};"
+        f"retry_after_s={rejected[0].retry_after_s:.3f}")
+
+    _SERVING_LATENCY.update({
+        "ladder": list(ladder),
+        "graph": {"kind": "erdos_renyi", "n": n, "avg_degree": 8.0},
+        "batches": {str(k): v for k, v in sorted(per_batch.items())},
+        "overload": {
+            "clients": clients, "queue_depth": 1,
+            "admitted": len(admitted), "rejected_429": len(rejected),
+            "retry_after_s": sorted(round(e.retry_after_s, 3)
+                                    for e in rejected),
+        },
+        "lane_metrics": lane_snap["lanes"]["er"],
+        "engine_cache": lane_snap["engine_cache"],
+    })
+
+
 def bench_multi_source_throughput():
     """Batched multi-source BFS (the MXU formulation): us per source."""
     n = 30_000
@@ -610,6 +719,7 @@ BENCHES = [
     bench_partition_1d_vs_2d,
     bench_wire_format_sweep,
     bench_multi_graph_serving,
+    bench_serving_latency,
     bench_multi_source_throughput,
     bench_kernels,
     bench_roofline_table,
@@ -623,6 +733,9 @@ def main(argv=None) -> None:
     ap.add_argument("--wire-out", default="BENCH_wire_format.json",
                     help="wire-format sweep ledger path (written when the "
                          "wire_format bench runs)")
+    ap.add_argument("--serving-out", default="BENCH_serving_latency.json",
+                    help="serving front-end ledger path (written when the "
+                         "serving_latency bench runs)")
     ap.add_argument("--only", default=None,
                     help="substring filter on bench function names")
     args = ap.parse_args(argv)
@@ -664,6 +777,19 @@ def main(argv=None) -> None:
             json.dump(wire_ledger, f, indent=2, sort_keys=True)
         print(f"# wrote {args.wire_out} ({len(_WIRE_FORMAT)} wire rows)",
               flush=True)
+
+    if _SERVING_LATENCY:
+        serving_ledger = {
+            "serving_latency": _SERVING_LATENCY,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "device_count": jax.device_count(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.serving_out, "w") as f:
+            json.dump(serving_ledger, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.serving_out} "
+              f"({len(_SERVING_LATENCY['batches'])} batch rows)", flush=True)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ one-shot ``bfs()`` remains as a deprecated wrapper over that lifecycle.
 from repro.core.bfs import (BFSOptions, BFSStats, INF, bfs,
                             validate_sources)
 from repro.core.engine import (BFSEngine, BFSPlan, BFSResult, BFSRunStats,
-                               plan)
+                               normalize_ladder, pick_bucket, plan,
+                               plan_ladder)
 from repro.core.exchange import (DENSE_STRATEGIES, EXPAND_ROW_STRATEGIES,
                                  EXPAND_ROW_SPARSE_STRATEGIES,
                                  FOLD_COL_STRATEGIES,
@@ -26,6 +27,7 @@ from repro.core.partition import (Partition, Partition1D, Partition2D,
 __all__ = [
     "BFSOptions", "BFSStats", "INF", "bfs", "validate_sources",
     "BFSEngine", "BFSPlan", "BFSResult", "BFSRunStats", "plan",
+    "plan_ladder", "pick_bucket", "normalize_ladder",
     "Partition", "Partition1D", "Partition2D", "repartition",
     "exchange_dense", "exchange_queue", "expand_row", "fold_col",
     "ExchangeStrategy", "register_exchange", "unregister_exchange",

@@ -375,6 +375,59 @@ def _resolve_bottom_up_wire(wire_format: str, n: int, p: int, s: int) -> str:
     return "bytes"
 
 
+def normalize_ladder(ladder) -> tuple:
+    """Canonicalize a batch-size bucket ladder: ints, deduped, ascending.
+
+    The serving front-end compiles one engine per rung and routes every
+    request to the smallest rung that fits, so the ladder is the whole
+    set of compiled plans a lane can ever occupy — a malformed ladder
+    must fail at configuration time, not on the first mid-sized request.
+    """
+    rungs = tuple(sorted({int(s) for s in ladder}))
+    if not rungs:
+        raise ValueError("bucket ladder must name at least one batch size")
+    if rungs[0] < 1:
+        raise ValueError(f"bucket ladder sizes must be >= 1 ({list(ladder)})")
+    return rungs
+
+
+def pick_bucket(n_sources: int, ladder) -> int:
+    """Smallest ladder rung that fits ``n_sources`` (bucket routing).
+
+    The engine already pads unused source columns on device (``run_async``
+    accepts 1..S sources), so routing to the next-larger rung costs only
+    the padded columns' device work — never a recompile.
+    """
+    n = int(n_sources)
+    if n < 1:
+        raise ValueError(f"n_sources must be >= 1 ({n_sources})")
+    for s in normalize_ladder(ladder):
+        if n <= s:
+            return s
+    raise ValueError(
+        f"{n} sources exceed the largest bucket {max(ladder)} of ladder "
+        f"{sorted(set(int(s) for s in ladder))}; add a larger rung or "
+        "split the request")
+
+
+def plan_ladder(graph, opts: BFSOptions = BFSOptions(), *,
+                mesh: Optional[Mesh] = None, axis=None,
+                ladder=(1, 8, 64), partition: Optional[str] = None) -> dict:
+    """Plan one engine per batch-size bucket: ``{S: BFSPlan}`` ascending.
+
+    The inference-serving idiom (sorted batch sizes, pad to bucket)
+    applied to traversal: compiling a small ladder of source capacities
+    once bounds the set of compiled executables while arbitrary request
+    fan-outs route to the smallest fitting rung.  All rungs share the
+    graph's device edge blocks (the per-(mesh, axis, group) upload dedup),
+    so an extra rung costs roughly its (n, S) working buffers, not a
+    second copy of the graph.
+    """
+    return {s: plan(graph, opts, mesh=mesh, axis=axis, num_sources=s,
+                    partition=partition)
+            for s in normalize_ladder(ladder)}
+
+
 def plan(graph, opts: BFSOptions = BFSOptions(), *,
          mesh: Optional[Mesh] = None, axis=None,
          num_sources: int = 1, partition: Optional[str] = None) -> BFSPlan:

@@ -20,6 +20,23 @@ Graph specs are ``[name=]kind[:n][:RxC]``; a trailing grid selects the
 like before.  ``--verify`` checks every finished traversal against the
 numpy reference; ``--expect-eviction`` exits nonzero unless the budget
 actually forced at least one eviction (CI smoke).
+
+``--http HOST:PORT`` binds the remote front-end instead of running the
+self-driven request loop::
+
+    PYTHONPATH=src python -m repro.launch.bfs_serve --devices 4 \
+        --graph er=erdos_renyi:40000 --graph ring=chain:5000:2x2 \
+        --http 127.0.0.1:8642 --buckets 1,8,64 --queue-depth 32 \
+        --cache-budget-mb 64 --stats-interval 10
+
+Each lane then compiles a ladder of batch-size buckets (``--buckets``)
+through the shared engine cache; remote requests (``launch/bfs_client``)
+are padded to the smallest fitting bucket, admission is bounded by
+``--queue-depth`` / ``--max-inflight-mb`` (429 + Retry-After when full),
+and ``/metrics`` serves per-lane latency histograms next to the cache
+counters.  ``HOST:0`` binds an ephemeral port; ``--port-file`` writes
+the bound port for scripted callers.  The server runs until
+``POST /admin/shutdown`` (graceful drain), SIGINT, or ``--serve-secs``.
 """
 
 from repro.launch import host_devices_from_argv, parse_graph_spec
@@ -49,6 +66,59 @@ _GEN_DEFAULTS = {
 }
 
 
+def _serve_http(args, svc, graph_specs):
+    """Bind the remote front-end and run the accept loop to completion."""
+    from repro.serve.frontend.server import serve_http
+
+    try:
+        host, _, port_s = args.http.rpartition(":")
+        host = host or "127.0.0.1"
+        port = int(port_s)
+    except ValueError:
+        raise SystemExit(f"--http expects HOST:PORT, got {args.http!r}")
+
+    httpd, frontend = serve_http(
+        svc, host, port, max_queue_depth=args.queue_depth,
+        max_inflight_mb=args.max_inflight_mb,
+        stats_interval_s=args.stats_interval, graph_specs=graph_specs)
+    bound = httpd.server_address[1]
+    print(f"serving on http://{host}:{bound} "
+          f"(queue_depth={args.queue_depth}, "
+          f"max_inflight_mb={args.max_inflight_mb:g}); "
+          "POST /admin/shutdown to drain and stop", flush=True)
+    if args.port_file:
+        with open(args.port_file, "w") as f:
+            f.write(str(bound))
+
+    if args.serve_secs > 0:
+        import threading
+
+        def _timer():
+            time.sleep(args.serve_secs)
+            httpd.drain_and_stop()
+
+        threading.Thread(target=_timer, daemon=True).start()
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        print("interrupt: draining", flush=True)
+        frontend.shutdown()
+    finally:
+        httpd.server_close()
+
+    st = svc.cache_stats()
+    done = sum(m.completed for m in frontend.metrics.lanes.values())
+    rejected = sum(m.rejected for m in frontend.metrics.lanes.values())
+    print(f"served {done} traversals ({rejected} rejected 429); "
+          f"cache: hits={st['hits']} misses={st['misses']} "
+          f"evictions={st['evictions']} hit_rate={st['hit_rate']:.2f} "
+          f"compile_s={st['compile_s_total']:.2f}")
+    if args.expect_eviction and st["evictions"] == 0:
+        print("EXPECTED at least one cache eviction under "
+              f"--cache-budget-mb {args.cache_budget_mb}; none happened")
+        sys.exit(1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default=None,
@@ -71,8 +141,33 @@ def main():
                     help="check every traversal against the numpy reference")
     ap.add_argument("--expect-eviction", action="store_true",
                     help="exit nonzero unless the cache evicted >= 1 engine")
+    ap.add_argument("--http", default=None, metavar="HOST:PORT",
+                    help="bind the remote front-end instead of running the "
+                         "self-driven request loop (PORT 0 = ephemeral)")
+    ap.add_argument("--buckets", default=None, metavar="S1,S2,...",
+                    help="batch-size bucket ladder per lane, e.g. 1,8,64 "
+                         "(default: one bucket of --slots)")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="per-lane admission queue bound (HTTP mode)")
+    ap.add_argument("--max-inflight-mb", type=float, default=256.0,
+                    help="per-lane in-flight response-byte bound (HTTP)")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="seconds between serving stats log lines (0=off)")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound HTTP port to this file")
+    ap.add_argument("--serve-secs", type=float, default=0.0,
+                    help="auto-shutdown the HTTP server after this many "
+                         "seconds (0 = run until /admin/shutdown or ^C)")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
     args = ap.parse_args()
+
+    buckets = None
+    if args.buckets:
+        try:
+            buckets = tuple(int(tok) for tok in args.buckets.split(","))
+        except ValueError:
+            ap.error(f"--buckets expects comma-separated ints, got "
+                     f"{args.buckets!r}")
 
     # spec rows: (name, kind, n, grid, generator kwargs) — a named
     # workload keeps its configured gen_kwargs; ad-hoc specs use the
@@ -114,13 +209,18 @@ def main():
                                      dense_exchange=args.exchange,
                                      queue_cap=1 << 15),
                      mesh=mesh_1d, axis="p", batch_slots=args.slots,
-                     cache=cache, catalog=catalog)
+                     batch_buckets=buckets, cache=cache, catalog=catalog)
 
     edge_lists = {}
+    graph_specs = {}
     t0 = time.time()
     for name, kind, n, grid, kw in specs:
         src, dst = generate(kind, n, seed=0, **kw)
         edge_lists[name] = (src, dst, n)
+        # advertised via /v1/graphs so a remote --verify client can
+        # regenerate the identical graph and check depths bitwise
+        graph_specs[name] = {"kind": kind, "n": n, "seed": 0,
+                             "gen_kwargs": kw}
         g = shard_graph(src, dst, n, p)
         if grid:
             svc.add_graph(name, g, mesh=make_grid_mesh(*grid), axis=None,
@@ -131,8 +231,11 @@ def main():
         print(f"lane {name}: kind={kind} n={n} edges={src.shape[0]} "
               f"partition={part_lbl}")
     print(f"{len(specs)} lane(s) registered in {time.time()-t0:.2f}s "
-          f"(shards={p}, slots={args.slots}, "
-          f"budget={args.cache_budget_mb or 'unbounded'} MB)")
+          f"(shards={p}, buckets={list(buckets) if buckets else [args.slots]},"
+          f" budget={args.cache_budget_mb or 'unbounded'} MB)", flush=True)
+
+    if args.http is not None:
+        return _serve_http(args, svc, graph_specs)
 
     rng = np.random.default_rng(0)
     names = svc.graph_names()

@@ -30,12 +30,13 @@ sustained load.  Duplicate sources within a lane share one engine column.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.bfs import BFSOptions, INF, validate_sources
-from repro.core.engine import plan
+from repro.core.engine import pick_bucket, plan_ladder
 from repro.serve.batcher import SlotPool
 from repro.serve.engine_cache import (EngineCache, GraphCatalog,
                                       default_engine_cache)
@@ -58,19 +59,37 @@ class TraversalRequest:
 
 
 class _Lane:
-    """One served (graph, plan) pair: routing state + its slot pool.
+    """One served graph: routing state, its slot pool, its plan ladder.
 
-    Holds the *plan* (cheap metadata), never the engine — the engine is
+    Holds *plans* (cheap metadata), never engines — engines are
     re-resolved through the cache at every step so budget evictions stay
-    transparent to the lane.
+    transparent to the lane.  ``plans`` is the lane's batch-size bucket
+    ladder ``{S: BFSPlan}`` ascending: a step (or ``traverse``) with k
+    distinct sources routes to the smallest rung with S >= k, so a lane
+    under arbitrary fan-out only ever occupies a bounded set of compiled
+    executables (the serving front-end's pad-to-bucket contract).
     """
 
-    def __init__(self, name: str, graph, plan_, batch_slots: int):
+    def __init__(self, name: str, graph, plans: Dict[int, "object"]):
         self.name = name
         self.graph = graph
-        self.plan = plan_
-        self.pool = SlotPool(batch_slots)
-        self.n_logical = plan_.graph.part.n_logical
+        self.plans = dict(sorted(plans.items()))
+        self.ladder = tuple(self.plans)
+        self.pool = SlotPool(self.ladder[-1])
+        self.n_logical = self.plan.graph.part.n_logical
+
+    @property
+    def plan(self):
+        """The largest rung's plan (the lane's full-capacity shape —
+        what single-rung call sites held before ladders existed)."""
+        return self.plans[self.ladder[-1]]
+
+    def plan_for(self, n_sources: int):
+        """The smallest rung fitting ``n_sources`` distinct sources."""
+        return self.plans[pick_bucket(n_sources, self.ladder)]
+
+    def pending(self) -> int:
+        return len(self.pool.queue) + int(self.pool.live().sum())
 
     def drained(self) -> bool:
         return self.pool.drained()
@@ -89,12 +108,15 @@ class BFSService:
 
     def __init__(self, graphs=None, opts: BFSOptions = BFSOptions(), *,
                  mesh=None, axis=None, batch_slots: int = 4,
-                 partition=None, cache: Optional[EngineCache] = None,
+                 batch_buckets=None, partition=None,
+                 cache: Optional[EngineCache] = None,
                  catalog: Optional[GraphCatalog] = None):
         self.catalog = catalog if catalog is not None else GraphCatalog()
         self.cache = cache if cache is not None else default_engine_cache()
         self._defaults = dict(opts=opts, mesh=mesh, axis=axis,
-                              batch_slots=batch_slots, partition=partition)
+                              batch_slots=batch_slots,
+                              batch_buckets=batch_buckets,
+                              partition=partition)
         self._lanes: Dict[str, _Lane] = {}
         self._order: List[str] = []      # registration order, for rotation
         self._rr = 0
@@ -108,13 +130,20 @@ class BFSService:
 
     # ------------------------------------------------------------ registry
     def add_graph(self, name: str, graph=None, *, opts=_UNSET, mesh=_UNSET,
-                  axis=_UNSET, batch_slots=_UNSET, partition=_UNSET) -> str:
+                  axis=_UNSET, batch_slots=_UNSET, batch_buckets=_UNSET,
+                  partition=_UNSET) -> str:
         """Register a graph (or adopt one already in the catalog) and
         open its serving lane.  Planning happens now — invalid options
         fail at registration; compiling waits for the first step that
         serves the lane (through the shared cache).  Passing any keyword
         (including an explicit None, e.g. ``mesh=None`` for a p=1 2-D
-        lane) overrides the service default for this lane only."""
+        lane) overrides the service default for this lane only.
+
+        ``batch_buckets`` opens the lane with a batch-size bucket ladder
+        (e.g. ``(1, 8, 64)``): one plan per rung, slot pool sized to the
+        largest rung, every dispatch routed to the smallest rung fitting
+        its distinct-source count.  Without it the lane is a one-rung
+        ladder at ``batch_slots`` — the pre-bucket behavior exactly."""
         if name in self._lanes:
             raise ValueError(f"graph {name!r} already has a serving lane")
         if graph is None:
@@ -130,14 +159,16 @@ class BFSService:
         if opts.mode == "queue":
             raise ValueError("BFSService batches sources; queue mode is "
                              "single-source — use dense or auto")
-        slots = pick(batch_slots, "batch_slots")
+        buckets = pick(batch_buckets, "batch_buckets")
+        ladder = tuple(buckets) if buckets else (pick(batch_slots,
+                                                      "batch_slots"),)
         lane_mesh = pick(mesh, "mesh")
         lane_axis = axis if axis is not _UNSET else (
             d["axis"] if lane_mesh is d["mesh"] else None)
-        lane_plan = plan(
-            graph, opts, mesh=lane_mesh, axis=lane_axis,
-            num_sources=slots, partition=pick(partition, "partition"))
-        self._lanes[name] = _Lane(name, graph, lane_plan, slots)
+        lane_plans = plan_ladder(
+            graph, opts, mesh=lane_mesh, axis=lane_axis, ladder=ladder,
+            partition=pick(partition, "partition"))
+        self._lanes[name] = _Lane(name, graph, lane_plans)
         self._order.append(name)
         return name
 
@@ -208,7 +239,9 @@ class BFSService:
                 if src not in col_of:
                     col_of[src] = len(col_of)
             uniq = sorted(col_of, key=col_of.get)
-            engine = self.cache.get_or_compile(lane.plan)
+            # bucket routing: a round with few distinct sources runs on
+            # the smallest fitting rung's engine, not the full-width plan
+            engine = self.cache.get_or_compile(lane.plan_for(len(uniq)))
             # dispatch only; blocking waits until every lane is in flight
             inflight.append((lane, live, col_of, engine.run_async(uniq)))
 
@@ -228,27 +261,72 @@ class BFSService:
                 finished.append(r)
         return finished
 
+    def traverse_async(self, name: Optional[str], sources):
+        """Dispatch one multi-source traversal on a lane's smallest
+        fitting bucket; returns the un-blocked ``BFSResult`` (the remote
+        front-end's dispatch path — lanes overlap via these handles).
+
+        Sources are validated *here*, at the door: range against the
+        lane's logical vertex count, duplicate detection, and the lane's
+        largest-rung capacity all raise ``ValueError`` before any device
+        work, so bad remote input maps to a 400-style rejection instead
+        of surfacing as a device-side error mid-``step()``.
+        """
+        lane = self.lane(name) if name is not None else self._sole_lane()
+        srcs = validate_sources(sources, lane.n_logical,
+                                max_sources=lane.ladder[-1])
+        plan_ = lane.plan_for(len(srcs))
+        engine = self.cache.get_or_compile(plan_)
+        return engine.run_async([int(s) for s in srcs]), plan_.num_sources
+
+    def traverse(self, name: Optional[str], sources):
+        """Blocking ``traverse_async``: returns ``(BFSResult, bucket)``
+        with the result synced (``dist_host`` is the padding-stripped
+        (n_logical, len(sources)) distance matrix)."""
+        res, bucket = self.traverse_async(name, sources)
+        return res.block(), bucket
+
     def drained(self) -> bool:
         return all(lane.drained() for lane in self._lanes.values())
 
-    def run_until_drained(self, max_steps: int = 10_000):
+    def pending_by_lane(self) -> Dict[str, int]:
+        """Per-lane queued + in-slot request counts (nonzero lanes only)."""
+        return {name: lane.pending() for name, lane in self._lanes.items()
+                if lane.pending()}
+
+    def run_until_drained(self, max_steps: int = 10_000,
+                          timeout_s: Optional[float] = None):
         """Step until every submitted request on every lane has finished.
 
         Raises ``RuntimeError`` if the queues are not drained within
         ``max_steps`` service steps — previously this returned the partial
         result list silently, so a caller could mistake a truncated drain
         for completion and never see the still-queued requests.
+        ``timeout_s`` bounds the drain by wall clock as well (checked
+        between steps; a single stuck engine run is not interrupted): a
+        deep-traversal tenant can exhaust hours before it exhausts
+        ``max_steps``, and serving shutdown paths need a time bound, not
+        a step bound.  The error names each lane's pending count so a
+        stuck lane is identifiable instead of one opaque total.
         """
         done = []
+        deadline = (time.monotonic() + timeout_s
+                    if timeout_s is not None else None)
         for _ in range(max_steps):
             if self.drained():
                 break
+            if deadline is not None and time.monotonic() >= deadline:
+                break
             done += self.step()
         if not self.drained():
-            pending = sum(len(l.pool.queue) + int(l.pool.live().sum())
-                          for l in self._lanes.values())
+            per_lane = ", ".join(f"{name}: {cnt}" for name, cnt
+                                 in self.pending_by_lane().items())
+            pending = sum(self.pending_by_lane().values())
+            limit = (f"timeout_s={timeout_s}" if deadline is not None
+                     and time.monotonic() >= deadline
+                     else f"max_steps={max_steps}")
             raise RuntimeError(
                 f"run_until_drained: {pending} request(s) still pending "
-                f"after max_steps={max_steps} engine runs ({len(done)} "
-                f"finished); raise max_steps or submit fewer requests")
+                f"after {limit} ({len(done)} finished; per-lane pending: "
+                f"{per_lane}); raise the bound or submit fewer requests")
         return done

@@ -1,0 +1,145 @@
+"""JSON wire contract of the traversal front-end (``/v1/traverse``).
+
+One request is one batched traversal: a graph name plus 1..S distinct
+source vertex ids (S = the lane's largest bucket).  The response carries
+the per-source depth rows of the engine's distance matrix — raw int32
+values including the ``INF`` unreached sentinel, so a client comparison
+against an in-process ``BFSEngine.run`` is *bitwise*, never epsilon —
+and, on request, a parent vector derived host-side from the depths.
+
+Validation here is typed (``RequestError`` carries an HTTP status) so
+the transport maps malformed input to 400s at the door; semantic source
+validation (range, duplicates) happens in
+``BFSService.traverse_async`` -> ``validate_sources`` and is mapped by
+the server to the same 400 family.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import numpy as np
+
+from repro.core.frontier import INF
+
+#: wire value of an unreached vertex (``jnp.int32(2**30)`` on device);
+#: echoed in every response so clients need not hard-code it
+UNREACHED = int(INF)
+
+#: hard cap on request body size (a traverse request is a name + a small
+#: id list; anything near this is malformed or hostile)
+MAX_BODY_BYTES = 1 << 20
+
+#: hard cap on sources per request, independent of any lane's ladder —
+#: bounds the work a single malformed request can queue
+MAX_SOURCES_PER_REQUEST = 4096
+
+
+class RequestError(ValueError):
+    """Malformed request; ``status`` is the HTTP code the transport
+    should answer with (400 unless stated otherwise)."""
+
+    def __init__(self, message: str, status: int = 400):
+        super().__init__(message)
+        self.status = status
+
+
+def parse_traverse_request(body: bytes) -> dict:
+    """Decode + structurally validate a ``/v1/traverse`` body.
+
+    Returns ``{"graph": str|None, "sources": [int, ...],
+    "include_parents": bool}``.  Range/duplicate checks are deferred to
+    the service's submit-time ``validate_sources`` (they need the lane's
+    vertex count); everything shape- and type-level fails here.
+    """
+    if len(body) > MAX_BODY_BYTES:
+        raise RequestError(f"request body of {len(body)} bytes exceeds "
+                           f"the {MAX_BODY_BYTES}-byte limit", status=413)
+    try:
+        obj = json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+        raise RequestError(f"request body is not valid JSON: {exc}")
+    if not isinstance(obj, dict):
+        raise RequestError("request body must be a JSON object with a "
+                           "'sources' list (and optionally 'graph')")
+    unknown = sorted(set(obj) - {"graph", "sources", "include_parents"})
+    if unknown:
+        raise RequestError(f"unknown request field(s) {unknown}; expected "
+                           "graph, sources, include_parents")
+
+    graph = obj.get("graph")
+    if graph is not None and not isinstance(graph, str):
+        raise RequestError(f"'graph' must be a string lane name, got "
+                           f"{type(graph).__name__}")
+
+    sources = obj.get("sources")
+    if not isinstance(sources, list) or not sources:
+        raise RequestError("'sources' must be a non-empty list of vertex "
+                           "ids")
+    if len(sources) > MAX_SOURCES_PER_REQUEST:
+        raise RequestError(f"{len(sources)} sources exceed the per-request "
+                           f"limit of {MAX_SOURCES_PER_REQUEST}")
+    for s in sources:
+        # bool is an int subclass; reject it explicitly
+        if isinstance(s, bool) or not isinstance(s, int):
+            raise RequestError(f"source ids must be integers, got {s!r}")
+
+    include_parents = obj.get("include_parents", False)
+    if not isinstance(include_parents, bool):
+        raise RequestError("'include_parents' must be a boolean")
+    return {"graph": graph, "sources": [int(s) for s in sources],
+            "include_parents": include_parents}
+
+
+def derive_parents(src: np.ndarray, dst: np.ndarray,
+                   depths: np.ndarray) -> np.ndarray:
+    """A valid BFS parent matrix from the edge list + depth matrix.
+
+    ``depths`` is the (n, S) distance matrix; the result is (n, S) int64
+    with ``parents[v] = u`` for some arc ``u -> v`` on a shortest path
+    (the smallest such ``u`` — deterministic), ``parents[source] =
+    source`` and ``-1`` for unreached vertices.  Host-side O(E·S): the
+    engine ships depths only, so parents are a front-end derivation, not
+    a device output.
+    """
+    depths = np.asarray(depths)
+    if depths.ndim == 1:
+        depths = depths[:, None]
+    n, s = depths.shape
+    parents = np.full((n, s), -1, dtype=np.int64)
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    for j in range(s):
+        d = depths[:, j]
+        on_path = (d[src] + 1 == d[dst]) & (d[src] < UNREACHED)
+        col = np.full(n, np.iinfo(np.int64).max, dtype=np.int64)
+        np.minimum.at(col, dst[on_path], src[on_path])
+        found = col != np.iinfo(np.int64).max
+        parents[found, j] = col[found]
+        parents[d == 0, j] = np.where(d == 0)[0]   # each source roots itself
+    return parents
+
+
+def encode_traverse_response(*, graph: str, sources, bucket: int,
+                             depths: np.ndarray,
+                             parents: Optional[np.ndarray],
+                             run_stats: dict, timing_ms: dict) -> bytes:
+    """Serialize one traversal result; ``depths`` is the engine's
+    padding-stripped ``dist_host`` (n_logical, len(sources))."""
+    depths = np.asarray(depths)
+    payload = {
+        "graph": graph,
+        "sources": [int(s) for s in sources],
+        "bucket": int(bucket),
+        "n": int(depths.shape[0]),
+        "unreached": UNREACHED,
+        # row per source (column-major transpose of dist_host): the
+        # natural client shape, and json encodes int32 exactly
+        "depths": depths.T.tolist(),
+        "stats": run_stats,
+        "timing_ms": {k: round(float(v), 3) for k, v in timing_ms.items()},
+    }
+    if parents is not None:
+        payload["parents"] = np.asarray(parents).T.tolist()
+    return json.dumps(payload).encode("utf-8")

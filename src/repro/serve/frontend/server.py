@@ -1,0 +1,445 @@
+"""The HTTP transport + dispatcher over ``BFSService``.
+
+Threading model: ``ThreadingHTTPServer`` handler threads do the cheap
+host-side work — parse/validate the JSON body, admit against the lane's
+gate, then block on the request's completion event and serialize the
+response.  A single *dispatcher* thread owns all device interaction: it
+round-robins the lanes, pops at most one admitted request per lane per
+round, dispatches every popped request through
+``BFSService.traverse_async`` (bucket routing happens there) *before*
+blocking on any result — the same cross-lane device/host overlap
+``BFSService.step`` pipelines — then completes the events.  One
+dispatcher means the service and engines are only ever driven from one
+thread, while N handler threads provide concurrent admission and
+serialization.
+
+Endpoints::
+
+    POST /v1/traverse    {"graph": name, "sources": [ids...],
+                          "include_parents": false}
+    GET  /v1/graphs      lanes, ladders, admission config, graph specs
+    GET  /healthz        liveness + draining flag
+    GET  /metrics        per-lane histograms/counters + engine-cache stats
+    POST /admin/shutdown graceful drain, then server stop
+
+Error mapping: schema violations and source validation -> 400 (413 for
+oversized bodies), unknown lane -> 404, admission bound -> 429 with a
+``Retry-After`` header, draining -> 503.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional
+
+from repro.serve.frontend import schema
+from repro.serve.frontend.admission import (AdmissionError, DrainingError,
+                                            LaneGate)
+from repro.serve.frontend.metrics import FrontendMetrics
+
+
+class _Pending:
+    """One admitted request riding the dispatcher: timestamps + result."""
+
+    __slots__ = ("graph", "sources", "include_parents", "cost_bytes",
+                 "event", "result", "bucket", "error",
+                 "t_admit", "t_dispatch", "t_done")
+
+    def __init__(self, graph: str, sources, include_parents: bool,
+                 cost_bytes: int):
+        self.graph = graph
+        self.sources = sources
+        self.include_parents = include_parents
+        self.cost_bytes = cost_bytes
+        self.event = threading.Event()
+        self.result = None           # BFSResult once served
+        self.bucket = None
+        self.error: Optional[Exception] = None
+        self.t_admit = time.monotonic()
+        self.t_dispatch = None
+        self.t_done = None
+
+
+class BFSFrontend:
+    """Admission + dispatch + metrics over a configured ``BFSService``.
+
+    Transport-agnostic: ``submit``/``wait`` drive it from the HTTP
+    handler, tests, and the in-process serving benchmark alike.  Lanes
+    must be registered on the service before construction (gates and
+    metrics are built per existing lane).
+    """
+
+    def __init__(self, service, *, max_queue_depth: int = 64,
+                 max_inflight_mb: float = 256.0,
+                 stats_interval_s: float = 0.0,
+                 graph_specs: Optional[dict] = None,
+                 start_dispatcher: bool = True,
+                 log=print):
+        self.service = service
+        self.graph_specs = dict(graph_specs or {})
+        self._log = log
+        names = service.graph_names()
+        if not names:
+            raise ValueError("service has no lanes; add_graph before "
+                             "building a frontend")
+        max_bytes = max(1, int(max_inflight_mb * 2**20))
+        self.gates: Dict[str, LaneGate] = {
+            name: LaneGate(max_queue_depth=max_queue_depth,
+                           max_inflight_bytes=max_bytes)
+            for name in names}
+        self.metrics = FrontendMetrics(names)
+        self._cv = threading.Condition()
+        self._running = True
+        self._draining = False
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="bfs-dispatch", daemon=True)
+        self._stats_interval_s = float(stats_interval_s)
+        self._stats_thread = None
+        if start_dispatcher:
+            self.start()
+
+    # -------------------------------------------------------------- control
+    def start(self) -> None:
+        if not self._dispatcher.is_alive():
+            self._dispatcher.start()
+            if self._stats_interval_s > 0:
+                self._stats_thread = threading.Thread(
+                    target=self._stats_loop, name="bfs-stats", daemon=True)
+                self._stats_thread.start()
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def drain(self, timeout_s: float = 60.0) -> bool:
+        """Stop admitting; wait for admitted work to finish.  Returns
+        True when every gate went idle within the timeout."""
+        self._draining = True
+        for gate in self.gates.values():
+            gate.close()
+        with self._cv:
+            self._cv.notify_all()
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            if all(g.idle() for g in self.gates.values()):
+                return True
+            time.sleep(0.01)
+        return all(g.idle() for g in self.gates.values())
+
+    def shutdown(self, timeout_s: float = 60.0) -> bool:
+        """Graceful drain, then stop the dispatcher."""
+        drained = self.drain(timeout_s)
+        self._running = False
+        with self._cv:
+            self._cv.notify_all()
+        if self._dispatcher.is_alive():
+            self._dispatcher.join(timeout=5.0)
+        return drained
+
+    # ------------------------------------------------------------ admission
+    def _resolve_lane(self, graph: Optional[str]):
+        if graph is None:
+            lane = self.service._sole_lane()   # raises ValueError if many
+            return lane.name, lane
+        return graph, self.service.lane(graph)  # raises KeyError if unknown
+
+    def submit(self, graph: Optional[str], sources,
+               include_parents: bool = False) -> _Pending:
+        """Validate + admit one request; returns its pending handle.
+
+        Raises ``KeyError`` (unknown lane), ``ValueError`` (bad
+        sources), ``AdmissionError`` (bounds) or ``DrainingError`` —
+        the transport maps each to its status code.
+        """
+        from repro.core.bfs import validate_sources
+
+        name, lane = self._resolve_lane(graph)
+        lane_metrics = self.metrics.lane(name)
+        try:
+            srcs = validate_sources(sources, lane.n_logical,
+                                    max_sources=lane.ladder[-1])
+        except ValueError:
+            lane_metrics.record_rejected(invalid=True)
+            raise
+        # admission cost ~= response payload: one int32 depth row per
+        # source (doubled when parents ride along), plus framing slack
+        cost = (1 + bool(include_parents)) * lane.n_logical * 4 * len(srcs)
+        cost += 1024
+        pending = _Pending(name, [int(s) for s in srcs], include_parents,
+                           cost)
+        try:
+            self.gates[name].try_admit(
+                pending, cost, retry_after_s=lane_metrics.ewma_e2e_s())
+        except AdmissionError:
+            lane_metrics.record_rejected()
+            raise
+        with self._cv:
+            self._cv.notify_all()
+        return pending
+
+    def wait(self, pending: _Pending,
+             timeout_s: Optional[float] = None) -> "object":
+        """Block until a pending request is served; returns its
+        ``BFSResult`` or re-raises the dispatch error."""
+        if not pending.event.wait(timeout_s):
+            raise TimeoutError(
+                f"request on lane {pending.graph!r} not served within "
+                f"{timeout_s}s (queue depth "
+                f"{self.gates[pending.graph].depth()})")
+        if pending.error is not None:
+            raise pending.error
+        return pending.result
+
+    def traverse(self, graph: Optional[str], sources, *,
+                 include_parents: bool = False,
+                 timeout_s: Optional[float] = 120.0) -> dict:
+        """Submit + wait + shape the response payload (the in-process
+        mirror of ``POST /v1/traverse``; benchmarks drive this)."""
+        pending = self.submit(graph, sources, include_parents)
+        result = self.wait(pending, timeout_s)
+        return self._payload(pending, result)
+
+    def _payload(self, pending: _Pending, result) -> dict:
+        depths = result.dist_host
+        parents = None
+        if pending.include_parents:
+            src, dst = self.service.lane(pending.graph).graph.edge_list()
+            parents = schema.derive_parents(src, dst, depths)
+        body = schema.encode_traverse_response(
+            graph=pending.graph, sources=pending.sources,
+            bucket=pending.bucket, depths=depths, parents=parents,
+            run_stats=result.run_stats.to_host(),
+            timing_ms={
+                "queue_wait": (pending.t_dispatch - pending.t_admit) * 1e3,
+                "device": (pending.t_done - pending.t_dispatch) * 1e3,
+                "total": (pending.t_done - pending.t_admit) * 1e3,
+            })
+        return json.loads(body)
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = []
+            for name in self.service.graph_names():
+                popped = self.gates[name].pop()
+                if popped is None:
+                    continue
+                pending, cost = popped
+                pending.t_dispatch = time.monotonic()
+                try:
+                    res, bucket = self.service.traverse_async(
+                        name, pending.sources)
+                    pending.bucket = bucket
+                    batch.append((name, pending, cost, res))
+                except Exception as exc:   # compile/device failure
+                    pending.error = exc
+                    pending.t_done = time.monotonic()
+                    self.metrics.lane(name).record_failed()
+                    self.gates[name].complete(cost)
+                    pending.event.set()
+            for name, pending, cost, res in batch:
+                try:
+                    res.block()
+                    pending.result = res
+                except Exception as exc:
+                    pending.error = exc
+                    self.metrics.lane(name).record_failed()
+                else:
+                    pending.t_done = time.monotonic()
+                    self.metrics.lane(name).record_completed(
+                        queue_wait_s=pending.t_dispatch - pending.t_admit,
+                        device_s=pending.t_done - pending.t_dispatch,
+                        e2e_s=pending.t_done - pending.t_admit,
+                        bucket=pending.bucket,
+                        n_sources=len(pending.sources))
+                if pending.t_done is None:
+                    pending.t_done = time.monotonic()
+                self.gates[name].complete(cost)
+                pending.event.set()
+            if batch:
+                continue          # keep draining queues while work exists
+            with self._cv:
+                if not self._running:
+                    return
+                if all(g.depth() == 0 for g in self.gates.values()):
+                    self._cv.wait(timeout=0.1)
+
+    def _stats_loop(self) -> None:
+        while self._running:
+            time.sleep(self._stats_interval_s)
+            if not self._running:
+                return
+            self._log(self.metrics.stats_line(
+                cache_stats=self.service.cache_stats()))
+
+    # -------------------------------------------------------------- queries
+    def graphs_payload(self) -> dict:
+        lanes = []
+        for name in self.service.graph_names():
+            lane = self.service.lane(name)
+            plan_ = lane.plan
+            info = {
+                "name": name,
+                "n": lane.n_logical,
+                "partition": plan_.partition,
+                "buckets": list(lane.ladder),
+                "slots": len(lane.pool),
+                "admission": self.gates[name].snapshot(),
+            }
+            if plan_.partition == "2d":
+                info["grid"] = list(plan_.describe()["grid"])
+            if name in self.graph_specs:
+                info["spec"] = self.graph_specs[name]
+            lanes.append(info)
+        return {"graphs": lanes}
+
+    def metrics_payload(self) -> dict:
+        return self.metrics.snapshot(
+            cache_stats=self.service.cache_stats(), gates=self.gates,
+            draining=self._draining)
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer
+# ---------------------------------------------------------------------------
+
+class _Handler(BaseHTTPRequestHandler):
+    # one response per connection keeps the stdlib server simple and
+    # avoids keep-alive bookkeeping in handler threads
+    protocol_version = "HTTP/1.0"
+    server_version = "repro-bfs-frontend/1"
+    quiet = True
+
+    @property
+    def frontend(self) -> BFSFrontend:
+        return self.server.frontend
+
+    def log_message(self, fmt, *args):   # noqa: N802 (stdlib name)
+        if not self.quiet:
+            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+    # ------------------------------------------------------------- plumbing
+    def _send_json(self, status: int, obj, extra_headers=()) -> None:
+        body = obj if isinstance(obj, bytes) else json.dumps(obj).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in extra_headers:
+            self.send_header(k, v)
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except (BrokenPipeError, ConnectionResetError):
+            pass                       # client gave up; nothing to unwind
+
+    def _send_error_json(self, status: int, message: str,
+                         extra_headers=(), **fields) -> None:
+        self._send_json(status, {"error": message, **fields}, extra_headers)
+
+    # ------------------------------------------------------------- routes
+    def do_GET(self) -> None:          # noqa: N802 (stdlib name)
+        fe = self.frontend
+        if self.path == "/healthz":
+            self._send_json(200, {"status": "draining" if fe.draining
+                                  else "ok", "lanes": len(fe.gates)})
+        elif self.path == "/v1/graphs":
+            self._send_json(200, fe.graphs_payload())
+        elif self.path == "/metrics":
+            self._send_json(200, fe.metrics_payload())
+        else:
+            self._send_error_json(404, f"no route for GET {self.path}")
+
+    def do_POST(self) -> None:         # noqa: N802 (stdlib name)
+        if self.path == "/v1/traverse":
+            self._traverse()
+        elif self.path == "/admin/shutdown":
+            self._shutdown()
+        else:
+            self._send_error_json(404, f"no route for POST {self.path}")
+
+    def _read_body(self) -> bytes:
+        length = int(self.headers.get("Content-Length") or 0)
+        if length > schema.MAX_BODY_BYTES:
+            raise schema.RequestError(
+                f"request body of {length} bytes exceeds the "
+                f"{schema.MAX_BODY_BYTES}-byte limit", status=413)
+        return self.rfile.read(length)
+
+    def _traverse(self) -> None:
+        fe = self.frontend
+        try:
+            req = schema.parse_traverse_request(self._read_body())
+            pending = fe.submit(req["graph"], req["sources"],
+                                req["include_parents"])
+        except schema.RequestError as exc:
+            self._send_error_json(exc.status, str(exc))
+            return
+        except KeyError as exc:
+            self._send_error_json(404, str(exc.args[0]) if exc.args
+                                  else "unknown graph")
+            return
+        except ValueError as exc:
+            self._send_error_json(400, str(exc))
+            return
+        except AdmissionError as exc:
+            retry = max(1, math.ceil(exc.retry_after_s))
+            self._send_error_json(
+                429, str(exc), extra_headers=(("Retry-After", str(retry)),),
+                retry_after_s=round(exc.retry_after_s, 3))
+            return
+        except DrainingError as exc:
+            self._send_error_json(
+                503, str(exc), extra_headers=(("Retry-After", "5"),))
+            return
+        try:
+            result = fe.wait(pending, timeout_s=300.0)
+        except TimeoutError as exc:
+            self._send_error_json(504, str(exc))
+            return
+        except Exception as exc:       # dispatch-side failure
+            self._send_error_json(500, f"{type(exc).__name__}: {exc}")
+            return
+        payload = fe._payload(pending, result)
+        self._send_json(200, json.dumps(payload).encode())
+
+    def _shutdown(self) -> None:
+        fe = self.frontend
+        self._send_json(200, {"status": "draining"})
+        # drain + stop from a side thread: shutdown() must not run on a
+        # handler thread the server is about to join
+        threading.Thread(target=self.server.drain_and_stop,
+                         daemon=True).start()
+
+
+class _FrontendHTTPServer(ThreadingHTTPServer):
+    daemon_threads = True
+    frontend: BFSFrontend = None
+
+    def drain_and_stop(self, timeout_s: float = 60.0) -> None:
+        self.frontend.shutdown(timeout_s)
+        self.shutdown()
+
+
+def serve_http(service, host: str = "127.0.0.1", port: int = 0, *,
+               max_queue_depth: int = 64, max_inflight_mb: float = 256.0,
+               stats_interval_s: float = 0.0, graph_specs=None,
+               start_dispatcher: bool = True, log=print):
+    """Bind the front-end: returns ``(httpd, frontend)``.
+
+    ``port=0`` binds an ephemeral port (``httpd.server_address[1]``
+    holds the real one).  The caller owns the accept loop — call
+    ``httpd.serve_forever()`` (blocking) or run it in a thread; stop
+    via ``httpd.drain_and_stop()`` or ``POST /admin/shutdown``.
+    """
+    frontend = BFSFrontend(
+        service, max_queue_depth=max_queue_depth,
+        max_inflight_mb=max_inflight_mb,
+        stats_interval_s=stats_interval_s, graph_specs=graph_specs,
+        start_dispatcher=start_dispatcher, log=log)
+    httpd = _FrontendHTTPServer((host, port), _Handler)
+    httpd.frontend = frontend
+    return httpd, frontend

@@ -227,6 +227,55 @@ def test_cache_get_or_compile_coalesces_across_threads():
     assert st["misses"] == 1 and st["hits"] == 5  # one compile paid
 
 
+def test_cache_counters_consistent_under_threaded_ladder_load():
+    """N threads hammering ``get_or_compile`` across a batch-size bucket
+    ladder: the hit/miss/compile-seconds counters must balance exactly —
+    misses == distinct rungs, hits + misses == total calls — i.e. no
+    lost updates under contention (the serving front-end reads these
+    counters live while handler threads admit)."""
+    from repro.core.engine import plan_ladder
+
+    _, _, g = _graph(n=140)
+    cache = EngineCache()
+    ladder = (1, 2, 4)
+    n_threads, per_thread = 8, 9
+    engines, errors = {s: [] for s in ladder}, []
+
+    def worker(tid):
+        try:
+            for k in range(per_thread):
+                # deterministic rung walk offset per thread: every rung
+                # sees first-touch races from several threads
+                s = ladder[(tid + k) % len(ladder)]
+                eng = cache.get_or_compile(
+                    plan(g, BFSOptions(mode="dense"), num_sources=s))
+                engines[s].append(eng)
+        except Exception as exc:  # pragma: no cover - surfaced by assert
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    st = cache.stats()
+    total = n_threads * per_thread
+    assert st["misses"] == len(ladder)            # one compile per rung
+    assert st["hits"] + st["misses"] == total     # nothing lost
+    assert st["hits"] == total - len(ladder)
+    assert st["entries"] == len(ladder)
+    assert st["compile_s_total"] > 0
+    assert st["hit_rate"] == pytest.approx(st["hits"] / total)
+    for s in ladder:                              # one object per rung
+        assert engines[s] and all(e is engines[s][0] for e in engines[s])
+    # the ladder helper keys identically to the per-rung plans above
+    for s, p in plan_ladder(g, BFSOptions(mode="dense"),
+                            ladder=ladder).items():
+        assert cache.get(p) is engines[s][0]
+
+
 def test_default_cache_env_and_swap():
     cache = EngineCache(max_entries=2)
     with use_default_cache(cache):

@@ -1,0 +1,523 @@
+"""Remote serving front-end: wire schema, batch-size bucket routing,
+admission control/backpressure, metrics, and the HTTP transport
+end-to-end — client traversals bitwise-equal to in-process
+``BFSEngine.run`` on 1-D and 2-D lanes, between-rung requests served by
+the next-larger bucket with padding stripped, bounded queues rejecting
+with 429 instead of hanging, and graceful drain-on-shutdown."""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import BFSOptions, plan
+from repro.core.engine import normalize_ladder, pick_bucket, plan_ladder
+from repro.core.ref import bfs_reference
+from repro.graphs import generate, shard_graph
+from repro.launch.bfs_client import BFSClient, HTTPStatusError
+from repro.serve.bfs_service import BFSService, TraversalRequest
+from repro.serve.engine_cache import EngineCache
+from repro.serve.frontend import (AdmissionError, BFSFrontend, DrainingError,
+                                  LaneGate, RequestError, derive_parents,
+                                  parse_traverse_request, serve_http)
+from repro.serve.frontend import schema
+from repro.serve.frontend.metrics import Histogram, LaneMetrics
+
+
+def _graph(kind="erdos_renyi", n=160, seed=3, p=1, **kw):
+    src, dst = generate(kind, n, seed=seed, **kw)
+    return src, dst, shard_graph(src, dst, n, p)
+
+
+def _service(graphs, ladder=(1, 4), **kw):
+    svc = BFSService(opts=BFSOptions(mode="dense"), batch_buckets=ladder,
+                     cache=EngineCache(), **kw)
+    for name, (g, part) in graphs.items():
+        svc.add_graph(name, g, partition=part, mesh=None)
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# S-ladder helpers (core/engine.py)
+# ---------------------------------------------------------------------------
+
+def test_normalize_ladder_sorts_dedupes_and_validates():
+    assert normalize_ladder((8, 1, 8, 64)) == (1, 8, 64)
+    assert normalize_ladder([4]) == (4,)
+    with pytest.raises(ValueError, match="at least one"):
+        normalize_ladder(())
+    with pytest.raises(ValueError, match=">= 1"):
+        normalize_ladder((1, 0))
+
+
+def test_pick_bucket_smallest_fitting_rung():
+    ladder = (1, 8, 64)
+    assert pick_bucket(1, ladder) == 1
+    assert pick_bucket(2, ladder) == 8      # between rungs -> next larger
+    assert pick_bucket(8, ladder) == 8
+    assert pick_bucket(9, ladder) == 64
+    with pytest.raises(ValueError, match="largest bucket"):
+        pick_bucket(65, ladder)
+    with pytest.raises(ValueError, match=">= 1"):
+        pick_bucket(0, ladder)
+
+
+def test_plan_ladder_one_plan_per_rung():
+    _, _, g = _graph(n=100)
+    plans = plan_ladder(g, BFSOptions(mode="dense"), ladder=(4, 1, 4))
+    assert sorted(plans) == [1, 4]
+    assert all(plans[s].num_sources == s for s in plans)
+    assert plans[1].plan_key() != plans[4].plan_key()
+    # rung plans hit the same cache entries as directly built plans
+    assert (plans[4].plan_key()
+            == plan(g, BFSOptions(mode="dense"), num_sources=4).plan_key())
+
+
+# ---------------------------------------------------------------------------
+# wire schema (frontend/schema.py)
+# ---------------------------------------------------------------------------
+
+def test_parse_traverse_request_accepts_minimal_and_full_bodies():
+    req = parse_traverse_request(b'{"sources": [3, 1]}')
+    assert req == {"graph": None, "sources": [3, 1],
+                   "include_parents": False}
+    req = parse_traverse_request(
+        b'{"graph": "er", "sources": [0], "include_parents": true}')
+    assert req["graph"] == "er" and req["include_parents"] is True
+
+
+@pytest.mark.parametrize("body,match", [
+    (b"not json", "not valid JSON"),
+    (b"[1, 2]", "JSON object"),
+    (b'{"sources": [1], "extra": 1}', "unknown request field"),
+    (b'{"graph": 7, "sources": [1]}', "'graph' must be a string"),
+    (b'{"sources": []}', "non-empty list"),
+    (b'{"sources": "0"}', "non-empty list"),
+    (b'{"sources": [true]}', "must be integers"),
+    (b'{"sources": [1.5]}', "must be integers"),
+    (b'{"sources": [1], "include_parents": 1}', "must be a boolean"),
+])
+def test_parse_traverse_request_rejects_with_400(body, match):
+    with pytest.raises(RequestError, match=match) as ei:
+        parse_traverse_request(body)
+    assert ei.value.status == 400
+
+
+def test_parse_traverse_request_oversized_maps_to_413():
+    huge = json.dumps({"sources": list(range(200_000))}).encode()
+    assert len(huge) > schema.MAX_BODY_BYTES
+    with pytest.raises(RequestError) as ei:
+        parse_traverse_request(huge)
+    assert ei.value.status == 413
+    too_many = json.dumps(
+        {"sources": list(range(schema.MAX_SOURCES_PER_REQUEST + 1))}).encode()
+    with pytest.raises(RequestError, match="per-request"):
+        parse_traverse_request(too_many)
+
+
+def test_derive_parents_on_known_chain():
+    # 0 -> 1 -> 2 (undirected), vertex 3 isolated
+    src = np.array([0, 1, 1, 2])
+    dst = np.array([1, 0, 2, 1])
+    depths = bfs_reference(src, dst, 4, [0])           # (4, 1)
+    parents = derive_parents(src, dst, depths)
+    np.testing.assert_array_equal(parents[:, 0], [0, 0, 1, -1])
+    # multi-source column independence + smallest-parent determinism
+    depths2 = bfs_reference(src, dst, 4, [0, 2])
+    parents2 = derive_parents(src, dst, depths2)
+    np.testing.assert_array_equal(parents2[:, 0], [0, 0, 1, -1])
+    np.testing.assert_array_equal(parents2[:, 1], [1, 2, 2, -1])
+
+
+# ---------------------------------------------------------------------------
+# admission control (frontend/admission.py)
+# ---------------------------------------------------------------------------
+
+def test_lane_gate_queue_depth_bound_and_recovery():
+    gate = LaneGate(max_queue_depth=2, max_inflight_bytes=1 << 20)
+    gate.try_admit("a", 10)
+    gate.try_admit("b", 10)
+    with pytest.raises(AdmissionError) as ei:
+        gate.try_admit("c", 10, retry_after_s=0.5)
+    assert ei.value.retry_after_s == pytest.approx(1.5)  # scaled by depth
+    assert (gate.admitted, gate.rejected) == (2, 1)
+    item, cost = gate.pop()
+    assert item == "a" and cost == 10                   # FIFO
+    # popped-but-unfinished work still counts against the byte budget
+    assert gate.inflight() == 2 and gate.depth() == 1
+    gate.try_admit("c", 10)                             # queue has room again
+    gate.complete(10)
+    assert gate.snapshot()["inflight_bytes"] == 20
+
+
+def test_lane_gate_byte_bound_with_oversized_exception():
+    gate = LaneGate(max_queue_depth=8, max_inflight_bytes=100)
+    gate.try_admit("big", 90)
+    with pytest.raises(AdmissionError, match="in-flight budget"):
+        gate.try_admit("more", 20)
+    gate.pop()
+    gate.complete(90)
+    # a single request over the whole budget is admitted when the lane
+    # is idle (otherwise it would be permanently unservable)
+    gate.try_admit("huge", 500)
+    with pytest.raises(AdmissionError):
+        gate.try_admit("next", 1)
+    gate.pop()
+    gate.complete(500)
+    assert gate.idle()
+
+
+def test_lane_gate_close_drains_and_reopens():
+    gate = LaneGate(max_queue_depth=2)
+    gate.try_admit("a", 1)
+    gate.close()
+    with pytest.raises(DrainingError):
+        gate.try_admit("b", 1)
+    assert gate.pop()[0] == "a"          # admitted work still proceeds
+    gate.complete(1)
+    gate.reopen()
+    gate.try_admit("b", 1)
+    assert gate.snapshot()["draining"] is False
+
+
+def test_lane_gate_rejects_bad_bounds():
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        LaneGate(max_queue_depth=0)
+    with pytest.raises(ValueError, match="max_inflight_bytes"):
+        LaneGate(max_inflight_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# metrics (frontend/metrics.py)
+# ---------------------------------------------------------------------------
+
+def test_histogram_buckets_quantiles_and_snapshot():
+    h = Histogram(bounds=(0.01, 0.1, 1.0))
+    for s in (0.005, 0.005, 0.05, 0.5, 5.0):
+        h.observe(s)
+    assert h.count == 5 and h.counts == [2, 1, 1, 1]
+    assert h.quantile(0.4) == 0.01       # upper-bound estimate
+    assert h.quantile(0.5) == 0.1        # median (3rd of 5) in bucket 2
+    assert h.quantile(0.99) == 1.0       # overflow collapses to last bound
+    snap = h.snapshot()
+    assert snap["buckets"] == {"le_10ms": 2, "le_100ms": 3,
+                               "le_1000ms": 4, "le_inf": 5}
+    assert snap["p50_ms"] == 100.0 and snap["count"] == 5
+    assert Histogram().quantile(0.5) is None
+    with pytest.raises(ValueError, match="increasing"):
+        Histogram(bounds=(1.0, 0.5))
+
+
+def test_lane_metrics_counters_and_ewma():
+    m = LaneMetrics()
+    assert m.ewma_e2e_s(default=0.25) == 0.25
+    m.record_completed(queue_wait_s=0.001, device_s=0.01, e2e_s=0.011,
+                       bucket=4, n_sources=3)
+    m.record_completed(queue_wait_s=0.002, device_s=0.02, e2e_s=0.022,
+                       bucket=4, n_sources=4)
+    m.record_rejected()
+    m.record_rejected(invalid=True)
+    m.record_failed()
+    snap = m.snapshot()
+    assert snap["completed"] == 2 and snap["sources_served"] == 7
+    assert snap["rejected"] == 1 and snap["rejected_invalid"] == 1
+    assert snap["failed"] == 1 and snap["buckets"] == {"4": 2}
+    assert snap["e2e"]["count"] == 2
+    assert m.ewma_e2e_s() == pytest.approx(0.3 * 0.022 + 0.7 * 0.011)
+
+
+# ---------------------------------------------------------------------------
+# BFSService: bucket routing + drain satellites
+# ---------------------------------------------------------------------------
+
+def test_service_routes_to_smallest_fitting_bucket():
+    src, dst, g = _graph(n=150)
+    svc = _service({"er": (g, "1d")}, ladder=(1, 4))
+    res, bucket = svc.traverse("er", [5])
+    assert bucket == 1
+    np.testing.assert_array_equal(res.dist_host,
+                                  bfs_reference(src, dst, 150, [5]))
+    # between rungs: padded up to bucket 4, response stripped to 3 columns
+    res, bucket = svc.traverse("er", [0, 7, 33])
+    assert bucket == 4 and res.dist_host.shape == (150, 3)
+    np.testing.assert_array_equal(res.dist_host,
+                                  bfs_reference(src, dst, 150, [0, 7, 33]))
+    # one engine per *used* rung through the shared cache
+    assert svc.cache_stats()["misses"] == 2
+    # submit-time validation: the 400 family, not device-side errors
+    with pytest.raises(ValueError, match="capacity"):
+        svc.traverse("er", [0, 1, 2, 3, 4])
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.traverse("er", [3, 3])
+    with pytest.raises(ValueError, match="outside"):
+        svc.traverse("er", [150])
+
+
+def test_service_slot_path_uses_bucket_for_partial_batches():
+    """The queued single-source path routes a half-full slot pool to a
+    small rung instead of always paying the largest bucket."""
+    src, dst, g = _graph(n=120)
+    svc = _service({"er": (g, "1d")}, ladder=(1, 4))
+    svc.submit(TraversalRequest(rid=0, source=9, graph="er"))
+    done = svc.run_until_drained()
+    assert len(done) == 1
+    np.testing.assert_array_equal(
+        done[0].dist, bfs_reference(src, dst, 120, [9])[:, 0])
+    st = svc.cache_stats()
+    assert st["misses"] == 1             # compiled S=1, not S=4
+
+
+def test_run_until_drained_timeout_names_pending_lanes():
+    _, _, g = _graph(n=100)
+    svc = _service({"er": (g, "1d")}, ladder=(1,))
+    svc.submit(TraversalRequest(rid=0, source=0, graph="er"))
+    svc.submit(TraversalRequest(rid=1, source=1, graph="er"))
+    assert svc.pending_by_lane() == {"er": 2}
+    with pytest.raises(RuntimeError, match=r"timeout_s=0.*er: 2") as ei:
+        svc.run_until_drained(timeout_s=0)
+    assert "still pending" in str(ei.value)
+    done = svc.run_until_drained()       # the work itself is still fine
+    assert len(done) == 2 and not svc.pending_by_lane()
+
+
+# ---------------------------------------------------------------------------
+# BFSFrontend: in-process dispatch, 429s, drain
+# ---------------------------------------------------------------------------
+
+def test_frontend_traverse_parity_and_metrics():
+    src, dst, g = _graph(n=140)
+    svc = _service({"er": (g, "1d")}, ladder=(1, 4))
+    fe = BFSFrontend(svc, max_queue_depth=4)
+    try:
+        out = fe.traverse("er", [2, 77, 5], include_parents=True)
+        assert out["bucket"] == 4 and out["n"] == 140
+        want = bfs_reference(src, dst, 140, [2, 77, 5])
+        got = np.asarray(out["depths"], dtype=np.int64).T
+        np.testing.assert_array_equal(got, want)
+        parents = np.asarray(out["parents"], dtype=np.int64).T
+        np.testing.assert_array_equal(
+            parents, derive_parents(src, dst, want))
+        assert set(out["timing_ms"]) == {"queue_wait", "device", "total"}
+        # invalid sources reject at submit and land in the 400 counter
+        with pytest.raises(ValueError, match="duplicate"):
+            fe.submit("er", [1, 1])
+        with pytest.raises(KeyError, match="no serving lane"):
+            fe.submit("nope", [0])
+        snap = fe.metrics_payload()
+        lane = snap["lanes"]["er"]
+        assert lane["completed"] == 1 and lane["rejected_invalid"] == 1
+        assert lane["e2e"]["count"] == 1 and lane["e2e"]["p50_ms"] > 0
+        assert lane["admission"]["admitted"] == 1
+        assert snap["engine_cache"]["misses"] == 1
+    finally:
+        assert fe.shutdown()
+
+
+def test_frontend_bounded_queue_rejects_with_429():
+    """queue bound 1 + parked dispatcher: the second submit must fail
+    fast with a retry-after hint, deterministically."""
+    _, _, g = _graph(n=100)
+    svc = _service({"er": (g, "1d")}, ladder=(1,))
+    fe = BFSFrontend(svc, max_queue_depth=1, start_dispatcher=False)
+    first = fe.submit("er", [0])
+    with pytest.raises(AdmissionError) as ei:
+        fe.submit("er", [1])
+    assert ei.value.retry_after_s > 0
+    assert fe.metrics.lane("er").snapshot()["rejected"] == 1
+    fe.start()                           # un-park: the survivor completes
+    res = fe.wait(first, timeout_s=60.0)
+    np.testing.assert_array_equal(
+        res.dist_host[:, 0], bfs_reference(*(_graph(n=100)[:2]), 100,
+                                           [0])[:, 0])
+    assert fe.shutdown()
+
+
+def test_frontend_inflight_byte_bound_rejects():
+    _, _, g = _graph(n=100)
+    svc = _service({"er": (g, "1d")}, ladder=(1,))
+    # budget below one response: first request rides the oversized-keep
+    # exception, the second rejects on bytes (queue has room for 8)
+    fe = BFSFrontend(svc, max_queue_depth=8, max_inflight_mb=1e-6,
+                     start_dispatcher=False)
+    first = fe.submit("er", [0])
+    with pytest.raises(AdmissionError, match="in-flight budget"):
+        fe.submit("er", [1])
+    fe.start()
+    fe.wait(first, timeout_s=60.0)
+    assert fe.shutdown()
+
+
+def test_frontend_drain_rejects_new_work_and_finishes_admitted():
+    _, _, g = _graph(n=100)
+    svc = _service({"er": (g, "1d")}, ladder=(1,))
+    fe = BFSFrontend(svc, max_queue_depth=4, start_dispatcher=False)
+    admitted = fe.submit("er", [3])
+    fe.start()
+    assert fe.shutdown(timeout_s=60.0)   # drains the admitted request
+    assert admitted.event.is_set() and admitted.error is None
+    with pytest.raises(DrainingError):
+        fe.submit("er", [4])
+    assert fe.metrics_payload()["draining"] is True
+
+
+def test_frontend_requires_registered_lanes():
+    svc = BFSService(opts=BFSOptions(mode="dense"), cache=EngineCache())
+    with pytest.raises(ValueError, match="no lanes"):
+        BFSFrontend(svc)
+
+
+# ---------------------------------------------------------------------------
+# HTTP transport end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def http_stack():
+    """Two-lane (1-D + 2-D) service behind a live ephemeral-port server."""
+    src, dst, g = _graph(n=140, seed=5)
+    src2, dst2, g2 = _graph("chain", n=60, seed=0)
+    svc = _service({"er": (g, "1d"), "ring": (g2, "2d")}, ladder=(1, 4))
+    httpd, fe = serve_http(
+        svc, "127.0.0.1", 0,
+        graph_specs={"er": {"kind": "erdos_renyi", "n": 140, "seed": 5,
+                            "gen_kwargs": {"avg_degree": 6}}})
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    client = BFSClient(f"http://127.0.0.1:{httpd.server_address[1]}",
+                       timeout_s=120.0)
+    try:
+        yield {"client": client, "svc": svc, "fe": fe, "httpd": httpd,
+               "er": (src, dst, g), "ring": (src2, dst2, g2),
+               "thread": thread}
+    finally:
+        fe.shutdown(timeout_s=10.0)
+        httpd.shutdown()
+        httpd.server_close()
+        thread.join(timeout=10.0)
+
+
+def test_http_traverse_bitwise_parity_on_both_partitions(http_stack):
+    client = http_stack["client"]
+    for name, sources in (("er", [0, 9, 77]), ("ring", [0, 30])):
+        src, dst, g = http_stack[name]
+        n = http_stack["svc"].lane(name).n_logical
+        out = client.traverse(name, sources)
+        assert out["bucket"] == 4        # between rungs -> next larger
+        assert out["unreached"] == schema.UNREACHED
+        got = np.asarray(out["depths"], dtype=np.int64).T
+        assert got.shape == (n, len(sources))   # padding stripped
+        # bitwise against the in-process engine (the acceptance clause)
+        # and the numpy reference
+        part = http_stack["svc"].lane(name).plan.partition
+        eng = plan(g, BFSOptions(mode="dense"), num_sources=len(sources),
+                   partition=part).compile()
+        np.testing.assert_array_equal(got, eng.run(sources).dist_host)
+        np.testing.assert_array_equal(got, bfs_reference(src, dst, n,
+                                                         sources))
+    # single-source request rides the S=1 rung
+    assert client.traverse("er", [3])["bucket"] == 1
+
+
+def test_http_parents_ride_along_when_requested(http_stack):
+    client = http_stack["client"]
+    src, dst, g = http_stack["er"]
+    out = client.traverse("er", [4], include_parents=True)
+    depths = bfs_reference(src, dst, 140, [4])
+    np.testing.assert_array_equal(
+        np.asarray(out["parents"], dtype=np.int64).T,
+        derive_parents(src, dst, depths))
+    assert "parents" not in client.traverse("er", [4])
+
+
+def test_http_error_mapping(http_stack):
+    client = http_stack["client"]
+    for sources, status, match in (
+            ([1, 1], 400, "duplicate"),         # semantic: submit-time
+            ([10**6], 400, "outside"),
+            ([], 400, "non-empty"),             # structural: schema
+            ([0] * 5000, 400, "per-request")):
+        with pytest.raises(HTTPStatusError) as ei:
+            client.traverse("er", sources)
+        assert ei.value.status == status and match in str(ei.value)
+    with pytest.raises(HTTPStatusError) as ei:
+        client.traverse("nope", [0])
+    assert ei.value.status == 404
+    # no graph name on a multi-lane server is ambiguous
+    with pytest.raises(HTTPStatusError) as ei:
+        client.traverse(None, [0])
+    assert ei.value.status == 400
+    with pytest.raises(HTTPStatusError) as ei:
+        client._request("/v1/missing")
+    assert ei.value.status == 404
+
+
+def test_http_graphs_metrics_and_health(http_stack):
+    client = http_stack["client"]
+    client.traverse("er", [0, 1])        # populate the histograms
+    lanes = {g["name"]: g for g in client.graphs()["graphs"]}
+    assert lanes["er"]["buckets"] == [1, 4]
+    assert lanes["er"]["spec"]["kind"] == "erdos_renyi"
+    assert lanes["ring"]["partition"] == "2d" and "grid" in lanes["ring"]
+    m = client.metrics()
+    assert m["lanes"]["er"]["e2e"]["count"] >= 1
+    assert m["lanes"]["er"]["e2e"]["p50_ms"] > 0
+    assert m["lanes"]["er"]["queue_wait"]["count"] >= 1
+    assert m["engine_cache"]["hit_rate"] >= 0
+    assert client.health()["status"] == "ok"
+
+
+def test_http_overload_returns_429_with_retry_after():
+    """Bounded queue + parked dispatcher over HTTP: the overflow request
+    gets a 429 + Retry-After instead of hanging or crashing."""
+    _, _, g = _graph(n=100)
+    svc = _service({"er": (g, "1d")}, ladder=(1,))
+    httpd, fe = serve_http(svc, "127.0.0.1", 0, max_queue_depth=1,
+                           start_dispatcher=False)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    client = BFSClient(f"http://127.0.0.1:{httpd.server_address[1]}")
+    first_out, first_err = [], []
+
+    def first():
+        try:
+            first_out.append(client.traverse("er", [0]))
+        except Exception as exc:         # pragma: no cover - assert below
+            first_err.append(exc)
+
+    t = threading.Thread(target=first)
+    t.start()
+    deadline = time.monotonic() + 30
+    while fe.gates["er"].depth() == 0:   # wait for the admit, not a sleep
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    with pytest.raises(HTTPStatusError) as ei:
+        client.traverse("er", [1])
+    assert ei.value.status == 429
+    assert ei.value.payload["retry_after_s"] > 0
+    fe.start()                           # serve the queued survivor
+    t.join(timeout=60.0)
+    assert not first_err and first_out[0]["bucket"] == 1
+    assert client.metrics()["lanes"]["er"]["rejected"] == 1
+    httpd.drain_and_stop(timeout_s=10.0)
+    thread.join(timeout=10.0)
+    assert not thread.is_alive()
+    httpd.server_close()
+
+
+def test_http_shutdown_endpoint_drains_and_stops():
+    _, _, g = _graph(n=100)
+    svc = _service({"er": (g, "1d")}, ladder=(1,))
+    httpd, fe = serve_http(svc, "127.0.0.1", 0)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    client = BFSClient(f"http://127.0.0.1:{httpd.server_address[1]}")
+    client.traverse("er", [0])
+    assert client.shutdown() == {"status": "draining"}
+    thread.join(timeout=30.0)
+    assert not thread.is_alive() and fe.draining
+    httpd.server_close()
+    with pytest.raises((HTTPStatusError, urllib.error.URLError, OSError)):
+        client.traverse("er", [1])
