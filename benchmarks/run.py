@@ -47,6 +47,8 @@ _WIRE_FORMAT = []      # packed vs bytes wire rows (own BENCH_wire_format
 _SERVING_LATENCY = {}  # remote front-end ledger: bucket ladder latencies +
                        # overload 429s (own BENCH_serving_latency ledger;
                        # see --serving-out)
+_SPARSE_WIRE = []      # compressed sparse-id wire + sieve rows (own
+                       # BENCH_sparse_wire ledger; see --sparse-wire-out)
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -454,6 +456,185 @@ def bench_wire_format_sweep():
                 f"resolved={auto_meta['wire_formats']}")
 
 
+def bench_sparse_wire_sweep():
+    """Compressed sparse-id wire + visited sieve ("Compression and
+    Sieve", the sparse-phase half of the adaptive wire stack).
+
+    Modeled rows price the per-level sparse exchanges — 1-D queue and
+    2-D expand/fold id buffers — raw int32 ids vs the delta+varint
+    compressed payload at paper-like frontier densities (the codec's
+    bitmap-adaptive branch shows up as the capacity clamp at high
+    density).  Measured rows compile each sparse exchange *standalone*
+    under shard_map on the local device set and parse the collective
+    bytes XLA emitted (the engine loop's HLO carries identical
+    dense-escalation-branch collectives under both wires, so the sparse
+    phase must be isolated — the same compile_and_parse pattern as
+    tests/helpers/exchange_bytes.py), asserting the >= 2x on-wire cut
+    at p = 4.  Engine rows run queue-mode traversals raw vs compressed
+    with the sieve on/off (bitwise-identical distances required) and a
+    final row per topology records what ``wire_format="auto"`` /
+    ``sieve="auto"`` resolved.  Everything lands in the
+    ``BENCH_sparse_wire.json`` ledger (``--sparse-wire-out``).
+    """
+    import functools
+    import numpy as _np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import frontier as frmod
+    from repro.core.compat import shard_map
+    from repro.launch.hlo_stats import collective_bytes
+    from repro.launch.mesh import make_grid_mesh
+
+    cap = 256
+
+    # --- modeled: raw vs compressed sparse-level bytes across densities
+    for p in (4, 16, 64):
+        r, c = default_grid(p)
+        for density in (0.03125, 0.5):
+            q_raw = ex.queue_level_bytes("alltoall_direct", p, cap, 4,
+                                         density=density)
+            q_comp = ex.queue_level_bytes("alltoall_direct_compressed", p,
+                                          cap, 4, density=density)
+            g_raw = ex.grid_sparse_level_bytes(
+                "allgather", "alltoall_direct", r, c, cap, 4,
+                density=density)
+            g_comp = ex.grid_sparse_level_bytes(
+                "allgather_compressed", "alltoall_direct_compressed",
+                r, c, cap, 4, density=density)
+            _SPARSE_WIRE.append({
+                "kind": "modeled", "p": p, "r": r, "c": c, "cap": cap,
+                "density": density,
+                "queue_raw_bytes": q_raw, "queue_compressed_bytes": q_comp,
+                "grid_sparse_raw_bytes": g_raw,
+                "grid_sparse_compressed_bytes": g_comp,
+            })
+            row(f"sparse_wire_modeled/p={p}/density={density}", 0.0,
+                f"queue_raw={q_raw:.0f};queue_comp={q_comp:.0f};"
+                f"ratio_q={q_raw / q_comp:.1f};grid_raw={g_raw:.0f};"
+                f"grid_comp={g_comp:.0f};ratio_g={g_raw / g_comp:.1f}")
+
+    # --- measured: standalone sparse exchanges vs compiled-HLO bytes
+    def hlo_total(fn, in_specs, out_specs, shapes, mesh):
+        mapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        lowered = jax.jit(mapped).lower(*shapes)
+        return collective_bytes(lowered.compile().as_text())["total"]
+
+    import jax.numpy as jnp
+    if jax.device_count() >= 4:
+        p, density = 4, 0.5
+        bc = frmod.compressed_capacity(cap, int(cap / density))
+        mesh1 = Mesh(_np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+        q_raw_hlo = hlo_total(
+            functools.partial(ex.exchange_queue, axis="p",
+                              strategy="alltoall_direct"),
+            P(None, None), P(None, None),
+            (jax.ShapeDtypeStruct((p, cap), jnp.int32),), mesh1)
+        q_comp_hlo = hlo_total(
+            functools.partial(ex.exchange_queue, axis="p",
+                              strategy="alltoall_direct_compressed"),
+            P(None, None), P(None, None),
+            (jax.ShapeDtypeStruct((p, bc), jnp.uint8),), mesh1)
+
+        r, c = 2, 2
+        mesh2 = make_grid_mesh(r, c)
+        exp_raw = ex.get_exchange("expand_row_sparse", "allgather")
+        exp_comp = ex.get_exchange("expand_row_sparse",
+                                   "allgather_compressed")
+        fold_raw = ex.get_exchange("fold_col_sparse", "alltoall_direct")
+        fold_comp = ex.get_exchange("fold_col_sparse",
+                                    "alltoall_direct_compressed")
+        g_raw_hlo = hlo_total(
+            lambda x: exp_raw.impl(x, "cols"), P(None), P(None),
+            (jax.ShapeDtypeStruct((cap,), jnp.int32),), mesh2
+        ) + hlo_total(
+            lambda x: fold_raw.impl(x, "rows"), P(None, None), P(None, None),
+            (jax.ShapeDtypeStruct((r, cap), jnp.int32),), mesh2)
+        g_comp_hlo = hlo_total(
+            lambda x: exp_comp.impl(x, "cols"), P(None), P(None),
+            (jax.ShapeDtypeStruct((bc,), jnp.uint8),), mesh2
+        ) + hlo_total(
+            lambda x: fold_comp.impl(x, "rows"), P(None, None),
+            P(None, None),
+            (jax.ShapeDtypeStruct((r, bc), jnp.uint8),), mesh2)
+
+        # the tentpole claim on compiler ground truth: >= 2x fewer
+        # sparse-phase collective bytes at p = 4 under the compressed wire
+        assert q_raw_hlo / max(q_comp_hlo, 1) >= 2.0, (q_raw_hlo,
+                                                       q_comp_hlo)
+        assert g_raw_hlo / max(g_comp_hlo, 1) >= 2.0, (g_raw_hlo,
+                                                       g_comp_hlo)
+        _SPARSE_WIRE.append({
+            "kind": "measured_hlo", "p": p, "r": r, "c": c, "cap": cap,
+            "density": density, "payload_bytes": bc,
+            "queue_raw_hlo_bytes": q_raw_hlo,
+            "queue_compressed_hlo_bytes": q_comp_hlo,
+            "grid_sparse_raw_hlo_bytes": g_raw_hlo,
+            "grid_sparse_compressed_hlo_bytes": g_comp_hlo,
+        })
+        row(f"sparse_wire_hlo/p={p}", 0.0,
+            f"queue_raw={q_raw_hlo:.0f};queue_comp={q_comp_hlo:.0f};"
+            f"ratio_q={q_raw_hlo / max(q_comp_hlo, 1):.1f};"
+            f"grid_raw={g_raw_hlo:.0f};grid_comp={g_comp_hlo:.0f};"
+            f"ratio_g={g_raw_hlo / max(g_comp_hlo, 1):.1f}")
+    else:
+        row("sparse_wire_hlo/skipped", 0.0,
+            f"device_count={jax.device_count()}<4 (the 4-device CI job "
+            "measures the real collectives)")
+
+    # --- engine rows: queue-mode traversals, raw vs compressed + sieve
+    n_meas = 20_000
+    src, dst = generate("erdos_renyi", n_meas, seed=0, avg_degree=8.0)
+    p_avail = jax.device_count()
+    for p in sorted({1, 4} & set(range(1, p_avail + 1))):
+        g = shard_graph(src, dst, n_meas, p)
+        mesh = Mesh(_np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+        dists = {}
+        for fmt in ("bytes", "compressed"):
+            for sieve in (False, True):
+                pl = plan(g, BFSOptions(mode="queue", wire_format=fmt,
+                                        sieve=sieve, queue_cap=1 << 14),
+                          mesh=mesh, axis="p", num_sources=1)
+                t0 = time.time()
+                eng = pl.compile()
+                compile_s = time.time() - t0
+                res = eng.run([0])
+                h = res.run_stats.to_host()
+                dists[(fmt, sieve)] = res.dist_host
+                meta = pl.describe()
+                _SPARSE_WIRE.append({
+                    "kind": "engine", "p": p, "wire_format": fmt,
+                    "sieve": sieve, "queue_cap": 1 << 14,
+                    "graph": f"erdos_renyi_{n_meas // 1000}k",
+                    "compile_s": compile_s, "levels": h["levels"],
+                    "run_comm_bytes": h["comm_bytes"],
+                    "sieve_hits": h["sieve_hits"],
+                    "queue_level_bytes": meta["queue_level_bytes"],
+                    "resolved_queue": meta["queue_exchange"],
+                })
+                row(f"sparse_wire_engine/p={p}/{fmt}/sieve={int(sieve)}",
+                    0.0, f"levels={h['levels']};"
+                    f"comm_bytes={h['comm_bytes']:.0f};"
+                    f"sieve_hits={h['sieve_hits']}")
+        # every wire x sieve combination must land bitwise-identical
+        base = dists["bytes", False]
+        assert all(_np.array_equal(d, base) for d in dists.values())
+
+        # what auto resolves at this topology (records the adaptive stack)
+        for part_kind in ("1d",) if p == 1 else ("1d", "2d"):
+            r, c = default_grid(p) if part_kind == "2d" else (1, p)
+            kmesh = make_grid_mesh(r, c) if part_kind == "2d" else mesh
+            meta = plan(g, BFSOptions(mode="auto", wire_format="auto",
+                                      sieve="auto", queue_cap=1024),
+                        mesh=kmesh, axis="p" if part_kind == "1d" else None,
+                        num_sources=1, partition=part_kind).describe()
+            _SPARSE_WIRE.append({
+                "kind": "auto_resolution", "p": p, "partition": part_kind,
+                "resolved": meta["wire_formats"], "sieve": meta["sieve"],
+            })
+            row(f"sparse_wire_auto/{part_kind}/p={p}", 0.0,
+                f"resolved={meta['wire_formats']};sieve={meta['sieve']}")
+
+
 def bench_multi_graph_serving():
     """Multi-tenant serving: cross-graph compile amortization.
 
@@ -718,6 +899,7 @@ BENCHES = [
     bench_engine_amortization,
     bench_partition_1d_vs_2d,
     bench_wire_format_sweep,
+    bench_sparse_wire_sweep,
     bench_multi_graph_serving,
     bench_serving_latency,
     bench_multi_source_throughput,
@@ -736,6 +918,9 @@ def main(argv=None) -> None:
     ap.add_argument("--serving-out", default="BENCH_serving_latency.json",
                     help="serving front-end ledger path (written when the "
                          "serving_latency bench runs)")
+    ap.add_argument("--sparse-wire-out", default="BENCH_sparse_wire.json",
+                    help="compressed sparse-wire + sieve ledger path "
+                         "(written when the sparse_wire bench runs)")
     ap.add_argument("--only", default=None,
                     help="substring filter on bench function names")
     args = ap.parse_args(argv)
@@ -777,6 +962,19 @@ def main(argv=None) -> None:
             json.dump(wire_ledger, f, indent=2, sort_keys=True)
         print(f"# wrote {args.wire_out} ({len(_WIRE_FORMAT)} wire rows)",
               flush=True)
+
+    if _SPARSE_WIRE:
+        sparse_ledger = {
+            "sparse_wire": _SPARSE_WIRE,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "device_count": jax.device_count(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with open(args.sparse_wire_out, "w") as f:
+            json.dump(sparse_ledger, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.sparse_wire_out} "
+              f"({len(_SPARSE_WIRE)} sparse-wire rows)", flush=True)
 
     if _SERVING_LATENCY:
         serving_ledger = {

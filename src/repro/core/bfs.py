@@ -45,6 +45,7 @@ import dataclasses
 import warnings
 from typing import TYPE_CHECKING, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -83,20 +84,34 @@ class BFSOptions:
                                               # (dense mode, 1-D partition;
                                               # runs per shard under the
                                               # multi-device loop)
-    # Dense-phase wire layout: "packed" ships uint32 bitset words (8x
-    # smaller, OR merges), "bytes" the uint8 mask, "auto" prices both per
-    # phase at plan time (exchange.select_exchange / the _packed strategy
-    # twins) and picks the cheaper — packed on real meshes, bytes on a
-    # single device where nothing crosses the wire.
-    wire_format: str = "auto"                 # packed | bytes | auto
+    # Wire layout of the exchanges.  Dense phases: "packed" ships uint32
+    # bitset words (8x smaller, OR merges), "bytes" the uint8 mask.
+    # Sparse phases (queue / expand_row_sparse / fold_col_sparse):
+    # "compressed" ships delta+varint id streams (frontier.encode_delta_
+    # varint, ~1 byte per id, bitmap-capped) instead of raw int32 ids.
+    # "auto" prices every layout per phase at plan time
+    # (exchange.select_exchange / the _packed and _compressed strategy
+    # twins) and picks the cheapest; "packed"/"compressed" pin the dense/
+    # sparse tier each names and leave the other tier at its default.
+    wire_format: str = "auto"       # packed | bytes | compressed | auto
+    # Visited sieve ("Compression and Sieve"): filter candidate ids
+    # against a replicated coarse visited summary *before* the sparse
+    # exchange, so already-discovered vertices never occupy bucket slots
+    # (fewer dense escalations as the traversal converges).  "auto"
+    # enables it where the sparse paths exist: non-dense single-source
+    # plans on a real mesh.
+    sieve: object = "auto"          # True | False | "auto"
 
     def validate(self):
         if self.mode not in ("dense", "queue", "auto"):
             raise ValueError(f"unknown BFS mode {self.mode!r}; "
                              "expected dense | queue | auto")
-        if self.wire_format not in ("packed", "bytes", "auto"):
+        if self.wire_format not in ("packed", "bytes", "compressed", "auto"):
             raise ValueError(f"unknown wire_format {self.wire_format!r}; "
-                             "expected packed | bytes | auto")
+                             "expected packed | bytes | compressed | auto")
+        if self.sieve not in (True, False, "auto"):
+            raise ValueError(f"unknown sieve setting {self.sieve!r}; "
+                             "expected True | False | 'auto'")
         # get_exchange raises a ValueError naming the registered strategies;
         # "auto" defers to the byte-model selection at plan time.
         for kind, name in (("dense", self.dense_exchange),
@@ -129,6 +144,8 @@ class BFSStats:
     overflowed: bool           # a queue level overflowed (result still exact:
                                # engine falls back to dense for that level)
     mode_counts: dict
+    sieve_hits: int = 0        # candidates the visited-sieve dropped
+                               # before they reached a collective
 
 
 def validate_sources(sources, n_logical: int,
@@ -180,7 +197,7 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
                    queue_strategy: ex.ExchangeStrategy,
                    expand_fn=None, expand_emits_packed: bool = False,
                    n_kernel_args: int = 0, bottom_up_wire: str = "bytes",
-                   on_trace=None):
+                   sieve: bool = False, on_trace=None):
     """Builds the per-shard BFS body (runs under shard_map).
 
     Exchange strategies arrive pre-resolved from the registry (plan time),
@@ -199,8 +216,16 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
     w_shard = fr.packed_words(shard)
     queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
     bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part.n_logical))
+    # compressed queue wire: bucket row j encodes ids relative to j*shard
+    # (range [0, shard)); the static byte capacity below is exactly what
+    # the strategy's byte model prices at this plan's capacity density
+    use_compressed = queue_strategy.wire == "compressed"
+    q_byte_cap = fr.compressed_capacity(opts.queue_cap, shard)
+    sv_bits, sv_bucket, sv_words = fr.sieve_layout(shard)
+    sieve_gather_bytes = float((p - 1) * sv_words * 4) if sieve else 0.0
     dense_bytes = dense_strategy.bytes_model(n, p, s, itemsize, axes_sizes)
-    queue_bytes = queue_strategy.bytes_model(p, opts.queue_cap, 4)
+    queue_bytes = queue_strategy.bytes_model(
+        p, opts.queue_cap, 4, opts.queue_cap / shard) + sieve_gather_bytes
     bottom_up_bytes = ex.bottomup_level_bytes(n, p, s, itemsize,
                                               wire=bottom_up_wire)
 
@@ -240,30 +265,60 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         me = lax.axis_index(axis)
         valid = dst_global >= 0
         active = (frontier[src_local, 0] > 0) & valid
+        hits = jnp.int32(0)
+        if sieve:
+            # replicate each shard's coarse visited summary and drop
+            # candidates whose whole bucket is already visited — they
+            # can never lower a distance, so they need not ship
+            own_sum = fr.sieve_summary(dist[:, 0], sv_bits, sv_bucket)
+            gsum = lax.all_gather(own_sum, axis, tiled=True)  # (p*words,)
+            drop = fr.sieve_lookup(gsum, dst_global, shard, sv_bits,
+                                   sv_bucket, sv_words) & active
+            hits = lax.psum(drop.sum(dtype=jnp.int32), axis)
+            active = active & ~drop
         buckets, local_mask, _, overflow = fr.build_queue_buckets(
             dst_global, active, part, me, opts.queue_cap,
             local_update=opts.local_update, dedupe=opts.dedupe)
-        # Exactness guarantee: if any shard's bucket overflowed, run the
-        # whole level densely instead (the predicate is replicated, so all
-        # shards take the same branch and collectives stay collective).
+        if use_compressed:
+            base = jnp.arange(p, dtype=jnp.int32)[:, None] * shard
+            rel = jnp.where(buckets >= 0, buckets - base, -1)
+            payload, enc_ovf = jax.vmap(
+                lambda row: fr.encode_delta_varint(row, q_byte_cap, shard)
+            )(rel)
+            overflow = overflow | enc_ovf.any()
+        # Exactness guarantee: if any shard's bucket (or compressed
+        # stream) overflowed, run the whole level densely instead (the
+        # predicate is replicated, so all shards take the same branch and
+        # collectives stay collective).
         overflow_any = lax.psum(overflow.astype(jnp.int32), axis) > 0
 
         def sparse_branch():
-            recv = queue_strategy.impl(buckets, axis)
-            own = jnp.maximum(fr.apply_queue(recv, me, shard), local_mask)
+            if use_compressed:
+                recv = queue_strategy.impl(payload, axis)  # (p, byte_cap)
+                rec_ids = jax.vmap(
+                    lambda row: fr.decode_delta_varint(row, opts.queue_cap,
+                                                       shard))(recv)
+                rec_ids = jnp.where(rec_ids >= 0, rec_ids + me * shard, -1)
+            else:
+                rec_ids = queue_strategy.impl(buckets, axis)
+            own = jnp.maximum(fr.apply_queue(rec_ids, me, shard), local_mask)
             d2, new = _owned_update(dist, own[:, None], level)
             return d2, new, jnp.float32(queue_bytes)
 
         def dense_branch():
-            return dense_level(frontier, dist, level, src_local, dst_global,
-                               kargs)
+            d2, new, bb = dense_level(frontier, dist, level, src_local,
+                                      dst_global, kargs)
+            # the sieve gather (if any) already ran before escalation
+            return d2, new, bb + jnp.float32(sieve_gather_bytes)
 
         d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
-        return d2, new, bytes_, overflow_any
+        return d2, new, bytes_, overflow_any, hits
 
     def body(state, src_local, dst_global, in_src_global, in_dst_local,
              kargs, valid_local):
-        dist, frontier, level, _, bytes_acc, overflowed, modes = state
+        (dist, frontier, level, _, bytes_acc, overflowed, modes,
+         hits_acc) = state
+        hits = jnp.int32(0)
 
         if opts.mode == "dense":
             dist, new, b = dense_level(frontier, dist, level, src_local,
@@ -271,8 +326,9 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             modes = modes.at[0].add(1)
             ovf = jnp.bool_(False)
         elif opts.mode == "queue":
-            dist, new, b, ovf = queue_level(frontier, dist, level, src_local,
-                                            dst_global, kargs)
+            dist, new, b, ovf, hits = queue_level(frontier, dist, level,
+                                                  src_local, dst_global,
+                                                  kargs)
             modes = modes.at[1].add(1)
         else:  # auto: direction-optimizing hybrid
             f_verts = lax.psum(frontier.sum(dtype=jnp.int32), axis)
@@ -285,24 +341,25 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             def do_bottom_up():
                 d, nw, b = bottom_up_level(frontier, dist, level,
                                            in_src_global, in_dst_local)
-                return d, nw, b, jnp.bool_(False), jnp.int32(2)
+                return d, nw, b, jnp.bool_(False), jnp.int32(2), jnp.int32(0)
 
             def do_queue():
-                d, nw, b, ovf = queue_level(frontier, dist, level, src_local,
-                                            dst_global, kargs)
-                return d, nw, b, ovf, jnp.int32(1)
+                d, nw, b, ovf, h = queue_level(frontier, dist, level,
+                                               src_local, dst_global, kargs)
+                return d, nw, b, ovf, jnp.int32(1), h
 
             def do_dense():
                 d, nw, b = dense_level(frontier, dist, level, src_local,
                                        dst_global, kargs)
-                return d, nw, b, jnp.bool_(False), jnp.int32(0)
+                return d, nw, b, jnp.bool_(False), jnp.int32(0), jnp.int32(0)
 
             if s == 1:
-                dist, new, b, ovf, which = lax.cond(
+                dist, new, b, ovf, which, hits = lax.cond(
                     big, do_bottom_up,
                     lambda: lax.cond(tiny, do_queue, do_dense))
             else:
-                dist, new, b, ovf, which = lax.cond(big, do_bottom_up, do_dense)
+                dist, new, b, ovf, which, hits = lax.cond(
+                    big, do_bottom_up, do_dense)
             modes = modes.at[which].add(1)
 
         # Mask padding vertices (ids >= n_logical can never be visited).
@@ -310,7 +367,7 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         dist = jnp.where(valid_local[:, None], dist, INF)
         active = lax.psum(new.sum(dtype=jnp.int32), axis) > 0
         return (dist, new, level + 1, active, bytes_acc + b,
-                overflowed | ovf, modes)
+                overflowed | ovf, modes, hits_acc + hits)
 
     def shard_fn(src_local, dst_global, in_src_global, in_dst_local, *rest):
         if on_trace is not None:
@@ -318,7 +375,8 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         kargs = rest[:n_kernel_args]
         dist0, frontier0, valid_local = rest[n_kernel_args:]
         state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
-                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32))
+                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32),
+                  jnp.int32(0))
 
         def cond(st):
             return st[3] & (st[2] <= max_levels)
@@ -327,9 +385,9 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             return body(st, src_local, dst_global, in_src_global,
                         in_dst_local, kargs, valid_local)
 
-        dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
-            cond, body_fn, state0)
-        return dist, level - 1, bytes_acc, overflowed, modes
+        (dist, _, level, _, bytes_acc, overflowed, modes,
+         sieve_hits) = lax.while_loop(cond, body_fn, state0)
+        return dist, level - 1, bytes_acc, overflowed, modes, sieve_hits
 
     return shard_fn
 
@@ -341,7 +399,7 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
                       expand_sparse_strategy: ex.ExchangeStrategy,
                       fold_sparse_strategy: ex.ExchangeStrategy,
                       bottom_up_wire: str = "bytes",
-                      on_trace=None):
+                      sieve: bool = False, on_trace=None):
     """Per-device body of the 2-D two-phase BFS level loop (shard_map).
 
     Each dense level is expand -> local edge scatter -> fold -> owner
@@ -383,13 +441,24 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
     grid_axes = (row_axis, col_axis)
     queue_edge_cutoff = max(1, int(opts.queue_threshold * e_total))
     bottom_up_cutoff = max(1, int(opts.bottom_up_threshold * part2.n_logical))
+    # compressed sparse phases: both ship ids from [0, b) (expand: local
+    # frontier ids; fold: bucket row rr relative to rr*b), so they share
+    # one static byte capacity, matching the models' capacity density
+    use_comp_expand = expand_sparse_strategy.wire == "compressed"
+    use_comp_fold = fold_sparse_strategy.wire == "compressed"
+    g_byte_cap = fr.compressed_capacity(opts.queue_cap, b)
+    g_density = opts.queue_cap / b
+    sv_bits, sv_bucket, sv_words = fr.sieve_layout(b)
+    sieve_gather_bytes = jnp.float32(
+        (p - 1) * sv_words * 4 if sieve else 0.0)
     dense_bytes = jnp.float32(
         expand_strategy.bytes_model(part2.n, r, c, s, 1) +
         fold_strategy.bytes_model(part2.n, r, c, s, 1))
     expand_sparse_bytes = jnp.float32(
-        expand_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4))
-    sparse_bytes = expand_sparse_bytes + jnp.float32(
-        fold_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4))
+        expand_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4,
+                                           g_density))
+    sparse_bytes = expand_sparse_bytes + sieve_gather_bytes + jnp.float32(
+        fold_sparse_strategy.bytes_model(r, c, opts.queue_cap, 4, g_density))
     bottom_up_bytes = jnp.float32(ex.bottomup_level_bytes(
         part2.n, p, s, 1, wire=bottom_up_wire))
 
@@ -427,39 +496,78 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
     def queue_level(frontier, dist, level, src_rowlocal, dst_fold):
         me_row = lax.axis_index(row_axis)
         ids, _, pack_ovf = fr.pack_frontier_ids(frontier, opts.queue_cap)
-        all_ids = expand_sparse_strategy.impl(ids, col_axis)     # (c*cap,)
+        if use_comp_expand:
+            pay, enc_ovf = fr.encode_delta_varint(ids, g_byte_cap, b)
+            pack_ovf = pack_ovf | enc_ovf
+            all_pay = expand_sparse_strategy.impl(pay, col_axis)
+            all_ids = jax.vmap(
+                lambda seg: fr.decode_delta_varint(seg, opts.queue_cap, b)
+            )(all_pay.reshape(c, g_byte_cap)).reshape(-1)        # (c*cap,)
+        else:
+            all_ids = expand_sparse_strategy.impl(ids, col_axis)  # (c*cap,)
         frow = fr.unpack_row_frontier(all_ids, c, b)             # (c*b, 1)
         valid = dst_fold >= 0
         active = (frow[src_rowlocal, 0] > 0) & valid
+        hits = jnp.int32(0)
+        if sieve:
+            # candidate dst_fold = rr*b + loc targets the vertex owned by
+            # the grid device (rr, me_col), global chunk rr*c + me_col —
+            # the both-axes summary gather is in exactly that chunk order
+            own_sum = fr.sieve_summary(dist[:, 0], sv_bits, sv_bucket)
+            gsum = lax.all_gather(own_sum, grid_axes, tiled=True)
+            me_col = lax.axis_index(col_axis)
+            df = jnp.where(active, dst_fold, 0)
+            rr = df // b
+            gid = (rr * c + me_col) * b + (df - rr * b)
+            drop = fr.sieve_lookup(gsum, gid, b, sv_bits, sv_bucket,
+                                   sv_words) & active
+            hits = lax.psum(drop.sum(dtype=jnp.int32), grid_axes)
+            active = active & ~drop
         buckets, local_mask, _, bucket_ovf = fr.build_queue_buckets_2d(
             dst_fold, active, part2, me_row, opts.queue_cap,
             local_update=opts.local_update, dedupe=opts.dedupe)
-        # Exactness guarantee: if any device's frontier pack or any send
-        # bucket overflowed, run the whole level densely instead (the
-        # predicate is replicated over both grid axes, so every device
-        # takes the same branch and collectives stay collective).
+        if use_comp_fold:
+            base = jnp.arange(r, dtype=jnp.int32)[:, None] * b
+            rel = jnp.where(buckets >= 0, buckets - base, -1)
+            fpay, fenc_ovf = jax.vmap(
+                lambda row: fr.encode_delta_varint(row, g_byte_cap, b))(rel)
+            bucket_ovf = bucket_ovf | fenc_ovf.any()
+        # Exactness guarantee: if any device's frontier pack, send bucket
+        # or compressed stream overflowed, run the whole level densely
+        # instead (the predicate is replicated over both grid axes, so
+        # every device takes the same branch and collectives stay
+        # collective).
         overflow_any = lax.psum(
             (pack_ovf | bucket_ovf).astype(jnp.int32), grid_axes) > 0
 
         def sparse_branch():
-            recv = fold_sparse_strategy.impl(buckets, row_axis)  # (r, cap)
-            own = jnp.maximum(fr.apply_queue(recv, me_row, b), local_mask)
+            if use_comp_fold:
+                recvp = fold_sparse_strategy.impl(fpay, row_axis)
+                rec = jax.vmap(lambda row: fr.decode_delta_varint(
+                    row, opts.queue_cap, b))(recvp)              # (r, cap)
+                rec = jnp.where(rec >= 0, rec + me_row * b, -1)
+            else:
+                rec = fold_sparse_strategy.impl(buckets, row_axis)
+            own = jnp.maximum(fr.apply_queue(rec, me_row, b), local_mask)
             d2, new = _owned_update(dist, own[:, None], level)
             return d2, new, sparse_bytes
 
         def dense_branch():
-            # the sparse expand allgather above already ran, so an
-            # escalated level pays its bytes on top of the dense level's
+            # the sparse expand allgather (and sieve gather) above
+            # already ran, so an escalated level pays their bytes on top
+            # of the dense level's
             d2, new, bb = dense_level(frontier, dist, level, src_rowlocal,
                                       dst_fold)
-            return d2, new, bb + expand_sparse_bytes
+            return d2, new, bb + expand_sparse_bytes + sieve_gather_bytes
 
         d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
-        return d2, new, bytes_, overflow_any
+        return d2, new, bytes_, overflow_any, hits
 
     def body(state, src_rowlocal, dst_fold, in_src_global, in_dst_local,
              out_degree, valid_local):
-        dist, frontier, level, _, bytes_acc, overflowed, modes = state
+        (dist, frontier, level, _, bytes_acc, overflowed, modes,
+         hits_acc) = state
+        hits = jnp.int32(0)
 
         if opts.mode == "dense":
             dist, new, bb = dense_level(frontier, dist, level, src_rowlocal,
@@ -467,8 +575,8 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
             modes = modes.at[0].add(1)
             ovf = jnp.bool_(False)
         elif opts.mode == "queue":
-            dist, new, bb, ovf = queue_level(frontier, dist, level,
-                                             src_rowlocal, dst_fold)
+            dist, new, bb, ovf, hits = queue_level(frontier, dist, level,
+                                                   src_rowlocal, dst_fold)
             modes = modes.at[1].add(1)
         else:  # auto: direction-optimizing hybrid on the grid
             f_verts = lax.psum(frontier.sum(dtype=jnp.int32), grid_axes)
@@ -481,25 +589,25 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
             def do_bottom_up():
                 d, nw, bb = bottom_up_level(frontier, dist, level,
                                             in_src_global, in_dst_local)
-                return d, nw, bb, jnp.bool_(False), jnp.int32(2)
+                return d, nw, bb, jnp.bool_(False), jnp.int32(2), jnp.int32(0)
 
             def do_queue():
-                d, nw, bb, ovf = queue_level(frontier, dist, level,
-                                             src_rowlocal, dst_fold)
-                return d, nw, bb, ovf, jnp.int32(1)
+                d, nw, bb, ovf, h = queue_level(frontier, dist, level,
+                                                src_rowlocal, dst_fold)
+                return d, nw, bb, ovf, jnp.int32(1), h
 
             def do_dense():
                 d, nw, bb = dense_level(frontier, dist, level, src_rowlocal,
                                         dst_fold)
-                return d, nw, bb, jnp.bool_(False), jnp.int32(0)
+                return d, nw, bb, jnp.bool_(False), jnp.int32(0), jnp.int32(0)
 
             if s == 1:
-                dist, new, bb, ovf, which = lax.cond(
+                dist, new, bb, ovf, which, hits = lax.cond(
                     big, do_bottom_up,
                     lambda: lax.cond(tiny, do_queue, do_dense))
             else:
-                dist, new, bb, ovf, which = lax.cond(big, do_bottom_up,
-                                                     do_dense)
+                dist, new, bb, ovf, which, hits = lax.cond(
+                    big, do_bottom_up, do_dense)
             modes = modes.at[which].add(1)
 
         # Mask padding vertices (ids >= n_logical can never be visited).
@@ -507,14 +615,15 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
         dist = jnp.where(valid_local[:, None], dist, INF)
         active = lax.psum(new.sum(dtype=jnp.int32), grid_axes) > 0
         return (dist, new, level + 1, active, bytes_acc + bb,
-                overflowed | ovf, modes)
+                overflowed | ovf, modes, hits_acc + hits)
 
     def _run(src_rowlocal, dst_fold, in_src_global, in_dst_local,
              out_degree, dist0, frontier0, valid_local):
         if on_trace is not None:
             on_trace()
         state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
-                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32))
+                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32),
+                  jnp.int32(0))
 
         def cond(st):
             return st[3] & (st[2] <= max_levels)
@@ -523,9 +632,9 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
             return body(st, src_rowlocal, dst_fold, in_src_global,
                         in_dst_local, out_degree, valid_local)
 
-        dist, _, level, _, bytes_acc, overflowed, modes = lax.while_loop(
-            cond, body_fn, state0)
-        return dist, level - 1, bytes_acc, overflowed, modes
+        (dist, _, level, _, bytes_acc, overflowed, modes,
+         sieve_hits) = lax.while_loop(cond, body_fn, state0)
+        return dist, level - 1, bytes_acc, overflowed, modes, sieve_hits
 
     if opts.mode == "auto":
         shard_fn = _run

@@ -63,10 +63,12 @@ class BFSRunStats:
     comm_bytes: jax.Array      # () float32, analytic per-chip
     overflowed: jax.Array      # () bool
     mode_counts: jax.Array     # (3,) int32: dense, queue, bottom_up levels
+    sieve_hits: jax.Array      # () int32: candidates dropped pre-collective
 
     def block(self) -> "BFSRunStats":
         jax.block_until_ready((self.levels, self.comm_bytes,
-                               self.overflowed, self.mode_counts))
+                               self.overflowed, self.mode_counts,
+                               self.sieve_hits))
         return self
 
     def to_host(self) -> dict:
@@ -77,12 +79,14 @@ class BFSRunStats:
             "mode_counts": {"dense": int(self.mode_counts[0]),
                             "queue": int(self.mode_counts[1]),
                             "bottom_up": int(self.mode_counts[2])},
+            "sieve_hits": int(self.sieve_hits),
         }
 
 
 jax.tree_util.register_dataclass(
     BFSRunStats,
-    data_fields=["levels", "comm_bytes", "overflowed", "mode_counts"],
+    data_fields=["levels", "comm_bytes", "overflowed", "mode_counts",
+                 "sieve_hits"],
     meta_fields=[])
 
 
@@ -121,7 +125,8 @@ class BFSResult:
         return BFSStats(levels=h["levels"], visited=visited,
                         comm_bytes=h["comm_bytes"],
                         overflowed=h["overflowed"],
-                        mode_counts=h["mode_counts"])
+                        mode_counts=h["mode_counts"],
+                        sieve_hits=h["sieve_hits"])
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +156,9 @@ class BFSPlan:
     # exchange that is not a registry strategy); "auto" resolves here at
     # plan time just like the per-phase strategies resolve above
     bottom_up_wire: str = "bytes"
+    # resolved visited-sieve decision (BFSOptions.sieve="auto" resolves at
+    # plan time: on when the plan has a reachable queue path and p > 1)
+    sieve: bool = False
 
     def describe(self) -> dict:
         """Static plan metadata (the non-per-run half of the old BFSStats)."""
@@ -167,10 +175,19 @@ class BFSPlan:
             "axes": self.axis if isinstance(self.axis, tuple) else (self.axis,),
             "axes_sizes": self.axes_sizes,
         }
+        # sparse phases report their resolved payload layout: "ids" (raw
+        # int32) or "compressed" (delta+varint uint8)
+        def sparse_wire(strategy):
+            return "ids" if strategy.wire == "bytes" else strategy.wire
+
         if self.partition == "2d":
             part2 = self.graph2d.part
             r, c, s = part2.r, part2.c, self.num_sources
             cap = self.opts.queue_cap
+            b = part2.shard_size
+            density = cap / b
+            sieve_bytes = ((part2.p - 1) * fr.sieve_layout(b)[2] * 4
+                           if self.sieve else 0)
             phase_bytes = {
                 # per-phase byte split of every level variant: row phase
                 # then column phase, dense bitmaps vs sparse id buffers
@@ -178,9 +195,9 @@ class BFSPlan:
                     part2.n, r, c, s, 1),
                 "fold": self.fold_strategy.bytes_model(part2.n, r, c, s, 1),
                 "expand_sparse": self.expand_sparse_strategy.bytes_model(
-                    r, c, cap, 4),
+                    r, c, cap, 4, density),
                 "fold_sparse": self.fold_sparse_strategy.bytes_model(
-                    r, c, cap, 4),
+                    r, c, cap, 4, density),
             }
             meta.update({
                 "grid": (r, c),
@@ -189,43 +206,50 @@ class BFSPlan:
                 "expand_sparse_exchange": self.expand_sparse_strategy.name,
                 "fold_sparse_exchange": self.fold_sparse_strategy.name,
                 # per-phase wire layout the plan resolved (what "auto"
-                # actually picked); sparse phases always ship int32 ids
+                # actually picked)
                 "wire_formats": {
                     "expand": self.expand_strategy.wire,
                     "fold": self.fold_strategy.wire,
-                    "expand_sparse": "ids",
-                    "fold_sparse": "ids",
+                    "expand_sparse": sparse_wire(self.expand_sparse_strategy),
+                    "fold_sparse": sparse_wire(self.fold_sparse_strategy),
                     "bottom_up": self.bottom_up_wire,
                 },
+                "sieve": self.sieve,
                 # (no in_e_cap here: the bottom-up blocks build lazily at
                 # compile time for auto plans; describe() must stay cheap)
                 "e_cap": self.graph2d.e_cap,
                 "phase_bytes": phase_bytes,
                 # per-level exchange bytes of each mode a traversal can
                 # take (mode_counts in BFSRunStats says how many of each
-                # actually ran)
+                # actually ran); queue levels add the sieve summary gather
+                # when the plan resolved the sieve on
                 "dense_level_bytes": (phase_bytes["expand"]
                                       + phase_bytes["fold"]),
                 "queue_level_bytes": (phase_bytes["expand_sparse"]
-                                      + phase_bytes["fold_sparse"]),
+                                      + phase_bytes["fold_sparse"]
+                                      + sieve_bytes),
                 "bottom_up_level_bytes": ex.bottomup_level_bytes(
                     part2.n, part2.p, s, 1, wire=self.bottom_up_wire),
             })
         else:
+            density = self.opts.queue_cap / part.shard_size
+            sieve_bytes = ((part.p - 1) * fr.sieve_layout(part.shard_size)[2]
+                           * 4 if self.sieve else 0)
             meta.update({
                 "dense_exchange": self.dense_strategy.name,
                 "queue_exchange": self.queue_strategy.name,
                 "wire_formats": {
                     "dense": self.dense_strategy.wire,
-                    "queue": "ids",
+                    "queue": sparse_wire(self.queue_strategy),
                     "bottom_up": self.bottom_up_wire,
                 },
+                "sieve": self.sieve,
                 "e_cap": self.graph.e_cap,
                 "in_e_cap": self.graph.in_e_cap,
                 "dense_level_bytes": self.dense_strategy.bytes_model(
                     part.n, part.p, self.num_sources, 1, self.axes_sizes),
                 "queue_level_bytes": self.queue_strategy.bytes_model(
-                    part.p, self.opts.queue_cap, 4),
+                    part.p, self.opts.queue_cap, 4, density) + sieve_bytes,
                 "bottom_up_level_bytes": ex.bottomup_level_bytes(
                     part.n, part.p, self.num_sources, 1,
                     wire=self.bottom_up_wire),
@@ -255,8 +279,9 @@ class BFSPlan:
                    # wire formats key by what they *resolved* to: the
                    # packed-vs-bytes choice of each phase is in the
                    # resolved strategy names below; the bottom-up gather
-                   # has no registry strategy so its resolution keys here
-                   self.bottom_up_wire)
+                   # and the sieve have no registry strategy so their
+                   # resolutions key here
+                   self.bottom_up_wire, self.sieve)
         strat_key = tuple(
             s.name if s is not None else None
             for s in (self.dense_strategy, self.queue_strategy,
@@ -302,6 +327,15 @@ class BFSPlan:
                 wire += g.part.c * fr.packed_words(b) * 4
             if self.fold_strategy.wire == "packed":
                 wire += g.part.r * fr.packed_words(b) * 4
+            # compressed sparse phases keep encode + gathered decode
+            # payloads live across the level; the sieve keeps the
+            # replicated summary words
+            if (self.expand_sparse_strategy.wire == "compressed"
+                    or self.fold_sparse_strategy.wire == "compressed"):
+                wire += 2 * g.part.p * fr.compressed_capacity(
+                    self.opts.queue_cap, b)
+            if self.sieve:
+                wire += g.part.p * fr.sieve_layout(b)[2] * 4
         else:
             g = self.graph
             n = g.part.n
@@ -310,6 +344,11 @@ class BFSPlan:
             # across the dense exchange
             wire = (g.p * fr.packed_words(g.part.shard_size) * 4
                     if self.dense_strategy.wire == "packed" else 0)
+            if self.queue_strategy.wire == "compressed":
+                wire += 2 * g.p * fr.compressed_capacity(
+                    self.opts.queue_cap, g.part.shard_size)
+            if self.sieve:
+                wire += g.p * fr.sieve_layout(g.part.shard_size)[2] * 4
             if self.opts.use_kernel:
                 # per-shard blocked adjacency resident on device for the
                 # engine's lifetime (tile values + block row/col indices),
@@ -325,42 +364,78 @@ class BFSPlan:
         return BFSEngine(self)
 
 
+_SPARSE_KINDS = ("queue", "expand_row_sparse", "fold_col_sparse")
+
+
 def _resolve_strategy(kind: str, name: str, model_args: tuple,
                       wire_format: str = "bytes"):
     """Registry lookup, or byte-model auto-selection for name="auto".
 
-    ``wire_format`` (``BFSOptions.wire_format``) resolves the packed-vs-
-    bytes layout of the dense-phase kinds at plan time:
+    ``wire_format`` (``BFSOptions.wire_format``) resolves each phase's
+    payload layout at plan time.  Dense kinds choose between raw uint8
+    masks and the strategy's ``<name>_packed`` bitset twin; sparse kinds
+    (queue / expand_row_sparse / fold_col_sparse) choose between raw
+    int32 ids and the ``<name>_compressed`` delta+varint twin.  The
+    option's tier maps onto what each kind implements:
 
-      * ``"bytes"``  — the named strategy as registered (uint8 masks).
-      * ``"packed"`` — the strategy's ``<name>_packed`` twin (uint32
-        bitset words); a clear error if no twin exists.
-      * ``"auto"``   — whichever of the two models fewer bytes for this
-        plan's shapes; ties keep ``bytes`` (no pack/unpack work when
+      * ``"bytes"``      — the named strategy as registered.
+      * ``"packed"``     — dense: the packed twin (error if none);
+        sparse: raw ids (the bitset tier has no sparse analog — the
+        compressed codec carries its own adaptive bitmap fallback).
+      * ``"compressed"`` — sparse: the compressed twin (error if none);
+        dense: the packed twin (the densest layout that kind has).
+      * ``"auto"``       — whichever twin models fewer bytes for this
+        plan's shapes; ties keep the base (no pack/codec work when
         nothing crosses the wire, e.g. p = 1).
 
-    A name that already ends in ``_packed`` is an explicit packed choice
-    and short-circuits the resolution; ``name="auto"`` spans every
+    A name that already carries a twin suffix is an explicit choice and
+    short-circuits the resolution; ``name="auto"`` spans every
     registered strategy of the wire formats the option admits.
     """
+    sparse = kind in _SPARSE_KINDS
+    suffix = "_compressed" if sparse else "_packed"
+    if sparse:
+        effective = {"bytes": "bytes", "packed": "bytes",
+                     "compressed": "compressed",
+                     "auto": "auto"}[wire_format]
+    else:
+        effective = {"bytes": "bytes", "packed": "packed",
+                     "compressed": "packed", "auto": "auto"}[wire_format]
     if name == "auto":
-        wire = None if wire_format == "auto" else wire_format
+        wire = None if effective == "auto" else effective
         return ex.select_exchange(kind, *model_args, wire=wire)
-    if wire_format == "bytes" or name.endswith("_packed"):
+    if effective == "bytes" or name.endswith(suffix):
         return ex.get_exchange(kind, name)
     try:
-        packed = ex.get_exchange(kind, name + "_packed")
+        twin = ex.get_exchange(kind, name + suffix)
     except ValueError:
-        if wire_format == "packed":
+        if effective != "auto":
             raise ValueError(
-                f"{kind} strategy {name!r} has no packed variant; use "
-                f"wire_format='bytes' or 'auto'") from None
+                f"{kind} strategy {name!r} has no {suffix[1:]} variant; "
+                f"use wire_format='bytes' or 'auto'") from None
         return ex.get_exchange(kind, name)
+    if effective != "auto":
+        return twin
     base = ex.get_exchange(kind, name)
-    if wire_format == "packed":
-        return packed
-    return (packed if packed.bytes_model(*model_args)
+    return (twin if twin.bytes_model(*model_args)
             < base.bytes_model(*model_args) else base)
+
+
+def _resolve_sieve(sieve, mode: str, p: int, s: int) -> bool:
+    """Resolve ``BFSOptions.sieve`` to the plan-time bool.
+
+    The sieve filters queue-phase candidate ids against a replicated
+    coarse visited summary *before* the collective, so it only applies
+    where a queue path can run: not in pure dense mode, and only with a
+    single source column (the summary is per vertex, not per source —
+    multi-source plans keep it off even when asked).  ``"auto"`` turns
+    it on exactly when the filter can save wire bytes: p > 1.
+    """
+    if mode == "dense" or s != 1:
+        return False
+    if sieve == "auto":
+        return p > 1
+    return bool(sieve)
 
 
 def _resolve_bottom_up_wire(wire_format: str, n: int, p: int, s: int) -> str:
@@ -500,7 +575,11 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         else:
             graph2d = to_2d(graph, r, c)
         grid_args = (graph2d.part.n, r, c, s, 1)
-        sparse_args = (r, c, opts.queue_cap, 4)
+        # sparse models take the plan's frontier density (cap relative to
+        # the chunk size) so compressed twins price the same payload the
+        # compiled loop ships
+        sparse_args = (r, c, opts.queue_cap, 4,
+                       opts.queue_cap / graph2d.part.shard_size)
         return BFSPlan(
             graph=graph, opts=opts, mesh=mesh, axis=axes,
             axes_sizes=(r, c), num_sources=s,
@@ -512,15 +591,15 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
             fold_strategy=_resolve_strategy(
                 "fold_col", opts.fold_exchange, grid_args,
                 opts.wire_format),
-            # sparse phases ship int32 ids — already compact; wire_format
-            # does not apply to them
             expand_sparse_strategy=_resolve_strategy(
                 "expand_row_sparse", opts.expand_sparse_exchange,
-                sparse_args),
+                sparse_args, opts.wire_format),
             fold_sparse_strategy=_resolve_strategy(
-                "fold_col_sparse", opts.fold_sparse_exchange, sparse_args),
+                "fold_col_sparse", opts.fold_sparse_exchange, sparse_args,
+                opts.wire_format),
             bottom_up_wire=_resolve_bottom_up_wire(
                 opts.wire_format, graph2d.part.n, part.p, s),
+            sieve=_resolve_sieve(opts.sieve, opts.mode, part.p, s),
         )
 
     if isinstance(graph, ShardedGraph2D):
@@ -549,9 +628,12 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
             "dense", opts.dense_exchange,
             (part.n, part.p, s, 1, axes_sizes), opts.wire_format),
         queue_strategy=_resolve_strategy(
-            "queue", opts.queue_exchange, (part.p, opts.queue_cap, 4)),
+            "queue", opts.queue_exchange,
+            (part.p, opts.queue_cap, 4, opts.queue_cap / part.shard_size),
+            opts.wire_format),
         bottom_up_wire=_resolve_bottom_up_wire(
             opts.wire_format, part.n, part.p, s),
+        sieve=_resolve_sieve(opts.sieve, opts.mode, part.p, s),
     )
 
 
@@ -611,7 +693,7 @@ class BFSEngine:
                 part, buf_owner.n_edges, s, axis[0], axis[1], opts,
                 plan_.max_levels, plan_.expand_strategy, plan_.fold_strategy,
                 plan_.expand_sparse_strategy, plan_.fold_sparse_strategy,
-                bottom_up_wire=plan_.bottom_up_wire,
+                bottom_up_wire=plan_.bottom_up_wire, sieve=plan_.sieve,
                 on_trace=self._bump_trace)
             # only the auto hybrid's bottom-up level reads the in-edge
             # blocks and out-degrees; dense/queue engines neither build
@@ -638,7 +720,7 @@ class BFSEngine:
                 plan_.max_levels, plan_.dense_strategy, plan_.queue_strategy,
                 expand_fn=expand_fn, expand_emits_packed=expand_packed,
                 n_kernel_args=n_kernel_args,
-                bottom_up_wire=plan_.bottom_up_wire,
+                bottom_up_wire=plan_.bottom_up_wire, sieve=plan_.sieve,
                 on_trace=self._bump_trace)
         n = part.n
 
@@ -692,7 +774,7 @@ class BFSEngine:
             shard_fn, mesh=mesh,
             in_specs=(spec_edge,) * n_edge_in + (spec_vert, spec_vert,
                                                  spec_edge),
-            out_specs=(spec_vert, P(), P(), P(), P()),
+            out_specs=(spec_vert, P(), P(), P(), P(), P()),
             check_vma=False,
         )
 
@@ -804,12 +886,13 @@ class BFSEngine:
         src_dev = jax.device_put(padded, self._sh_repl)
 
         dist0, frontier0 = self._init_c(src_dev)
-        dist, levels, comm_bytes, overflowed, modes = self._run_c(
+        dist, levels, comm_bytes, overflowed, modes, sieve_hits = self._run_c(
             *self._gbufs, dist0, frontier0, self._valid)
         return BFSResult(
             dist=dist,
             run_stats=BFSRunStats(levels=levels, comm_bytes=comm_bytes,
-                                  overflowed=overflowed, mode_counts=modes),
+                                  overflowed=overflowed, mode_counts=modes,
+                                  sieve_hits=sieve_hits),
             n_logical=self.plan.graph.part.n_logical,
             n_sources=n_req,
         )

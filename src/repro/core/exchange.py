@@ -50,7 +50,9 @@ from repro.core import frontier as _fr
 
 AxisName = Union[str, tuple]
 
-WIRE_FORMATS = ("bytes", "packed")   # dense-phase wire layouts
+#: on-wire payload layouts: raw ids / uint8 masks, packed uint32 bitset
+#: words (dense phases), delta+varint compressed id streams (sparse phases)
+WIRE_FORMATS = ("bytes", "packed", "compressed")
 
 
 # ---------------------------------------------------------------------------
@@ -93,10 +95,16 @@ _REGISTRY: dict = {}          # (kind, name) -> ExchangeStrategy
 #                (r participants); byte model (n, r, c, s, itemsize)
 #   expand_row_sparse — sparse expand phase: active frontier *ids* across
 #                a grid row instead of the bitmap; byte model
-#                (r, c, cap, itemsize)
+#                (r, c, cap, itemsize, density=1.0)
 #   fold_col_sparse   — sparse fold phase: per-row-rank candidate id
 #                buckets down a grid column; byte model (r, c, cap,
-#                itemsize)
+#                itemsize, density=1.0)
+#
+# Sparse byte models take a trailing ``density`` — the id capacity as a
+# fraction of the id range each buffer draws from (cap / id_range).  Raw
+# id strategies ignore it; the ``_compressed`` twins derive the varint
+# buffer size from it, which is how ``wire_format="auto"`` prices raw
+# ids against compressed streams per phase at plan time.
 KINDS = ("dense", "queue", "expand_row", "fold_col",
          "expand_row_sparse", "fold_col_sparse")
 
@@ -506,9 +514,22 @@ def _fold_col_reduce_scatter_packed(cwords: jnp.ndarray,
 # --- sparse 2-D phases: ship ids instead of bitmaps (paper §5.1 on the
 # grid).  Payload scales with the frontier (cap ids), not with n/p, so the
 # narrow first/last levels cost (c-1)·cap + (r-1)·cap id-bytes instead of
-# (c-1 + r-1)·n/p mask-bytes.  Byte-model signature: (r, c, cap, itemsize).
+# (c-1 + r-1)·n/p mask-bytes.  Byte-model signature:
+# (r, c, cap, itemsize, density=1.0).
 
-def _bytes_expand_sparse_allgather(r, c, cap, itemsize):
+def _compressed_payload(cap, density):
+    """Static byte size of one compressed id buffer: the model-side twin
+    of ``frontier.compressed_capacity``, reconstructing the id range
+    from the capacity density (``id_range = cap / density``) so the
+    analytic models and the compiled loop price the same buffer."""
+    if density and density > 0:
+        id_range = max(1, int(round(cap / density)))
+    else:
+        id_range = max(1, cap)
+    return _fr.compressed_capacity(cap, id_range)
+
+
+def _bytes_expand_sparse_allgather(r, c, cap, itemsize, density=1.0):
     return (c - 1) * cap * itemsize
 
 
@@ -521,7 +542,7 @@ def _expand_row_sparse_allgather(ids: jnp.ndarray, axis: AxisName) -> jnp.ndarra
     return lax.all_gather(ids, axis, tiled=True)
 
 
-def _bytes_fold_sparse_alltoall(r, c, cap, itemsize):
+def _bytes_fold_sparse_alltoall(r, c, cap, itemsize, density=1.0):
     return (r - 1) * cap * itemsize
 
 
@@ -535,7 +556,7 @@ def _fold_col_sparse_alltoall(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndarr
                           tiled=True)
 
 
-def _bytes_fold_sparse_allgather(r, c, cap, itemsize):
+def _bytes_fold_sparse_allgather(r, c, cap, itemsize, density=1.0):
     return (r - 1) * r * cap * itemsize
 
 
@@ -545,6 +566,56 @@ def _fold_col_sparse_allgather(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndar
     # [2]-style aggregate-everywhere baseline on the column: every device
     # receives every bucket and keeps the rows addressed to it.
     allb = lax.all_gather(buckets, axis)         # (r, r, cap)
+    me = axis_index(axis)
+    return lax.dynamic_slice_in_dim(allb, me, 1, axis=1)[:, 0]
+
+
+# --- compressed sparse 2-D phases: the same collectives over delta+varint
+# payloads (frontier.encode_delta_varint output, uint8).  The byte models
+# reconstruct the buffer size from the capacity density, so auto-selection
+# trades raw ids (4 bytes each, density-blind) against the compressed
+# stream (~1 byte per id at typical gaps, bitset-capped at high density).
+
+def _bytes_expand_sparse_allgather_compressed(r, c, cap, itemsize,
+                                              density=1.0):
+    return (c - 1) * _compressed_payload(cap, density)
+
+
+@register_exchange("expand_row_sparse", "allgather_compressed",
+                   _bytes_expand_sparse_allgather_compressed,
+                   wire="compressed")
+def _expand_row_sparse_allgather_compressed(payload: jnp.ndarray,
+                                            axis: AxisName) -> jnp.ndarray:
+    # (byte_cap,) compressed local frontier -> (c*byte_cap,) row
+    # concatenation; segment j decodes to grid column j's ids.
+    return lax.all_gather(payload, axis, tiled=True)
+
+
+def _bytes_fold_sparse_alltoall_compressed(r, c, cap, itemsize, density=1.0):
+    return (r - 1) * _compressed_payload(cap, density)
+
+
+@register_exchange("fold_col_sparse", "alltoall_direct_compressed",
+                   _bytes_fold_sparse_alltoall_compressed, wire="compressed")
+def _fold_col_sparse_alltoall_compressed(payload: jnp.ndarray,
+                                         axis: AxisName) -> jnp.ndarray:
+    # (r, byte_cap) compressed per-row-rank buckets routed straight to
+    # their owners (§5.1-2 down the grid column, byte payloads).
+    return lax.all_to_all(payload, axis, split_axis=0, concat_axis=0,
+                          tiled=True)
+
+
+def _bytes_fold_sparse_allgather_compressed(r, c, cap, itemsize,
+                                            density=1.0):
+    return (r - 1) * r * _compressed_payload(cap, density)
+
+
+@register_exchange("fold_col_sparse", "allgather_merge_compressed",
+                   _bytes_fold_sparse_allgather_compressed, wire="compressed")
+def _fold_col_sparse_allgather_compressed(payload: jnp.ndarray,
+                                          axis: AxisName) -> jnp.ndarray:
+    # aggregate-everywhere baseline over compressed buckets.
+    allb = lax.all_gather(payload, axis)         # (r, r, byte_cap)
     me = axis_index(axis)
     return lax.dynamic_slice_in_dim(allb, me, 1, axis=1)[:, 0]
 
@@ -583,11 +654,11 @@ def fold_col(cand: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
 # Sparse queue exchange: (p, cap) per-destination vertex-id buffers
 # ---------------------------------------------------------------------------
 
-def _qbytes_alltoall_direct(p, cap, itemsize):
+def _qbytes_alltoall_direct(p, cap, itemsize, density=1.0):
     return (p - 1) * cap * itemsize
 
 
-def _qbytes_allgather_merge(p, cap, itemsize):
+def _qbytes_allgather_merge(p, cap, itemsize, density=1.0):
     return (p - 1) * p * cap * itemsize
 
 
@@ -605,6 +676,39 @@ def _queue_alltoall_direct(buckets: jnp.ndarray, axis: AxisName) -> jnp.ndarray:
     # Paper §5.1-2 applied to queues: MPI_Alltoallv equivalent.
     return lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0,
                           tiled=True)
+
+
+# --- compressed queue twins: per-destination delta+varint byte buffers.
+# Bucket row j carries shard j's candidates *base-relative* (id - j*shard,
+# so every row's deltas start near zero); the loop encodes before and
+# decodes after the collective, with encode overflow joining the same
+# dense-escalation predicate as bucket overflow.
+
+def _qbytes_alltoall_direct_compressed(p, cap, itemsize, density=1.0):
+    return (p - 1) * _compressed_payload(cap, density)
+
+
+@register_exchange("queue", "alltoall_direct_compressed",
+                   _qbytes_alltoall_direct_compressed, wire="compressed")
+def _queue_alltoall_direct_compressed(payload: jnp.ndarray,
+                                      axis: AxisName) -> jnp.ndarray:
+    # (p, byte_cap) uint8 routed straight to owners, like the id twin.
+    return lax.all_to_all(payload, axis, split_axis=0, concat_axis=0,
+                          tiled=True)
+
+
+def _qbytes_allgather_merge_compressed(p, cap, itemsize, density=1.0):
+    return (p - 1) * p * _compressed_payload(cap, density)
+
+
+@register_exchange("queue", "allgather_merge_compressed",
+                   _qbytes_allgather_merge_compressed, wire="compressed")
+def _queue_allgather_merge_compressed(payload: jnp.ndarray,
+                                      axis: AxisName) -> jnp.ndarray:
+    # aggregate-everywhere baseline over compressed buffers.
+    allb = lax.all_gather(payload, axis)         # (p, p, byte_cap)
+    me = axis_index(axis)
+    return lax.dynamic_slice_in_dim(allb, me, 1, axis=1)[:, 0]
 
 
 def exchange_queue(buckets: jnp.ndarray, axis: AxisName, strategy: str) -> jnp.ndarray:
@@ -639,8 +743,10 @@ def dense_level_bytes(strategy: str, n: int, p: int, s: int = 1,
         n, p, s, itemsize, axes_sizes)
 
 
-def queue_level_bytes(strategy: str, p: int, cap: int, itemsize: int = 4) -> float:
-    return get_exchange("queue", strategy).bytes_model(p, cap, itemsize)
+def queue_level_bytes(strategy: str, p: int, cap: int, itemsize: int = 4,
+                      density: float = 1.0) -> float:
+    return get_exchange("queue", strategy).bytes_model(
+        p, cap, itemsize, density)
 
 
 def bottomup_level_bytes(n: int, p: int, s: int = 1, itemsize: int = 1,
@@ -667,11 +773,11 @@ def grid_level_bytes(expand_strategy: str, fold_strategy: str, n: int,
 
 
 def grid_sparse_level_bytes(expand_strategy: str, fold_strategy: str,
-                            r: int, c: int, cap: int,
-                            itemsize: int = 4) -> float:
+                            r: int, c: int, cap: int, itemsize: int = 4,
+                            density: float = 1.0) -> float:
     """Bytes received per chip for one sparse 2-D level (id buffers on
     both phases; payload independent of n)."""
     return (get_exchange("expand_row_sparse", expand_strategy).bytes_model(
-                r, c, cap, itemsize) +
+                r, c, cap, itemsize, density) +
             get_exchange("fold_col_sparse", fold_strategy).bytes_model(
-                r, c, cap, itemsize))
+                r, c, cap, itemsize, density))

@@ -232,6 +232,13 @@ def main(argv=None) -> int:
         print(f"unexpected 429s: {rejected[0]}", file=sys.stderr)
         rc = 1
     if args.verify and results:
+        # what the server lane actually resolved on the wire — so a CI
+        # log shows which formats the bitwise check just covered
+        wires = lane.get("wire_formats")
+        if wires is not None:
+            fmt = " ".join(f"{k}={v}" for k, v in sorted(wires.items()))
+            print(f"verify: lane {args.graph!r} wire formats: {fmt} "
+                  f"sieve={lane.get('sieve')}")
         if _verify_depths(lane, results, args.include_parents):
             rc = 1
         else:

@@ -55,10 +55,17 @@ def main():
                     choices=["dense", "queue", "auto"])
     ap.add_argument("--exchange", default="alltoall_direct")
     ap.add_argument("--wire-format", default="auto",
-                    choices=["packed", "bytes", "auto"],
-                    help="dense-phase wire layout: packed uint32 bitset "
-                         "words (8x smaller), uint8 mask bytes, or byte-"
-                         "model auto-selection per phase")
+                    choices=["packed", "bytes", "compressed", "auto"],
+                    help="wire layout: packed uint32 bitset words (dense, "
+                         "8x smaller), uint8 mask bytes / raw int32 ids, "
+                         "delta+varint compressed ids (sparse phases), or "
+                         "byte-model auto-selection per phase")
+    ap.add_argument("--sieve", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="visited-sieve: filter candidate ids against a "
+                         "replicated coarse visited-summary bitmap before "
+                         "the sparse exchange (auto: on when p>1 and the "
+                         "plan has a sparse phase)")
     ap.add_argument("--describe", action="store_true",
                     help="print the compiled plan's full describe() "
                          "metadata — per-phase strategies, the wire "
@@ -96,6 +103,7 @@ def main():
 
     devs = jax.devices()
     p = len(devs)
+    sieve = {"auto": "auto", "on": True, "off": False}[args.sieve]
     if args.partition == "2d":
         if args.grid:
             r, c = (int(x) for x in args.grid.lower().split("x"))
@@ -117,15 +125,18 @@ def main():
         # every mode works over grids: queue levels bucket fold-layout ids
         # down grid columns, auto switches per level (sparse needs S=1)
         opts = BFSOptions(mode=args.mode, fold_exchange=fold,
-                          wire_format=args.wire_format, queue_cap=1 << 15)
+                          wire_format=args.wire_format, sieve=sieve,
+                          queue_cap=1 << 15)
         print(f"grid={r}x{c} (p={r*c}) mode={args.mode} "
-              f"wire={args.wire_format}")
+              f"wire={args.wire_format} sieve={args.sieve}")
     else:
         mesh = Mesh(np.asarray(devs).reshape(p), ("p",))
         axis = "p"
         opts = BFSOptions(mode=args.mode, dense_exchange=args.exchange,
-                          wire_format=args.wire_format, queue_cap=1 << 15)
-        print(f"shards={p} mode={args.mode} wire={args.wire_format}")
+                          wire_format=args.wire_format, sieve=sieve,
+                          queue_cap=1 << 15)
+        print(f"shards={p} mode={args.mode} wire={args.wire_format} "
+              f"sieve={args.sieve}")
 
     cache = default_engine_cache()
     for kind, n, kw in graphs:
@@ -179,11 +190,19 @@ def main():
             res = engine.run(sources)
             run_s = time.time() - t0
             stats = res.stats()
+            hits = int(stats.sieve_hits)
+            # hit-rate: share of would-be enqueued candidates the sieve
+            # dropped before they reached the wire (visited ids that the
+            # coarse replicated summary could already prove discovered)
+            rate = hits / max(1, hits + stats.visited)
+            sieve_str = (f" sieve_hits={hits} ({rate:.0%})"
+                         if meta["sieve"] else "")
             print(f"run[{rep}] sources={sources[:4]}"
                   f"{'...' if len(sources) > 4 else ''}: "
                   f"levels={stats.levels} visited={stats.visited} "
                   f"modes={stats.mode_counts} "
-                  f"comm_bytes/chip={stats.comm_bytes:.2e} wall={run_s:.3f}s")
+                  f"comm_bytes/chip={stats.comm_bytes:.2e} "
+                  f"wall={run_s:.3f}s{sieve_str}")
         assert engine.trace_count == engine.compile_traces, \
             "engine retraced after compile — amortization broken"
 

@@ -106,6 +106,9 @@ class LaneMetrics:
         self.rejected_invalid = 0      # 400s (validation)
         self.bucket_counts: Dict[int, int] = {}
         self.sources_served = 0
+        # cumulative modeled per-chip wire bytes by phase (resolved
+        # plan's per-level pricing x levels each run spent in the phase)
+        self.wire_bytes: Dict[str, float] = {}
         self._ewma_e2e_s = None
 
     # ------------------------------------------------------------ recording
@@ -121,9 +124,12 @@ class LaneMetrics:
             self.failed += 1
 
     def record_completed(self, *, queue_wait_s: float, device_s: float,
-                         e2e_s: float, bucket: int,
-                         n_sources: int) -> None:
+                         e2e_s: float, bucket: int, n_sources: int,
+                         wire_bytes: Optional[Dict[str, float]] = None,
+                         ) -> None:
         with self._lock:
+            for phase, b in (wire_bytes or {}).items():
+                self.wire_bytes[phase] = self.wire_bytes.get(phase, 0.0) + b
             self.queue_wait.observe(queue_wait_s)
             self.device.observe(device_s)
             self.e2e.observe(e2e_s)
@@ -153,6 +159,8 @@ class LaneMetrics:
                 "sources_served": self.sources_served,
                 "buckets": {str(k): v for k, v
                             in sorted(self.bucket_counts.items())},
+                "wire_bytes": {k: round(v, 1) for k, v
+                               in sorted(self.wire_bytes.items())},
                 "queue_wait": self.queue_wait.snapshot(),
                 "device": self.device.snapshot(),
                 "e2e": self.e2e.snapshot(),
@@ -193,10 +201,12 @@ class FrontendMetrics:
         for name, m in self.lanes.items():
             snap = m.snapshot()
             p50 = snap["e2e"]["p50_ms"]
+            wire = sum(snap["wire_bytes"].values())
             parts.append(
                 f"{name}: ok={snap['completed']} 429={snap['rejected']} "
                 f"400={snap['rejected_invalid']} "
-                f"p50={p50 if p50 is not None else '-'}ms")
+                f"p50={p50 if p50 is not None else '-'}ms "
+                f"wire={wire:.2e}B")
         if cache_stats:
             parts.append(f"cache: hit_rate={cache_stats['hit_rate']:.2f} "
                          f"evictions={cache_stats['evictions']}")

@@ -92,6 +92,7 @@ class BFSFrontend:
                            max_inflight_bytes=max_bytes)
             for name in names}
         self.metrics = FrontendMetrics(names)
+        self._level_bytes: Dict[str, dict] = {}   # lane -> phase pricing
         self._cv = threading.Condition()
         self._running = True
         self._draining = False
@@ -255,7 +256,8 @@ class BFSFrontend:
                         device_s=pending.t_done - pending.t_dispatch,
                         e2e_s=pending.t_done - pending.t_admit,
                         bucket=pending.bucket,
-                        n_sources=len(pending.sources))
+                        n_sources=len(pending.sources),
+                        wire_bytes=self._run_wire_bytes(name, res))
                 if pending.t_done is None:
                     pending.t_done = time.monotonic()
                 self.gates[name].complete(cost)
@@ -267,6 +269,20 @@ class BFSFrontend:
                     return
                 if all(g.depth() == 0 for g in self.gates.values()):
                     self._cv.wait(timeout=0.1)
+
+    def _run_wire_bytes(self, name: str, res) -> dict:
+        """Modeled per-chip wire bytes one run moved, split by phase:
+        the lane plan's resolved per-level pricing times the number of
+        levels the run spent in each mode (already synced by block())."""
+        pricing = self._level_bytes.get(name)
+        if pricing is None:
+            meta = self.service.lane(name).plan.describe()
+            pricing = {ph: float(meta[f"{ph}_level_bytes"])
+                       for ph in ("dense", "queue", "bottom_up")}
+            self._level_bytes[name] = pricing
+        counts = res.run_stats.to_host()["mode_counts"]
+        return {ph: pricing[ph] * counts[ph]
+                for ph in pricing if counts[ph]}
 
     def _stats_loop(self) -> None:
         while self._running:
@@ -282,16 +298,19 @@ class BFSFrontend:
         for name in self.service.graph_names():
             lane = self.service.lane(name)
             plan_ = lane.plan
+            meta = plan_.describe()
             info = {
                 "name": name,
                 "n": lane.n_logical,
                 "partition": plan_.partition,
                 "buckets": list(lane.ladder),
                 "slots": len(lane.pool),
+                "wire_formats": dict(meta["wire_formats"]),
+                "sieve": meta["sieve"],
                 "admission": self.gates[name].snapshot(),
             }
             if plan_.partition == "2d":
-                info["grid"] = list(plan_.describe()["grid"])
+                info["grid"] = list(meta["grid"])
             if name in self.graph_specs:
                 info["spec"] = self.graph_specs[name]
             lanes.append(info)

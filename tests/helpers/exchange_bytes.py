@@ -24,6 +24,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
 from repro.core import exchange as ex  # noqa: E402
+from repro.core import frontier as fr  # noqa: E402
 from repro.core.compat import shard_map  # noqa: E402
 from repro.launch.hlo_stats import collective_bytes  # noqa: E402
 
@@ -71,14 +72,28 @@ def main():
 
     for strategy in ex.QUEUE_STRATEGIES:
         fn = functools.partial(ex.exchange_queue, axis="p", strategy=strategy)
-        got = compile_and_parse(
-            fn, P(None, None), P(None, None),
-            (jax.ShapeDtypeStruct((p, cap), jnp.int32),), mesh)
-        want = ex.queue_level_bytes(strategy, p, cap)
+        if ex.get_exchange("queue", strategy).wire == "compressed":
+            # compressed twins ship fixed-size uint8 payloads whose
+            # capacity depends on the id range; density 0.5 = range 2*cap
+            bc = fr.compressed_capacity(cap, 2 * cap)
+            shapes = (jax.ShapeDtypeStruct((p, bc), jnp.uint8),)
+            want = ex.queue_level_bytes(strategy, p, cap, 4, density=0.5)
+        else:
+            shapes = (jax.ShapeDtypeStruct((p, cap), jnp.int32),)
+            want = ex.queue_level_bytes(strategy, p, cap)
+        got = compile_and_parse(fn, P(None, None), P(None, None), shapes,
+                                mesh)
         rel = got["total"] / max(want, 1)
-        print(f"queue/{strategy:16s} model={want:>12.0f}B "
+        print(f"queue/{strategy:28s} model={want:>12.0f}B "
               f"hlo_total={got['total']:>12.0f}B ratio={rel:6.3f}")
         ok &= 0.2 < rel < 2.6
+    # compressed-wire claim: the _compressed twin models well below its
+    # raw-id twin at matched capacity (the sparse-phase byte cut)
+    raw = ex.queue_level_bytes("alltoall_direct", p, cap, 4, density=0.5)
+    comp = ex.queue_level_bytes("alltoall_direct_compressed", p, cap, 4,
+                                density=0.5)
+    print(f"queue/compressed-vs-raw ratio={raw / comp:.2f} (model)")
+    ok &= raw / comp >= 2.0
 
     sys.exit(0 if ok else 1)
 

@@ -210,6 +210,74 @@ def check_wire_format(r, c, n=2000, seed=5):
     return ok
 
 
+def check_sparse_wire(r, c, n=2000, seed=6, include_1d=True):
+    """Compressed sparse-id wire + visited-sieve on the real device set:
+    bitwise parity with the raw-id queue path on both partition schemes,
+    the >= 2x sparse bytes/level reduction (delta+varint ids + summary
+    gather vs raw int32 ids), ``wire_format="auto"``/``sieve="auto"``
+    resolving to compressed+sieve at p=4, and a forced queue_cap
+    overflow staying exact under the compressed wire."""
+    p = r * c
+    src, dst = generate("erdos_renyi", n, seed=seed, avg_degree=8)
+    g = shard_graph(src, dst, n, p)
+    want = bfs_reference(src, dst, n, [0])
+    mesh2 = make_grid_mesh(r, c)
+    mesh1 = Mesh(np.asarray(jax.devices()[:p]).reshape(p), ("p",))
+    meshes = {"2d": (mesh2, None)}
+    if include_1d:
+        meshes["1d"] = (mesh1, "p")
+
+    ok = True
+    for kind, (mesh, axis) in sorted(meshes.items()):
+        k_ok = True
+        per_level, hits = {}, {}
+        for wf, sv in (("bytes", False), ("compressed", True)):
+            eng = plan(g, BFSOptions(mode="queue", wire_format=wf,
+                                     sieve=sv, queue_cap=1024),
+                       mesh=mesh, axis=axis, num_sources=1,
+                       partition=kind).compile()
+            res = eng.run([0])
+            k_ok &= np.array_equal(res.dist_host[:, 0], want[:, 0])
+            st = res.stats()
+            per_level[wf] = st.comm_bytes / max(st.levels, 1)
+            hits[wf] = st.sieve_hits
+            k_ok &= eng.trace_count == eng.compile_traces
+        ratio = per_level["bytes"] / max(per_level["compressed"], 1)
+        k_ok &= ratio >= 2                 # tentpole: sparse bytes halve
+        k_ok &= hits["compressed"] > 0     # the sieve actually dropped ids
+        auto_meta = plan(g, BFSOptions(mode="auto", wire_format="auto",
+                                       sieve="auto", queue_cap=1024),
+                         mesh=mesh, axis=axis, num_sources=1,
+                         partition=kind).describe()
+        # a degenerate grid's peerless sparse phase models 0 bytes both
+        # ways (tie keeps ids) — check the phase that does exchange
+        wf_key = ("queue" if kind == "1d" else
+                  "fold_sparse" if r > 1 else "expand_sparse")
+        k_ok &= auto_meta["wire_formats"][wf_key] == "compressed"
+        k_ok &= auto_meta["sieve"] is True
+        ok &= k_ok
+        print(f"{f'sparse-wire/{kind}/{r}x{c}':55s} "
+              f"ids={per_level['bytes']:.0f}B/level "
+              f"comp={per_level['compressed']:.0f}B/level ratio={ratio:.1f} "
+              f"sieve_hits={hits['compressed']} "
+              f"auto={auto_meta['wire_formats'][wf_key]} "
+              f"-> {'OK' if k_ok else 'MISMATCH'}")
+
+    # forced overflow under the compressed wire: the dense escalation
+    # must stay bitwise exact and flag overflowed
+    eng = plan(g, BFSOptions(mode="queue", wire_format="compressed",
+                             sieve=True, queue_cap=8), mesh=mesh2,
+               num_sources=1, partition="2d").compile()
+    res = eng.run([0])
+    o_ok = np.array_equal(res.dist_host[:, 0], want[:, 0])
+    o_ok &= res.stats().overflowed
+    ok &= o_ok
+    print(f"{f'sparse-wire/overflow/{r}x{c}/cap=8':55s} "
+          f"ovf={res.stats().overflowed} "
+          f"-> {'OK' if o_ok else 'MISMATCH'}")
+    return ok
+
+
 def check_multi_graph_serving(r, c, n=2000, seed=1):
     """Multi-tenant serving over real device meshes: one ``BFSService``
     with mixed 1-D (all-p row) and 2-D (r x c grid) lanes behind a
@@ -331,6 +399,10 @@ def main():
     # packed-bitset wire format: parity + >= 4x dense-byte reduction +
     # auto resolution, 1-D and 2-D, alongside the bytes-path runs above
     ok &= check_wire_format(args.rows, args.cols)
+    # compressed sparse-id wire + visited-sieve: parity, >= 2x sparse
+    # byte reduction, auto resolution, overflow escalation (2x2 + 4x1)
+    ok &= check_sparse_wire(args.rows, args.cols)
+    ok &= check_sparse_wire(4, 1, include_1d=False)
     # multi-tenant serving: mixed 1-D/2-D lanes, shared engine cache,
     # compile-once accounting + budget-forced eviction recovery
     ok &= check_multi_graph_serving(args.rows, args.cols)

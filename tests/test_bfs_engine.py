@@ -144,7 +144,9 @@ def test_bfs_wrapper_deprecated_but_equivalent_and_cached():
 
 def test_exchange_registry_views_and_errors():
     assert "alltoall_direct" in DENSE_STRATEGIES
-    assert set(ex.QUEUE_STRATEGIES) == {"allgather_merge", "alltoall_direct"}
+    assert set(ex.QUEUE_STRATEGIES) == {
+        "allgather_merge", "alltoall_direct",
+        "allgather_merge_compressed", "alltoall_direct_compressed"}
     with pytest.raises(ValueError, match="registered"):
         ex.get_exchange("dense", "missing_strategy")
     with pytest.raises(ValueError, match="kind"):

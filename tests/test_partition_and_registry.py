@@ -186,9 +186,12 @@ def test_select_exchange_picks_cheapest_by_model():
     assert pl2.expand_sparse_strategy.name in EXPAND_ROW_SPARSE_STRATEGIES
     assert pl2.fold_sparse_strategy.name in FOLD_COL_SPARSE_STRATEGIES
     # off the degenerate 1x1 grid the direct fold is strictly cheaper:
-    # (r-1)*cap received vs allgather_merge's (r-1)*r*cap
+    # (r-1)*cap received vs allgather_merge's (r-1)*r*cap; unrestricted
+    # selection lands on its compressed twin (fewer modeled bytes still)
+    assert ex.select_exchange("fold_col_sparse", 4, 2, 1024, 4,
+                              wire="bytes").name == "alltoall_direct"
     assert ex.select_exchange("fold_col_sparse", 4, 2, 1024,
-                              4).name == "alltoall_direct"
+                              4).name == "alltoall_direct_compressed"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,298 @@
+"""Compressed sparse-id wire format + visited sieve: codec byte-layout
+and roundtrip boundaries (vs an independent numpy encoder), the
+capacity-overflow boundary, the bitmap-adaptive branch, sieve summary /
+lookup semantics, plan-time resolution of the compressed tier, and
+single-device engine parity including the overflow->dense escalation
+(multi-device parity lives in tests/helpers/grid_bfs.py)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (BFSOptions, plan, register_exchange,
+                        unregister_exchange)
+from repro.core import exchange as ex
+from repro.core import frontier as fr
+from repro.core.ref import bfs_reference
+from repro.graphs import generate, shard_graph
+
+
+def _encode_ref(ids, byte_cap, id_range):
+    """Independent numpy encoder — no shared code with frontier's
+    jnp codec.  Returns ``(buf (byte_cap,) uint8, overflow bool)``."""
+    live = sorted(int(i) for i in ids if 0 <= int(i) < id_range)
+    out = bytearray()
+    prev = 0
+    for v in live:
+        d = v - prev
+        prev = v
+        while True:
+            b = d & 0x7F
+            d >>= 7
+            if d:
+                out.append(b | 0x80)
+            else:
+                out.append(b)
+                break
+    total = 4 + len(out)
+    w = -(-id_range // 32)
+    bitmap_fits = 4 + 4 * w <= byte_cap
+    use_bitmap = bitmap_fits and total > 4 + 4 * w
+    hdr = len(live) | (0x80000000 if use_bitmap else 0)
+    buf = np.zeros(byte_cap, np.uint8)
+    buf[0:4] = np.frombuffer(np.uint32(hdr).tobytes(), np.uint8)
+    if use_bitmap:
+        words = np.zeros(w, np.uint32)
+        for v in live:
+            words[v // 32] |= np.uint32(1) << np.uint32(v % 32)
+        buf[4:4 + 4 * w] = np.frombuffer(words.tobytes(), np.uint8)
+        return buf, False
+    payload = np.frombuffer(bytes(out[: max(0, byte_cap - 4)]), np.uint8)
+    buf[4:4 + payload.shape[0]] = payload
+    return buf, (total > byte_cap and not bitmap_fits)
+
+
+# ---------------------------------------------------------------------------
+# codec byte layout + roundtrip boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cap,id_range", [
+    (1, 1),         # single id
+    (5, 40),        # n < 32
+    (31, 31),       # just below one bitmap word
+    (32, 64),       # exactly one word of range
+    (33, 100),      # n % 32 != 0
+    (256, 500),     # dense regime: bitmap capacity wins statically
+    (64, 4096),     # sparse regime: varints win
+])
+def test_codec_roundtrip_and_byte_layout(cap, id_range):
+    rng = np.random.default_rng(cap * 1000 + id_range)
+    byte_cap = fr.compressed_capacity(cap, id_range)
+    for frac in (0.0, 0.3, 1.0):    # empty / partial / full frontier
+        k = int(round(min(cap, id_range) * frac))
+        pick = rng.choice(id_range, size=k, replace=False).astype(np.int32)
+        ids = np.full(cap, -1, np.int32)
+        ids[:k] = pick              # deliberately unsorted (bucket order)
+        buf, ovf = fr.encode_delta_varint(jnp.asarray(ids), byte_cap,
+                                          id_range)
+        ref_buf, ref_ovf = _encode_ref(ids, byte_cap, id_range)
+        assert bool(ovf) == ref_ovf
+        assert not ref_ovf          # capacity headroom covers these
+        np.testing.assert_array_equal(np.asarray(buf), ref_buf)
+        back = np.asarray(fr.decode_delta_varint(buf, cap, id_range))
+        want = np.full(cap, -1, np.int32)
+        want[:k] = np.sort(pick)
+        np.testing.assert_array_equal(back, want)
+
+
+def test_codec_capacity_overflow_boundary():
+    # 8 ids spaced 100000 apart: 3 varint bytes each, 28 total; the range
+    # is too wide for a bitmap rescue, so byte_cap 28 fits exactly and 27
+    # must raise the overflow flag (the escalation predicate's input)
+    id_range = 1 << 20
+    ids = jnp.asarray(np.arange(1, 9, dtype=np.int32) * 100000)
+    buf, ovf = fr.encode_delta_varint(ids, 28, id_range)
+    assert not bool(ovf)
+    back = np.asarray(fr.decode_delta_varint(buf, 8, id_range))
+    np.testing.assert_array_equal(back, np.arange(1, 9) * 100000)
+    _, ovf = fr.encode_delta_varint(ids, 27, id_range)
+    assert bool(ovf)
+
+
+def test_codec_bitmap_rescue_is_overflow_free():
+    # every id of a small range: the varint stream would spill, but the
+    # bitmap statically fits, so the encoder flips to bitmap mode and
+    # overflow stays impossible
+    cap = id_range = 96
+    byte_cap = fr.compressed_capacity(cap, id_range)
+    assert byte_cap == 4 + 4 * fr.packed_words(id_range)
+    ids = jnp.asarray(np.arange(id_range, dtype=np.int32))
+    buf, ovf = fr.encode_delta_varint(ids, byte_cap, id_range)
+    assert not bool(ovf)
+    hdr = np.asarray(buf[:4]).view(np.uint32)[0]
+    assert hdr >> 31 == 1           # bitmap mode bit
+    back = np.asarray(fr.decode_delta_varint(buf, cap, id_range))
+    np.testing.assert_array_equal(back, np.arange(id_range))
+
+
+def test_codec_property_roundtrip():
+    hyp = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import given, settings, strategies as st
+
+    caps = [1, 5, 32, 33, 64]               # bounded shape set: the jit
+    ranges = [1, 31, 64, 500, 4096]         # cache stays warm across draws
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def run(data):
+        cap = data.draw(st.sampled_from(caps))
+        id_range = data.draw(st.sampled_from(ranges))
+        k = data.draw(st.integers(0, min(cap, id_range)))
+        pick = sorted(data.draw(st.sets(st.integers(0, id_range - 1),
+                                        min_size=k, max_size=k)))
+        ids = np.full(cap, -1, np.int32)
+        ids[:k] = np.asarray(pick, np.int32)
+        byte_cap = fr.compressed_capacity(cap, id_range)
+        buf, ovf = fr.encode_delta_varint(jnp.asarray(ids), byte_cap,
+                                          id_range)
+        if bool(ovf):
+            return                  # escalation arm; decode not required
+        back = np.asarray(fr.decode_delta_varint(buf, cap, id_range))
+        want = np.full(cap, -1, np.int32)
+        want[:k] = np.asarray(pick, np.int32)
+        np.testing.assert_array_equal(back, want)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# visited sieve: summary + lookup semantics
+# ---------------------------------------------------------------------------
+
+def test_sieve_summary_and_lookup():
+    shard = 2048                    # bucket width 2 under SIEVE_MAX_BITS
+    bits, bucket, words = fr.sieve_layout(shard)
+    assert bucket == 2 and bits * bucket >= shard
+    dist = np.full(shard, int(fr.INF), np.int32)
+    dist[0:bucket] = 1              # bucket 0 fully visited
+    dist[bucket] = 1                # bucket 1 only half visited
+    s0 = np.asarray(fr.sieve_summary(jnp.asarray(dist), bits, bucket))
+    empty = np.full(shard, int(fr.INF), np.int32)
+    s1 = np.asarray(fr.sieve_summary(jnp.asarray(empty), bits, bucket))
+    gwords = jnp.asarray(np.concatenate([s0, s1]))
+    gids = jnp.asarray(
+        [0, bucket - 1,             # bucket 0 of shard 0: sieved
+         bucket,                    # half-visited bucket: must pass
+         shard,                     # shard 1, nothing visited: must pass
+         -1])                       # padding: never a hit
+    hit = np.asarray(fr.sieve_lookup(gwords, gids, shard, bits, bucket,
+                                     words))
+    np.testing.assert_array_equal(hit, [True, True, False, False, False])
+
+
+def test_sieve_straddling_pad_counts_visited():
+    # a final bucket that straddles the shard end: its pad slots count as
+    # visited (they can never be candidates), so visiting the one real
+    # vertex completes the bucket
+    shard = 2050
+    bits, bucket, words = fr.sieve_layout(shard)
+    assert bits * bucket > shard
+    dist = np.full(shard, int(fr.INF), np.int32)
+    dist[(bits - 1) * bucket:] = 1
+    s = fr.sieve_summary(jnp.asarray(dist), bits, bucket)
+    hit = np.asarray(fr.sieve_lookup(s, jnp.asarray([shard - 1]), shard,
+                                     bits, bucket, words))
+    assert hit[0]
+
+
+# ---------------------------------------------------------------------------
+# plan-time resolution of the compressed tier + sieve knob
+# ---------------------------------------------------------------------------
+
+def _graph(n=300, p=1, seed=1):
+    src, dst = generate("erdos_renyi", n, seed=seed, avg_degree=5)
+    return src, dst, shard_graph(src, dst, n, p)
+
+
+def test_wire_format_compressed_resolution():
+    _, _, g = _graph()
+    pl = plan(g, BFSOptions(mode="queue", wire_format="compressed"))
+    assert pl.queue_strategy.name == "alltoall_direct_compressed"
+    assert pl.dense_strategy.wire == "packed"   # densest dense tier
+    assert pl.describe()["wire_formats"]["queue"] == "compressed"
+    # 2-D: both sparse phases resolve their compressed twins
+    pl2 = plan(g, BFSOptions(mode="queue", wire_format="compressed"),
+               partition="2d")
+    assert pl2.expand_sparse_strategy.name == "allgather_compressed"
+    assert pl2.fold_sparse_strategy.name == "alltoall_direct_compressed"
+    meta = pl2.describe()
+    assert meta["wire_formats"]["expand_sparse"] == "compressed"
+    assert meta["wire_formats"]["fold_sparse"] == "compressed"
+    # "packed" leaves sparse phases on raw ids (no sparse bitset tier)
+    pl3 = plan(g, BFSOptions(mode="queue", wire_format="packed"))
+    assert pl3.queue_strategy.wire == "bytes"
+    assert pl3.describe()["wire_formats"]["queue"] == "ids"
+    # a pinned strategy with no compressed twin fails loudly; auto degrades
+    name = "tmp_ids_only_queue"
+    register_exchange("queue", name,
+                      lambda p, cap, itemsize, density=1.0: 0.0)(
+        lambda buckets, axis: buckets)
+    try:
+        with pytest.raises(ValueError, match="no compressed variant"):
+            plan(g, BFSOptions(mode="queue", queue_exchange=name,
+                               wire_format="compressed"))
+        pl4 = plan(g, BFSOptions(mode="queue", queue_exchange=name,
+                                 wire_format="auto"))
+        assert pl4.queue_strategy.name == name
+    finally:
+        unregister_exchange("queue", name)
+
+
+def test_sieve_resolution_and_plan_key():
+    _, _, g = _graph()
+    pl = plan(g, BFSOptions(mode="queue"))      # sieve="auto", p=1
+    assert pl.sieve is False                    # nothing crosses the wire
+    pl_on = plan(g, BFSOptions(mode="queue", sieve=True))
+    assert pl_on.sieve is True
+    assert pl.plan_key() != pl_on.plan_key()    # cache must not mix them
+    assert pl_on.describe()["sieve"] is True
+    # dense mode and multi-source plans force the sieve off even when asked
+    assert plan(g, BFSOptions(mode="dense", sieve=True)).sieve is False
+    assert plan(g, BFSOptions(mode="auto", sieve=True),
+                num_sources=2).sieve is False
+    with pytest.raises(ValueError, match="sieve"):
+        BFSOptions(sieve="yes").validate()
+    with pytest.raises(ValueError, match="wire_format"):
+        BFSOptions(wire_format="zstd").validate()
+
+
+def test_compressed_models_beat_raw_at_low_density():
+    # the registered byte models must price the compressed twin below raw
+    # ids at paper-like frontier densities — what auto-selection rides on
+    p, cap = 4, 256
+    raw = ex.queue_level_bytes("alltoall_direct", p, cap, 4, density=0.5)
+    comp = ex.queue_level_bytes("alltoall_direct_compressed", p, cap, 4,
+                                density=0.5)
+    assert raw / comp >= 2.0
+    raw2 = ex.grid_sparse_level_bytes("allgather", "alltoall_direct",
+                                      2, 2, cap, 4, density=0.5)
+    comp2 = ex.grid_sparse_level_bytes(
+        "allgather_compressed", "alltoall_direct_compressed",
+        2, 2, cap, 4, density=0.5)
+    assert raw2 / comp2 >= 2.0
+
+
+# ---------------------------------------------------------------------------
+# single-device engine parity (multi-device: tests/helpers/grid_bfs.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["1d", "2d"])
+@pytest.mark.parametrize("mode", ["queue", "auto"])
+def test_engine_parity_compressed_sieve(partition, mode):
+    n = 500
+    src, dst, g = _graph(n=n, seed=4)
+    want = bfs_reference(src, dst, n, [0])
+    eng = plan(g, BFSOptions(mode=mode, wire_format="compressed",
+                             sieve=True, queue_cap=512),
+               partition=partition).compile()
+    res = eng.run([0])
+    np.testing.assert_array_equal(res.dist_host, want)
+    assert eng.trace_count == eng.compile_traces
+    assert res.run_stats.to_host()["sieve_hits"] >= 0
+
+
+@pytest.mark.parametrize("partition", ["1d", "2d"])
+def test_overflow_escalation_stays_exact_compressed(partition):
+    # a queue_cap far below the frontier forces the overflow->dense
+    # escalation arm with the compressed wire + sieve active
+    # (local_update off so candidates actually enqueue at p=1)
+    n = 400
+    src, dst, g = _graph(n=n, seed=4)
+    want = bfs_reference(src, dst, n, [0])
+    eng = plan(g, BFSOptions(mode="queue", wire_format="compressed",
+                             sieve=True, queue_cap=8, local_update=False),
+               partition=partition).compile()
+    res = eng.run([0])
+    np.testing.assert_array_equal(res.dist_host, want)
+    assert res.stats().overflowed
