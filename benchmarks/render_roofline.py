@@ -126,6 +126,34 @@ def render_serving_latency(data):
           "engines")
 
 
+def render_audit(data):
+    """BENCH_audit.json: per-variant audit verdicts + violation digest."""
+    a = data["audit"]
+    g = a["graph"]
+    print(f"audit of {g['kind']} n={g['n']} on p={a['p']} "
+          f"(grid {a['grid'][0]}x{a['grid'][1]}, byte tolerance "
+          f"{a['tolerance']}): {'PASS' if a['ok'] else 'FAIL'}\n")
+    print("| report | verdict | loop data colls | control | violations "
+          "| suppressed |")
+    print("|---|---|---|---|---|---|")
+    for rep in a["reports"]:
+        coll = rep.get("info", {}).get("collectives", {})
+        vs = rep.get("violations", [])
+        n_sup = sum(1 for v in vs if v.get("suppressed"))
+        n_live = len(vs) - n_sup
+        print(f"| {rep['name']} | {'ok' if rep.get('ok') else 'FAIL'} "
+              f"| {coll.get('loop_data', '-')} "
+              f"| {coll.get('loop_control', '-')} "
+              f"| {n_live} | {n_sup} |")
+    lines = [f"{v['rule']}: {v['message']}"
+             for rep in a["reports"]
+             for v in rep.get("violations", []) if not v.get("suppressed")]
+    if lines:
+        print("\nunsuppressed violations:")
+        for ln in lines:
+            print(f"  {ln}")
+
+
 def render_dryrun(data):
     print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
           "t_collective (s) | bottleneck | GiB/dev | useful-flops ratio |")
@@ -181,6 +209,10 @@ def main(path):
             print("(no partition_sweep or serving rows in this ledger — "
                   "run benchmarks/run.py without --only, or with "
                   "--only partition / --only serving)")
+        return
+    if "audit" in data:
+        # the standalone BENCH_audit.json ledger (launch/bfs_audit --out)
+        render_audit(data)
         return
     if "rows" in data:
         render_dryrun(data)

@@ -1,0 +1,21 @@
+"""Static analysis passes over the plan/compile/serve stack.
+
+Three auditors, one report format (``analysis.report.AuditReport``):
+
+* ``analysis.hlo_audit`` — parse a compiled engine's HLO into a
+  collective census and assert it against the plan's resolved
+  strategies and byte models (plus donation / retrace / host-transfer
+  checks).  Rules HA001-HA007.
+* ``analysis.lint`` — AST lints over ``src/repro``: exchange-registry
+  signature/purity/twin discipline and compiled-loop hygiene.  Rules
+  RX001-RX005.
+* ``analysis.locks`` — guarded-by annotation checking and lock-order
+  cycle detection over ``serve/``.  Rules LK001-LK003.
+
+CLI: ``python -m repro.launch.bfs_audit`` (the CI gate); inline:
+``bfs_run --audit``.  Suppressions: ``# audit: allow(<rule>) -- reason``.
+"""
+
+from repro.analysis.report import AuditReport, Violation, RULES
+
+__all__ = ["AuditReport", "Violation", "RULES"]

@@ -1,0 +1,488 @@
+"""HLO plan auditor: does the compiled loop match the plan's accounting?
+
+The paper's contribution is disciplined communication — every level's
+collective and its byte cost is known ahead of time — and the repo
+encodes that as analytic byte models the planner trusts blindly.  This
+pass closes the loop: it parses ``BFSEngine.compiled_hlo()`` into a
+collective *census* (op kind, replica groups, payload bytes, loop
+membership, source attribution) and statically asserts it against the
+plan's resolved strategies:
+
+  * every reachable exchange role (dense / queue / expand / fold /
+    sparse twins / sieve gather / bottom-up gather) appears in the
+    while body (HA001), and nothing unpriced does (HA002);
+  * per role, the bytes a chip *receives* through the collective agree
+    with the registered byte model within a documented tolerance
+    (HA003) — the census converts HLO output-shape bytes to received
+    bytes per op kind (all-gather/all-to-all: ``out*(g-1)/g``,
+    reduce-scatter: ``out*(g-1)``, all-reduce ring: ``out*2*(g-1)/g``);
+  * replica groups span the mesh axis the role runs over (HA007);
+  * the dist buffer is really donated — ``input_output_alias`` maps
+    output ``{0}`` back to the dist parameter, no hidden copy (HA004);
+  * no infeed/outfeed/send/recv hides inside the loop (HA005);
+  * optionally, two traversals from distinct sources leave
+    ``trace_count`` pinned at ``compile_traces`` (HA006).
+
+Small all-reduces (<= ``CONTROL_CUTOFF`` bytes) are the loop's control
+plane — termination/overflow/mode psums — and are censused but never
+priced.  Everything lands in an ``AuditReport`` consumed by tests,
+``bfs_run --audit`` and the ``bfs_audit`` CI gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import re
+from typing import List, Optional, Sequence
+
+from repro.analysis.report import AuditReport
+from repro.launch.hlo_parse import _shape_bytes, _split_computations
+
+# Replicated scalar psums (termination, overflow, mode pick, sieve-hit
+# and byte accumulators) are control flow, not payload; anything bigger
+# than this many bytes must be priced by a byte model.
+CONTROL_CUTOFF = 1024
+
+# Documented tolerance on HLO-received vs modeled bytes per role.  The
+# models are exact for every wire tier (verified per-strategy), so the
+# band mostly absorbs dtype widening (bf16 reduce tiers) and backend
+# padding; drift beyond it means a mis-registered model.
+DEFAULT_TOLERANCE = (0.3, 3.0)
+
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|all-to-all|"
+    r"reduce-scatter|collective-permute-start|collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{((?:\{[0-9,]*\},?)*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_SOURCE_RE = re.compile(r'source_file="([^"]*)".*?source_line=(\d+)')
+_REF_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_ALIAS_RE = re.compile(r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
+_ALIAS_ENTRY_RE = re.compile(r"\{([0-9,\s]*)\}:\s*\((\d+)")
+_PARAM_RE = re.compile(r"=\s*([a-z][a-z0-9]*)\[[^\]]*\]\S*\s+parameter\((\d+)\)")
+_HOST_RE = re.compile(
+    r"=\s*\S+\s+(infeed|outfeed|send-done|recv-done|send|recv)\(")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One collective instruction from the optimized HLO."""
+
+    kind: str                 # all-gather | all-to-all | ... (-start folded)
+    out_bytes: float          # output shape bytes (tuple ops: summed)
+    recv_bytes: float         # bytes received per participant (see module doc)
+    group_size: int           # replica group size (0 = no groups attribute)
+    n_groups: int
+    computation: str
+    in_loop: bool
+    source: str               # "exchange.py:351" attribution, best effort
+    op_name: str = ""
+    role: str = ""            # census role after matching ("" = unmatched)
+    model_bytes: float = 0.0  # per-instance model of the matched role
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Role:
+    """One exchange the plan prices: what the census must account for."""
+
+    name: str
+    kinds: tuple              # HLO op kinds this strategy may lower to
+    model_bytes: float        # modeled bytes received per chip per instance
+    group: Optional[int]      # expected replica-group size (None: skip)
+    required: bool            # must appear in the loop at least once
+    per_op: bool = True       # True: each op ~ model; False: sum(ops) ~ model
+                              # (False for the chained both-axes gathers,
+                              # whose staged received bytes telescope to the
+                              # single-gather total)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _recv_bytes(kind: str, out_bytes: float, g: int) -> float:
+    """Bytes received per participant given the op's output bytes."""
+    if g <= 1:
+        return 0.0
+    if kind in ("all-gather", "all-to-all"):
+        return out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if kind == "all-reduce":
+        return out_bytes * 2 * (g - 1) / g     # ring lower bound
+    return out_bytes                            # collective-permute et al.
+
+
+def _loop_computations(comps: dict) -> set:
+    """Names of computations transitively reachable from any while body."""
+    roots = set()
+    for name, lines in comps.items():
+        if name == "__entry_name__":
+            continue
+        for ln in lines:
+            if "body=" in ln:
+                roots.update(re.findall(r"body=%?([\w\.\-]+)", ln))
+    seen: set = set()
+    stack = list(roots)
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for ln in comps[c]:
+            stack.extend(r for r in _REF_RE.findall(ln) if r not in seen)
+            bm = _BRANCH_RE.search(ln)
+            if bm:
+                stack.extend(x.strip().lstrip("%")
+                             for x in bm.group(1).split(",") if x.strip())
+    return seen
+
+
+def _parse_groups(line: str):
+    """(group_size, n_groups) from either replica_groups syntax; (0, 0)
+    when the attribute is absent."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        groups = [g for g in re.findall(r"\{([0-9,]*)\}", m.group(0))]
+        sizes = [len([x for x in g.split(",") if x]) for g in groups]
+        if sizes:
+            return max(sizes), len(sizes)
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2)), int(m.group(1))
+    return 0, 0
+
+
+def census(hlo_text: str) -> List[CollectiveOp]:
+    """Parse every collective in the module into a CollectiveOp row."""
+    comps = _split_computations(hlo_text)
+    comps.pop("__entry_name__", None)
+    loop = _loop_computations(comps)
+    ops: List[CollectiveOp] = []
+    for comp, lines in comps.items():
+        for ln in lines:
+            m = _OP_RE.search(ln)
+            if not m:
+                continue
+            kind = m.group(2).replace("-start", "")
+            out_bytes = float(_shape_bytes(m.group(1)))
+            g, n_groups = _parse_groups(ln)
+            op_name_m = _OPNAME_RE.search(ln)
+            op_name = op_name_m.group(1) if op_name_m else ""
+            src_m = _SOURCE_RE.search(ln)
+            source = (f"{os.path.basename(src_m.group(1))}:{src_m.group(2)}"
+                      if src_m else "")
+            ops.append(CollectiveOp(
+                kind=kind, out_bytes=out_bytes,
+                recv_bytes=_recv_bytes(kind, out_bytes, g),
+                group_size=g, n_groups=n_groups, computation=comp,
+                in_loop=comp in loop or "/while/" in op_name,
+                source=source, op_name=op_name))
+    return ops
+
+
+def _strategy_kinds(name: str) -> tuple:
+    """HLO op kinds a registered exchange strategy may lower to.
+
+    Packed reduce-scatter twins route word blocks via all_to_all (psum
+    carries across bit lanes), so only the bytes-tier ``reduce_scatter``
+    names lower to a reduce-scatter op.
+    """
+    if "hierarchical" in name:
+        return ("all-to-all", "all-gather", "reduce-scatter", "all-reduce",
+                "collective-permute")
+    if "reduce_scatter" in name and not name.endswith("_packed"):
+        return ("reduce-scatter", "all-reduce")
+    if "alltoall" in name or "reduce_scatter" in name:
+        return ("all-to-all",)
+    if "allgather" in name:
+        return ("all-gather",)
+    return ("all-to-all", "all-gather", "reduce-scatter")
+
+
+def roles_for_plan(plan) -> List[Role]:
+    """Derive the expected census roles from a resolved BFSPlan.
+
+    Reachability mirrors core/bfs.py: dense runs in every mode (it is
+    the queue path's overflow escalation), the sparse path needs S=1,
+    bottom-up exists only under ``auto``, and the sieve gather rides
+    inside each queue level when the plan resolved it on.  A role with a
+    zero byte model (p=1, or a peerless grid axis) is never required —
+    XLA elides the degenerate collective entirely.
+    """
+    from repro.core import frontier as fr
+    from repro.core import exchange as ex
+
+    d = plan.describe()
+    mode, s = d["mode"], d["num_sources"]
+    queue_reachable = mode == "queue" or (mode == "auto" and s == 1)
+    roles: List[Role] = []
+
+    def role(name, strategy_name, model, group, required, per_op=True,
+             kinds=None):
+        roles.append(Role(
+            name=name,
+            kinds=kinds or _strategy_kinds(strategy_name),
+            model_bytes=float(model), group=group,
+            required=bool(required and model > 0), per_op=per_op))
+
+    if d["partition"] == "2d":
+        r, c = d["grid"]
+        p = r * c
+        pb = d["phase_bytes"]
+        role("expand", d["expand_exchange"], pb["expand"],
+             c if c > 1 else None, True)
+        role("fold", d["fold_exchange"], pb["fold"],
+             r if r > 1 else None, True)
+        if queue_reachable:
+            role("expand_sparse", d["expand_sparse_exchange"],
+                 pb["expand_sparse"], c if c > 1 else None, True)
+            role("fold_sparse", d["fold_sparse_exchange"],
+                 pb["fold_sparse"], r if r > 1 else None, True)
+            if d["sieve"]:
+                b = d["shard_size"]
+                sieve_b = (p - 1) * fr.sieve_layout(b)[2] * 4
+                role("sieve", "allgather", sieve_b, None, True,
+                     per_op=False, kinds=("all-gather",))
+        if mode == "auto":
+            role("bottom_up", "allgather", d["bottom_up_level_bytes"],
+                 None, True, per_op=False, kinds=("all-gather",))
+    else:
+        p = d["p"]
+        role("dense", d["dense_exchange"], d["dense_level_bytes"],
+             p if len(d["axes_sizes"]) == 1 else None, True)
+        if queue_reachable:
+            sieve_b = ((p - 1) * fr.sieve_layout(d["shard_size"])[2] * 4
+                       if d["sieve"] else 0.0)
+            role("queue", d["queue_exchange"],
+                 d["queue_level_bytes"] - sieve_b, p, True)
+            if d["sieve"]:
+                role("sieve", "allgather", sieve_b, p, True,
+                     per_op=False, kinds=("all-gather",))
+        if mode == "auto":
+            role("bottom_up", "allgather",
+                 ex.bottomup_level_bytes(d["n"], p, s, 1,
+                                         wire=plan.bottom_up_wire),
+                 p, True, per_op=False, kinds=("all-gather",))
+    return roles
+
+
+def match_census(ops: Sequence[CollectiveOp], roles: Sequence[Role],
+                 report: AuditReport,
+                 tolerance=DEFAULT_TOLERANCE) -> dict:
+    """Assign loop collectives to roles and assert the byte accounting.
+
+    Greedy assignment: each non-control loop op goes to the candidate
+    role (kind-compatible, nonzero model) whose model is nearest in log
+    space.  Violations land on ``report``; returns {role: [ops]}.
+    """
+    lo, hi = tolerance
+    assigned = {role.name: [] for role in roles}
+    for op in ops:
+        if not op.in_loop:
+            op.role = "outside_loop"
+            continue
+        if op.kind == "all-reduce" and op.out_bytes <= CONTROL_CUTOFF:
+            op.role = "control"
+            continue
+        if op.group_size <= 1 or op.recv_bytes <= 0:
+            # a collective over a group of one moves no data; XLA keeps
+            # some of these at p=1 instead of eliding them
+            op.role = "degenerate"
+            continue
+        cands = [role for role in roles
+                 if op.kind in role.kinds and role.model_bytes > 0]
+        if not cands:
+            op.role = "unpriced"
+            report.add("HA002",
+                       f"{op.kind} at {op.source or op.computation} "
+                       f"({op.recv_bytes:.0f} B received, group "
+                       f"{op.group_size}) matches no plan byte model")
+            continue
+        best = min(cands, key=lambda role: abs(
+            math.log(max(op.recv_bytes, 1e-9) / role.model_bytes)))
+        op.role = best.name
+        op.model_bytes = best.model_bytes
+        assigned[best.name].append(op)
+
+    # exact size ties (e.g. the packed bottom-up gather and the sieve
+    # gather both ship W uint32 words per shard) can strand a required
+    # role while its twin collects both ops — let an empty required
+    # role steal a tolerance-compatible op from a role holding several
+    for role in roles:
+        if assigned[role.name] or not role.required:
+            continue
+        donors = [op for other in roles
+                  if other.name != role.name
+                  and len(assigned[other.name]) > 1
+                  for op in assigned[other.name]
+                  if op.kind in role.kinds
+                  and lo <= op.recv_bytes / role.model_bytes <= hi]
+        if donors:
+            op = min(donors, key=lambda o: abs(
+                math.log(o.recv_bytes / role.model_bytes)))
+            assigned[op.role].remove(op)
+            op.role = role.name
+            op.model_bytes = role.model_bytes
+            assigned[role.name].append(op)
+
+    for role in roles:
+        matched = assigned[role.name]
+        if not matched:
+            if role.required:
+                report.add("HA001",
+                           f"role '{role.name}' (model "
+                           f"{role.model_bytes:.0f} B, kinds "
+                           f"{'/'.join(role.kinds)}) has no collective "
+                           "in the compiled loop")
+            continue
+        if role.per_op:
+            for op in matched:
+                ratio = op.recv_bytes / role.model_bytes
+                if not lo <= ratio <= hi:
+                    report.add("HA003",
+                               f"role '{role.name}' at "
+                               f"{op.source or op.computation}: HLO "
+                               f"{op.recv_bytes:.0f} B received vs model "
+                               f"{role.model_bytes:.0f} B "
+                               f"(ratio {ratio:.3f} outside "
+                               f"[{lo}, {hi}])")
+        else:
+            total = sum(op.recv_bytes for op in matched)
+            ratio = total / role.model_bytes
+            if not lo <= ratio <= hi:
+                report.add("HA003",
+                           f"role '{role.name}': HLO {total:.0f} B "
+                           f"received over {len(matched)} op(s) vs model "
+                           f"{role.model_bytes:.0f} B (ratio {ratio:.3f} "
+                           f"outside [{lo}, {hi}])")
+        if role.group:
+            for op in matched:
+                if op.group_size and op.group_size != role.group:
+                    report.add("HA007",
+                               f"role '{role.name}' at "
+                               f"{op.source or op.computation}: replica "
+                               f"group size {op.group_size} != expected "
+                               f"{role.group}")
+    return assigned
+
+
+def donation_check(hlo_text: str, report: AuditReport,
+                   expected_dtype: str = "s32") -> None:
+    """HA004: the dist buffer (output tuple index 0) must alias an input.
+
+    The aliased parameter's declared element type must be the dist
+    buffer's (``s32``).  The parameter *index* is not predictable from
+    the Python signature because ``jit`` prunes unused edge buffers
+    (``keep_unused=False``), but output ``{0}`` is dist by construction
+    and aliasing requires a shape/type match, so any alias for output 0
+    is the dist donation.
+    """
+    m = _ALIAS_RE.search(hlo_text)
+    entries = _ALIAS_ENTRY_RE.findall(m.group(1)) if m else []
+    dist = [int(param) for out, param in entries if out.strip() == "0"]
+    if not dist:
+        report.add("HA004",
+                   "no input_output_alias entry for output {0}: the "
+                   "donated dist buffer is copied, not aliased")
+        return
+    report.info.setdefault("donation", {})["dist_param"] = dist[0]
+    if expected_dtype:
+        comps = _split_computations(hlo_text)
+        entry = comps.get(comps.get("__entry_name__", ""), ())
+        dtypes = {int(mm.group(2)): mm.group(1) for mm in
+                  (_PARAM_RE.search(ln) for ln in entry) if mm}
+        got = dtypes.get(dist[0])
+        if got is not None and got != expected_dtype:
+            report.add("HA004",
+                       f"dist output aliases parameter {dist[0]} of "
+                       f"type {got}, expected the {expected_dtype} dist "
+                       "buffer")
+
+
+def host_transfer_check(hlo_text: str, report: AuditReport) -> None:
+    """HA005: no infeed/outfeed/send/recv inside while-loop computations."""
+    comps = _split_computations(hlo_text)
+    comps.pop("__entry_name__", None)
+    loop = _loop_computations(comps)
+    for comp in loop:
+        for ln in comps.get(comp, ()):
+            m = _HOST_RE.search(ln)
+            if m:
+                report.add("HA005",
+                           f"host transfer '{m.group(1)}' inside loop "
+                           f"computation '{comp}'")
+
+
+def retrace_check(engine, report: AuditReport) -> None:
+    """HA006: two distinct-source runs must not grow the trace count."""
+    n_logical = engine.plan.describe()["n_logical"]
+    if n_logical < 2:
+        return
+    engine.run([0])
+    engine.run([1])
+    if engine.trace_count != engine.compile_traces:
+        report.add("HA006",
+                   f"trace_count {engine.trace_count} != compile_traces "
+                   f"{engine.compile_traces} after two runs — the engine "
+                   "retraced after compile")
+    report.info["trace_count"] = engine.trace_count
+
+
+def variant_name(plan) -> str:
+    d = plan.describe()
+    return (f"hlo:{d['partition']}:{d['mode']}:"
+            f"{plan.opts.wire_format}:S{d['num_sources']}")
+
+
+def audit_engine(engine, tolerance=DEFAULT_TOLERANCE,
+                 run_check: bool = False,
+                 name: Optional[str] = None) -> AuditReport:
+    """Run every static HLO check against a compiled engine."""
+    plan = engine.plan
+    report = AuditReport(name or variant_name(plan))
+    text = engine.compiled_hlo()
+    ops = census(text)
+    roles = roles_for_plan(plan)
+    match_census(ops, roles, report, tolerance=tolerance)
+    donation_check(text, report)
+    host_transfer_check(text, report)
+    if run_check:
+        retrace_check(engine, report)
+    d = plan.describe()
+    report.info.update({
+        "tolerance": list(tolerance),
+        "census": [op.to_dict() for op in ops],
+        "roles": [role.to_dict() for role in roles],
+        "plan": {k: d[k] for k in ("mode", "partition", "p", "n",
+                                   "num_sources", "sieve", "wire_formats")},
+        "collectives": {
+            "loop_data": sum(1 for op in ops
+                             if op.in_loop and op.role not in
+                             ("control", "outside_loop", "degenerate")),
+            "loop_control": sum(1 for op in ops if op.role == "control"),
+            "outside_loop": sum(1 for op in ops if not op.in_loop),
+        },
+    })
+    return report
+
+
+def census_table(report: AuditReport) -> str:
+    """Render a report's census next to the modeled bytes (CLI output)."""
+    rows = ["role          kind               group  HLO recv B   "
+            "model B      ratio  source"]
+    for op in report.info.get("census", ()):
+        if not op["in_loop"]:
+            continue
+        model = op["model_bytes"]
+        ratio = (f"{op['recv_bytes'] / model:7.3f}" if model else "      -")
+        rows.append(f"{op['role'] or '?':<13} {op['kind']:<18} "
+                    f"{op['group_size']:>5}  {op['recv_bytes']:>10.0f}  "
+                    f"{model:>10.0f}  {ratio}  {op['source']}")
+    return "\n".join(rows)

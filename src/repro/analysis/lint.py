@@ -1,0 +1,274 @@
+"""AST lints for repo conventions (rules RX001-RX005).
+
+Three families of invariants the exchange registry and compiled loop
+depend on, enforced statically over ``src/repro``:
+
+* **Registry discipline** — every ``register_exchange(kind, name,
+  bytes_model, wire=...)`` call pairs a byte model with the signature
+  its kind demands (RX001) and the model is pure host Python: plan-time
+  pricing must never touch ``jnp``/``jax``/``lax`` (RX002).  Byte-model
+  signatures per kind::
+
+      dense / expand_row / fold_col          (n|_, ..., itemsize, ...)  5 args
+      queue                                  (p, cap, itemsize, density=)  4
+      expand_row_sparse / fold_col_sparse    (r, c, cap, itemsize, density=)  5
+
+* **Twin coverage** — every bytes-tier strategy has its cheaper wire
+  twin registered: ``<name>_packed`` for dense kinds,
+  ``<name>_compressed`` for sparse kinds (RX003), so
+  ``wire_format="auto"`` always has both tiers to price.
+
+* **Compiled-loop hygiene** — inside the modules whose code runs under
+  ``lax.while_loop`` (``core/bfs.py``, ``core/frontier.py``), no Python
+  ``if`` branches on a traced ``jnp``/``lax`` expression (RX004 — it
+  would either retrace per value or raise a ConcretizationTypeError
+  mid-flight) and no host clock calls (RX005 — ``time.time()`` under a
+  trace timestamps tracing, not execution).
+
+False positives are silenced inline with a reasoned suppression::
+
+    # audit: allow(RX003) -- hierarchical is itself the packed tier
+
+The reason string after ``--`` is mandatory: a bare ``allow`` is itself
+a violation (SUP001).  A suppression comment matches on its own line,
+the line above the flagged statement, or the flagged statement's line.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.report import AuditReport
+
+# byte-model signature per kind: (positional arity, trailing kwarg that
+# must carry a default — the density knob of the sparse tiers)
+MODEL_SPEC: Dict[str, Tuple[int, Optional[str]]] = {
+    "dense": (5, None),
+    "expand_row": (5, None),
+    "fold_col": (5, None),
+    "queue": (4, "density"),
+    "expand_row_sparse": (5, "density"),
+    "fold_col_sparse": (5, "density"),
+}
+DENSE_KINDS = ("dense", "expand_row", "fold_col")
+SPARSE_KINDS = ("queue", "expand_row_sparse", "fold_col_sparse")
+TRACED_MODULES = ("core/bfs.py", "core/frontier.py")
+_CLOCK_CALLS = {("time", "time"), ("time", "perf_counter"),
+                ("time", "monotonic"), ("time", "process_time")}
+
+_ALLOW_RE = re.compile(
+    r"#\s*audit:\s*allow\(([A-Z]{2,3}[0-9]{3})\)(?:\s*--\s*(.*\S))?")
+
+
+class Suppressions:
+    """Inline ``# audit: allow(RULE) -- reason`` comments of one file."""
+
+    def __init__(self, src: str, path: str,
+                 report: Optional[AuditReport] = None):
+        self.by_line: Dict[int, Tuple[str, str]] = {}
+        for i, line in enumerate(src.splitlines(), 1):
+            m = _ALLOW_RE.search(line)
+            if not m:
+                continue
+            rule, reason = m.group(1), m.group(2)
+            if not reason:
+                if report is not None:
+                    report.add("SUP001",
+                               f"allow({rule}) without a `-- reason`",
+                               file=path, line=i)
+                continue
+            self.by_line[i] = (rule, reason)
+
+    def reason(self, rule: str, *lines: int) -> Optional[str]:
+        """Suppression reason if any candidate line allows ``rule``."""
+        for ln in lines:
+            ent = self.by_line.get(ln)
+            if ent and ent[0] == rule:
+                return ent[1]
+        return None
+
+
+def _flag(report: AuditReport, sup: Suppressions, rule: str, message: str,
+          path: str, line: int, extra_lines: Tuple[int, ...] = ()) -> None:
+    reason = sup.reason(rule, line, line - 1, *extra_lines)
+    report.add(rule, message, file=path, line=line,
+               suppressed=reason is not None,
+               suppress_reason=reason or "")
+
+
+def _references(tree: ast.AST, names: Tuple[str, ...]) -> Optional[ast.AST]:
+    """First node under ``tree`` naming one of ``names`` (jnp/lax/...)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id in names:
+            return node
+    return None
+
+
+def _model_def(module: ast.Module, expr: ast.AST):
+    """Resolve a register_exchange byte-model argument to its function.
+
+    Returns the FunctionDef/Lambda, or None when the expression is
+    dynamic (attribute chains, calls) and can't be checked statically.
+    """
+    if isinstance(expr, ast.Lambda):
+        return expr
+    if not isinstance(expr, ast.Name):
+        return None
+    for node in module.body:
+        if isinstance(node, ast.FunctionDef) and node.name == expr.id:
+            return node
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == expr.id \
+                        and isinstance(node.value, ast.Lambda):
+                    return node.value
+    return None
+
+
+def _check_model(report: AuditReport, sup: Suppressions, path: str,
+                 call: ast.Call, kind: str, name: str,
+                 model) -> None:
+    spec = MODEL_SPEC.get(kind)
+    if spec is None or model is None:
+        return
+    arity, tail = spec
+    args = model.args
+    n_pos = len(args.args) + len(args.posonlyargs)
+    lines = (call.lineno,)
+    if n_pos != arity:
+        _flag(report, sup, "RX001",
+              f"byte model for ({kind!r}, {name!r}) takes {n_pos} "
+              f"positional args, kind expects {arity}",
+              path, call.lineno, lines)
+        return
+    if tail is not None:
+        last = (args.posonlyargs + args.args)[-1]
+        if last.arg != tail or not args.defaults:
+            _flag(report, sup, "RX001",
+                  f"byte model for ({kind!r}, {name!r}) must end with "
+                  f"a defaulted `{tail}=` parameter",
+                  path, call.lineno, lines)
+    body = model.body if isinstance(model, ast.Lambda) else model
+    traced = _references(body, ("jnp", "jax", "lax"))
+    if traced is not None:
+        _flag(report, sup, "RX002",
+              f"byte model for ({kind!r}, {name!r}) references "
+              "jnp/jax/lax — plan-time pricing must be pure Python",
+              path, getattr(traced, "lineno", call.lineno),
+              (call.lineno, getattr(model, "lineno", call.lineno)))
+
+
+def _registrations(module: ast.Module):
+    """Every register_exchange call: (call, kind, name, model_expr, wire)."""
+    for node in ast.walk(module):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        fn_name = fn.id if isinstance(fn, ast.Name) else \
+            fn.attr if isinstance(fn, ast.Attribute) else ""
+        if fn_name != "register_exchange" or len(node.args) < 2:
+            continue
+        kind = node.args[0].value \
+            if isinstance(node.args[0], ast.Constant) else None
+        name = node.args[1].value \
+            if isinstance(node.args[1], ast.Constant) else None
+        model_expr = node.args[2] if len(node.args) > 2 else None
+        for kw in node.keywords:
+            if kw.arg == "bytes_model":
+                model_expr = kw.value
+        wire = "bytes"
+        for kw in node.keywords:
+            if kw.arg == "wire" and isinstance(kw.value, ast.Constant):
+                wire = kw.value.value
+        if kind is None or name is None:
+            continue
+        yield node, kind, name, model_expr, wire
+
+
+def _lint_traced_module(report: AuditReport, sup: Suppressions,
+                        path: str, module: ast.Module) -> None:
+    for node in ast.walk(module):
+        if isinstance(node, ast.If):
+            hit = _references(node.test, ("jnp", "lax"))
+            if hit is not None:
+                _flag(report, sup, "RX004",
+                      "Python `if` over a jnp/lax expression — use "
+                      "lax.cond / jnp.where in compiled-loop code",
+                      path, node.lineno)
+        if isinstance(node, ast.Call) and isinstance(node.func,
+                                                     ast.Attribute):
+            base = node.func.value
+            if isinstance(base, ast.Name) and \
+                    (base.id, node.func.attr) in _CLOCK_CALLS:
+                _flag(report, sup, "RX005",
+                      f"{base.id}.{node.func.attr}() inside a "
+                      "compiled-loop module — host clocks read trace "
+                      "time, not run time",
+                      path, node.lineno)
+
+
+def lint_sources(sources: Dict[str, str],
+                 name: str = "lint") -> AuditReport:
+    """Lint a {path: source} mapping (the unit-testable entry point)."""
+    report = AuditReport(name)
+    regs: List[Tuple[str, str, str, str, int]] = []
+    for path, src in sorted(sources.items()):
+        sup = Suppressions(src, path, report)
+        try:
+            module = ast.parse(src)
+        except SyntaxError as e:
+            report.add("RX001", f"unparseable module: {e}", file=path,
+                       line=e.lineno or 0)
+            continue
+        for call, kind, sname, model_expr, wire in _registrations(module):
+            if model_expr is None:
+                _flag(report, sup, "RX001",
+                      f"register_exchange({kind!r}, {sname!r}) has no "
+                      "byte model", path, call.lineno)
+                continue
+            model = _model_def(module, model_expr)
+            _check_model(report, sup, path, call, kind, sname, model)
+            regs.append((kind, sname, wire, path, call.lineno))
+        norm = path.replace(os.sep, "/")
+        if any(norm.endswith(m) for m in TRACED_MODULES):
+            _lint_traced_module(report, sup, path, module)
+
+    registered = {(k, n) for k, n, _, _, _ in regs}
+    sup_by_path = {path: Suppressions(src, path)
+                   for path, src in sources.items()}
+    for kind, sname, wire, path, line in regs:
+        if wire != "bytes":
+            continue
+        twin = sname + ("_packed" if kind in DENSE_KINDS else "_compressed")
+        if (kind, twin) not in registered:
+            _flag(report, sup_by_path[path], "RX003",
+                  f"bytes-tier strategy ({kind!r}, {sname!r}) has no "
+                  f"({kind!r}, {twin!r}) twin — wire_format='auto' "
+                  "cannot price the cheaper tier", path, line)
+    report.info["registrations"] = [
+        {"kind": k, "name": n, "wire": w, "file": p, "line": ln}
+        for k, n, w, p, ln in regs]
+    return report
+
+
+def repo_root() -> str:
+    import repro
+    return os.path.dirname(os.path.abspath(repro.__file__))
+
+
+def lint_tree(root: Optional[str] = None) -> AuditReport:
+    """Lint every module under ``src/repro`` (CI / CLI entry point)."""
+    root = root or repo_root()
+    sources: Dict[str, str] = {}
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as f:
+                sources[os.path.relpath(path, os.path.dirname(root))] = \
+                    f.read()
+    return lint_sources(sources, name="lint:src/repro")

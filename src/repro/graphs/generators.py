@@ -177,7 +177,12 @@ GENERATORS = {
 }
 
 
+# short spec aliases accepted anywhere a graph kind is parsed
+ALIASES = {"er": "erdos_renyi", "sw": "small_world"}
+
+
 def generate(kind: str, n: int, seed: int = 0, **kw):
+    kind = ALIASES.get(kind, kind)
     if kind == "star":
         return star_graph(n, seed=seed)
     if kind == "chain":

@@ -71,6 +71,13 @@ def main():
                          "metadata — per-phase strategies, the wire "
                          "format 'auto' chose for each, and per-level "
                          "byte pricing")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the HLO plan auditor on each compiled "
+                         "engine (collective census vs resolved "
+                         "strategies and modeled bytes, donation, "
+                         "host-transfer checks) and print the census "
+                         "next to the modeled bytes; exits 1 if any "
+                         "engine fails the audit")
     ap.add_argument("--sources", type=int, default=1)
     ap.add_argument("--repeats", type=int, default=3,
                     help="traversals to run against each compiled engine")
@@ -139,6 +146,7 @@ def main():
               f"sieve={args.sieve}")
 
     cache = default_engine_cache()
+    audit_failed = False
     for kind, n, kw in graphs:
         t0 = time.time()
         src, dst = generate(kind, n, seed=0, **kw)
@@ -180,6 +188,14 @@ def main():
         if args.describe:
             for k in sorted(meta):
                 print(f"  describe.{k} = {meta[k]}")
+        if args.audit:
+            from repro.analysis import hlo_audit
+            rep = hlo_audit.audit_engine(engine, run_check=False)
+            print(f"  {rep.summary()}")
+            print(hlo_audit.census_table(rep))
+            for v in rep.violations:
+                print(f"  {v}")
+            audit_failed |= not rep.ok()
 
         rng = np.random.default_rng(0)
         for rep in range(max(1, args.repeats)):
@@ -211,6 +227,8 @@ def main():
           f"evictions={st['evictions']} entries={st['entries']} "
           f"bytes={st['device_bytes']} "
           f"compile_s={st['compile_s_total']:.2f}")
+    if audit_failed:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -74,6 +74,8 @@ class EngineCache:
             raise ValueError(f"max_entries must be positive ({max_entries})")
         self.max_device_bytes = max_device_bytes
         self.max_entries = max_entries
+        # guarded-by(_lock): _entries, _building, hits, misses,
+        # guarded-by(_lock): evictions, compile_s_total
         self._lock = threading.Lock()
         self._entries: "OrderedDict[tuple, _Entry]" = OrderedDict()
         self._building: Dict[tuple, threading.Event] = {}
@@ -192,6 +194,7 @@ class EngineCache:
             self._entries.move_to_end(key)
             self._evict_over_budget(keep=key)
 
+    # audit: allow(LK001) -- internal helper; every caller holds _lock
     def _evict_over_budget(self, keep: tuple) -> None:
         """Drop LRU unpinned entries until bounds hold (lock held).
 
@@ -271,6 +274,7 @@ class GraphCatalog:
     """
 
     def __init__(self):
+        # guarded-by(_lock): _graphs
         self._graphs: Dict[str, object] = {}
         self._lock = threading.Lock()
 

@@ -63,6 +63,8 @@ class LaneGate:
         self.max_queue_depth = int(max_queue_depth)
         self.max_inflight_bytes = int(max_inflight_bytes)
         self._lock = threading.Lock()
+        # guarded-by(_lock): _queue, _inflight_bytes, _inflight_reqs,
+        # guarded-by(_lock): _closed, admitted, rejected
         self._queue: deque = deque()
         self._inflight_bytes = 0
         self._inflight_reqs = 0      # admitted and not yet completed

@@ -97,6 +97,9 @@ class LaneMetrics:
 
     def __init__(self):
         self._lock = threading.Lock()
+        # guarded-by(_lock): queue_wait, device, e2e, completed, failed,
+        # guarded-by(_lock): rejected, rejected_invalid, bucket_counts,
+        # guarded-by(_lock): sources_served, wire_bytes, _ewma_e2e_s
         self.queue_wait = Histogram()
         self.device = Histogram()
         self.e2e = Histogram()

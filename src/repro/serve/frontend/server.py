@@ -93,6 +93,7 @@ class BFSFrontend:
             for name in names}
         self.metrics = FrontendMetrics(names)
         self._level_bytes: Dict[str, dict] = {}   # lane -> phase pricing
+        # guarded-by(_cv): _running, _draining
         self._cv = threading.Condition()
         self._running = True
         self._draining = False
@@ -114,15 +115,16 @@ class BFSFrontend:
 
     @property
     def draining(self) -> bool:
-        return self._draining
+        with self._cv:
+            return self._draining
 
     def drain(self, timeout_s: float = 60.0) -> bool:
         """Stop admitting; wait for admitted work to finish.  Returns
         True when every gate went idle within the timeout."""
-        self._draining = True
         for gate in self.gates.values():
             gate.close()
         with self._cv:
+            self._draining = True
             self._cv.notify_all()
         deadline = time.monotonic() + timeout_s
         while time.monotonic() < deadline:
@@ -134,8 +136,8 @@ class BFSFrontend:
     def shutdown(self, timeout_s: float = 60.0) -> bool:
         """Graceful drain, then stop the dispatcher."""
         drained = self.drain(timeout_s)
-        self._running = False
         with self._cv:
+            self._running = False
             self._cv.notify_all()
         if self._dispatcher.is_alive():
             self._dispatcher.join(timeout=5.0)
@@ -285,10 +287,11 @@ class BFSFrontend:
                 for ph in pricing if counts[ph]}
 
     def _stats_loop(self) -> None:
-        while self._running:
+        while True:
             time.sleep(self._stats_interval_s)
-            if not self._running:
-                return
+            with self._cv:
+                if not self._running:
+                    return
             self._log(self.metrics.stats_line(
                 cache_stats=self.service.cache_stats()))
 
@@ -319,7 +322,7 @@ class BFSFrontend:
     def metrics_payload(self) -> dict:
         return self.metrics.snapshot(
             cache_stats=self.service.cache_stats(), gates=self.gates,
-            draining=self._draining)
+            draining=self.draining)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,82 @@
+"""Subprocess harness: the HLO plan auditor on good and known-bad plans.
+
+Compiles on 4 forced host devices and checks that
+
+  * a healthy auto-mode plan audits clean (including the two-run
+    retrace check), and
+  * a deliberately mis-registered queue exchange — the real
+    ``alltoall_direct`` impl under a byte model lying 100x low — fails
+    the audit with exactly the byte-accounting rule (HA003), and
+  * the lie is confined to the report: the traversal itself still
+    reaches every vertex.
+
+Exits nonzero on any deviation.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.launch import host_devices  # noqa: E402
+
+host_devices(4)  # must precede the jax import below
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.analysis import hlo_audit  # noqa: E402
+from repro.core import BFSOptions, plan  # noqa: E402
+from repro.core import exchange as ex  # noqa: E402
+from repro.graphs import generate, shard_graph  # noqa: E402
+
+
+def main():
+    p = 4
+    n = 2048
+    src, dst = generate("erdos_renyi", n, seed=0)
+    g = shard_graph(src, dst, n, p)
+    mesh = Mesh(np.asarray(jax.devices()).reshape(p), ("p",))
+    ok = True
+
+    # -------- good path: auto plan audits clean, including retrace ----
+    engine = plan(g, BFSOptions(mode="auto", wire_format="auto"),
+                  mesh=mesh, axis="p").compile()
+    rep = hlo_audit.audit_engine(engine, run_check=True)
+    print("GOOD", rep.summary())
+    for v in rep.violations:
+        print("  ", v)
+    ok &= rep.ok()
+
+    # -------- known-bad: byte model lies 100x low --------------------
+    # Register AFTER the good compile so "auto" selection above cannot
+    # pick the liar (it would: it prices cheapest by construction).
+    real = ex.get_exchange("queue", "alltoall_direct")
+    ex.register_exchange(
+        "queue", "alltoall_bad",
+        lambda p_, cap, itemsize, density=1.0:
+            real.bytes_model(p_, cap, itemsize, density) / 100.0,
+    )(real.impl)
+    try:
+        bad = plan(g, BFSOptions(mode="queue", queue_exchange="alltoall_bad",
+                                 wire_format="bytes"),
+                   mesh=mesh, axis="p").compile()
+        rep_bad = hlo_audit.audit_engine(bad)
+        print("BAD ", rep_bad.summary())
+        for v in rep_bad.violations:
+            print("  ", v)
+        ok &= not rep_bad.ok()
+        ok &= "HA003" in rep_bad.rules()
+        # the audit failure is a pricing lie, not a correctness bug
+        res = bad.run([0])
+        ok &= int(res.stats().visited) == n
+    finally:
+        ex.unregister_exchange("queue", "alltoall_bad")
+
+    print("OK" if ok else "MISMATCH")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()
