@@ -215,6 +215,14 @@ def roles_for_plan(plan) -> List[Role]:
     inside each queue level when the plan resolved it on.  A role with a
     zero byte model (p=1, or a peerless grid axis) is never required —
     XLA elides the degenerate collective entirely.
+
+    Fused-tail plans (``use_fused_tail``) change the *compute* between
+    collectives — the fold merge, owner update and next-frontier pack
+    collapse into one kernel fed by the double-buffered word generation
+    — but ship the same payloads through the same collectives, so the
+    role set and every byte model are identical to the unfused twin.
+    The 48-variant gate compiles both twins per wire x mode and this
+    invariance is exactly what HA001-HA003 then verify.
     """
     from repro.core import frontier as fr
     from repro.core import exchange as ex
@@ -437,8 +445,9 @@ def retrace_check(engine, report: AuditReport) -> None:
 
 def variant_name(plan) -> str:
     d = plan.describe()
+    fused = ":fused" if getattr(plan, "use_fused_tail", False) else ""
     return (f"hlo:{d['partition']}:{d['mode']}:"
-            f"{plan.opts.wire_format}:S{d['num_sources']}")
+            f"{plan.opts.wire_format}:S{d['num_sources']}{fused}")
 
 
 def audit_engine(engine, tolerance=DEFAULT_TOLERANCE,
@@ -461,7 +470,8 @@ def audit_engine(engine, tolerance=DEFAULT_TOLERANCE,
         "census": [op.to_dict() for op in ops],
         "roles": [role.to_dict() for role in roles],
         "plan": {k: d[k] for k in ("mode", "partition", "p", "n",
-                                   "num_sources", "sieve", "wire_formats")},
+                                   "num_sources", "sieve", "wire_formats",
+                                   "use_fused_tail")},
         "collectives": {
             "loop_data": sum(1 for op in ops
                              if op.in_loop and op.role not in

@@ -1,0 +1,263 @@
+"""Parse ``jax.profiler`` traces into per-level BFS phase timings.
+
+The roofline rows in ``BFSPlan.describe()`` *predict* where a level's
+time goes (collective wire vs fused-tail compute); this module supplies
+the *measured* half: it loads the chrome-trace JSON the profiler writes
+(``<logdir>/plugins/profile/<ts>/*.trace.json.gz``), keeps the compiled
+XLA op events (the ones carrying an ``args.hlo_op`` attribution — python
+frame and runtime bookkeeping events are dropped), classifies each op
+into a traversal phase by its HLO op name, and splits the run into
+levels by clustering the collective events the level loop must issue
+once per iteration.
+
+Phases (the per-level critical path ISSUE 9 shortens):
+
+  * ``collective``   — all-to-all / all-gather / all-reduce /
+    reduce-scatter / collective-permute instructions;
+  * ``expand``       — the edge-walk half: gather/scatter/iota fusions
+    that read edge endpoints and build candidate masks;
+  * ``fold``         — word-level merge work: or/and/shift fusions over
+    the received packed candidate words;
+  * ``owner_update`` — the dist tail: compare/select fusions that test
+    candidates against INF and write depths (fused plans collapse fold +
+    owner_update into one kernel, so their combined share is what the
+    fused-vs-unfused benchmark compares);
+  * ``other``        — loop plumbing (while/condition overhead, copies).
+
+Used three ways: the ``--profile`` flag of the launchers prints a phase
+summary after the run, the latency benchmark validates the describe()
+roofline against measured phase times, and a unit test parses a
+checked-in synthetic trace so the format assumptions fail loudly if a
+jax upgrade moves the cheese.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import glob
+import gzip
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+_COLLECTIVE_RE = re.compile(
+    r"all-to-all|all-gather|all-reduce|reduce-scatter|collective-permute")
+_EXPAND_RE = re.compile(r"gather|scatter|iota|dynamic-slice|dynamic_slice")
+_FOLD_RE = re.compile(r"\bor\b|_or_|^or[._]|shift|\band\b|_and_|^and[._]"
+                      r"|bitcast|pack|concatenate")
+_UPDATE_RE = re.compile(r"select|compare|broadcast|convert|minimum|maximum"
+                        r"|add|multiply")
+# host-side python frames are prefixed "$" in jax's chrome traces; other
+# non-op events (runtime threads, XLA metadata) simply lack args.hlo_op
+_PY_FRAME = "$"
+# container ops whose event spans *include* their children — keeping them
+# would double-count every op inside the level loop
+_CONTAINER_RE = re.compile(r"^(while|call|conditional)\b")
+
+PHASES = ("expand", "collective", "fold", "owner_update", "other")
+
+
+def classify(hlo_op: str) -> str:
+    """Map one HLO op name (e.g. ``add_select_fusion``) to a phase."""
+    name = hlo_op.lower()
+    if _COLLECTIVE_RE.search(name):
+        return "collective"
+    if _EXPAND_RE.search(name):
+        return "expand"
+    if _FOLD_RE.search(name):
+        return "fold"
+    if _UPDATE_RE.search(name):
+        return "owner_update"
+    return "other"
+
+
+@dataclass
+class TraceOp:
+    """One compiled-XLA-op event: name, phase, start + duration (s)."""
+
+    hlo_op: str
+    phase: str
+    ts: float
+    dur: float
+
+
+@dataclass
+class PhaseTimings:
+    """Per-phase device-time totals, optionally split per level."""
+
+    total_s: dict                      # phase -> summed seconds
+    counts: dict                       # phase -> event count
+    levels: List[dict] = field(default_factory=list)  # per-level totals
+    span_s: float = 0.0                # first-op start to last-op end
+    n_ops: int = 0
+
+    def to_dict(self) -> dict:
+        return {"total_s": self.total_s, "counts": self.counts,
+                "levels": self.levels, "span_s": self.span_s,
+                "n_ops": self.n_ops}
+
+
+def find_trace_file(path: str) -> str:
+    """Resolve a profiler log dir (or a direct file) to one trace json.
+
+    ``jax.profiler.stop_trace`` writes
+    ``<logdir>/plugins/profile/<timestamp>/<host>.trace.json.gz``; accept
+    the logdir, the timestamp dir, or the file itself, and prefer the
+    newest chrome trace over the perfetto protobuf variants.
+    """
+    if os.path.isfile(path):
+        return path
+    pats = (os.path.join(path, "*.trace.json.gz"),
+            os.path.join(path, "plugins", "profile", "*", "*.trace.json.gz"),
+            os.path.join(path, "*", "*.trace.json.gz"))
+    hits = [h for pat in pats for h in glob.glob(pat)]
+    if not hits:
+        raise FileNotFoundError(
+            f"no *.trace.json.gz under {path!r} — was the run launched "
+            "with --profile (jax.profiler.start_trace)?")
+    return max(hits, key=os.path.getmtime)
+
+
+def load_events(path: str) -> List[TraceOp]:
+    """Load + filter one trace file into classified XLA op events."""
+    path = find_trace_file(path)
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        raw = json.load(f)
+    ops: List[TraceOp] = []
+    for ev in raw.get("traceEvents", ()):
+        if ev.get("ph") != "X":
+            continue
+        args = ev.get("args") or {}
+        hlo_op = args.get("hlo_op")
+        name = ev.get("name", "")
+        if not hlo_op or name.startswith(_PY_FRAME):
+            continue
+        if _CONTAINER_RE.match(hlo_op):
+            continue
+        # chrome-trace ts/dur are microseconds regardless of
+        # displayTimeUnit (that key only styles the viewer)
+        ops.append(TraceOp(hlo_op=hlo_op, phase=classify(hlo_op),
+                           ts=ev.get("ts", 0) * 1e-6,
+                           dur=ev.get("dur", 0) * 1e-6))
+    ops.sort(key=lambda o: o.ts)
+    return ops
+
+
+def split_levels(ops: List[TraceOp],
+                 n_levels: Optional[int] = None) -> List[List[TraceOp]]:
+    """Segment a run's ops into per-level groups.
+
+    Every level iteration issues at least one payload collective, so
+    collective start times cluster per level.  With ``n_levels`` known
+    (the benchmark reads it off ``BFSRunStats``) the split cuts at the
+    ``n_levels - 1`` largest gaps between consecutive collective starts
+    — robust to any per-level op mix.  Without it, cut at gaps larger
+    than 2x the median spacing (degrades to one segment when fewer than
+    two collectives are visible).
+    """
+    colls = [op for op in ops if op.phase == "collective"]
+    if len(colls) < 2 or (n_levels is not None and n_levels <= 1):
+        return [ops] if ops else []
+    gaps = [(colls[i + 1].ts - colls[i].ts, i) for i in range(len(colls) - 1)]
+    if n_levels is not None:
+        cut_idx = sorted(i for _, i in
+                         sorted(gaps, reverse=True)[: n_levels - 1])
+    else:
+        med = sorted(g for g, _ in gaps)[len(gaps) // 2]
+        cut_idx = [i for g, i in gaps if g > 2 * med and med > 0]
+    # boundary timestamps: halfway into each cut gap
+    bounds = [(colls[i].ts + colls[i].dur + colls[i + 1].ts) / 2
+              for i in cut_idx]
+    segments: List[List[TraceOp]] = [[] for _ in range(len(bounds) + 1)]
+    for op in ops:
+        k = sum(1 for b in bounds if op.ts >= b)
+        segments[k].append(op)
+    return [seg for seg in segments if seg]
+
+
+def phase_timings(ops: List[TraceOp],
+                  n_levels: Optional[int] = None) -> PhaseTimings:
+    """Aggregate classified ops into per-phase (and per-level) seconds."""
+    total = {ph: 0.0 for ph in PHASES}
+    counts = {ph: 0 for ph in PHASES}
+    for op in ops:
+        total[op.phase] += op.dur
+        counts[op.phase] += 1
+    levels = []
+    for seg in split_levels(ops, n_levels):
+        lv = {ph: 0.0 for ph in PHASES}
+        for op in seg:
+            lv[op.phase] += op.dur
+        levels.append(lv)
+    span = (max(op.ts + op.dur for op in ops) - min(op.ts for op in ops)
+            if ops else 0.0)
+    return PhaseTimings(total_s=total, counts=counts, levels=levels,
+                        span_s=span, n_ops=len(ops))
+
+
+def parse_trace(path: str, n_levels: Optional[int] = None) -> PhaseTimings:
+    """One-call helper: resolve, load, classify, aggregate."""
+    return phase_timings(load_events(path), n_levels=n_levels)
+
+
+@contextlib.contextmanager
+def capture(logdir: str):
+    """Profile the enclosed block into ``logdir`` (the --profile flag).
+
+    Thin wrapper over ``jax.profiler.start_trace``/``stop_trace`` so the
+    launchers share one spelling; the chrome trace lands where
+    ``find_trace_file(logdir)`` picks it up.
+    """
+    import jax
+
+    os.makedirs(logdir, exist_ok=True)
+    jax.profiler.start_trace(logdir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def format_summary(t: PhaseTimings) -> str:
+    """Render one PhaseTimings as the launchers' post-run report."""
+    tot = sum(t.total_s.values()) or 1.0
+    rows = [f"trace: {t.n_ops} XLA op events over {t.span_s * 1e3:.1f}ms "
+            f"wall, {len(t.levels)} level segment(s)"]
+    for ph in PHASES:
+        s = t.total_s[ph]
+        rows.append(f"  {ph:<13} {s * 1e3:9.3f}ms  {s / tot:6.1%}  "
+                    f"({t.counts[ph]} ops)")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="summarize a jax profiler trace into BFS phase "
+                    "timings (expand / collective / fold / owner_update)")
+    ap.add_argument("path", help="profiler logdir or *.trace.json.gz file")
+    ap.add_argument("--levels", type=int, default=None,
+                    help="known level count (cuts at the N-1 largest "
+                         "collective gaps); default: median-gap heuristic")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable timing dict")
+    args = ap.parse_args(argv)
+    t = parse_trace(args.path, n_levels=args.levels)
+    if args.json:
+        print(json.dumps(t.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(format_summary(t))
+        for i, lv in enumerate(t.levels):
+            tot = sum(lv.values()) or 1.0
+            share = "  ".join(f"{ph}={lv[ph] / tot:.0%}" for ph in PHASES
+                              if lv[ph] > 0)
+            print(f"  level[{i}] {tot * 1e3:8.3f}ms  {share}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

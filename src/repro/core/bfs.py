@@ -54,6 +54,7 @@ from jax.sharding import Mesh
 from repro.core import exchange as ex
 from repro.core import frontier as fr
 from repro.core.partition import Partition1D, Partition2D
+from repro.kernels.fold_update import fold_update
 
 if TYPE_CHECKING:  # graphs.formats imports core.partition; avoid the cycle
     from repro.graphs.formats import ShardedGraph
@@ -101,6 +102,17 @@ class BFSOptions:
     # enables it where the sparse paths exist: non-dense single-source
     # plans on a real mesh.
     sieve: object = "auto"          # True | False | "auto"
+    # Fused fold/owner-update tail (kernels/fold_update): replace the
+    # dense tail's unpack -> compare -> where op chain with one kernel
+    # pass over the merged candidate words that also emits the next
+    # frontier generation pre-packed, double-buffered in loop state so
+    # word-consuming collectives of level L+1 need no pack after level
+    # L's update.  Requires the dense (1-D) / fold (2-D) wire to resolve
+    # packed; "auto" turns it on exactly there for dense/auto-mode plans
+    # (queue-mode plans only benefit on escalated levels but would pay a
+    # re-pack on every sparse level).  Resolved at plan time like
+    # wire_format — the resolved flag keys into plan_key().
+    use_fused_tail: object = "auto"  # True | False | "auto"
 
     def validate(self):
         if self.mode not in ("dense", "queue", "auto"):
@@ -112,6 +124,10 @@ class BFSOptions:
         if self.sieve not in (True, False, "auto"):
             raise ValueError(f"unknown sieve setting {self.sieve!r}; "
                              "expected True | False | 'auto'")
+        if self.use_fused_tail not in (True, False, "auto"):
+            raise ValueError(
+                f"unknown use_fused_tail setting {self.use_fused_tail!r}; "
+                "expected True | False | 'auto'")
         # get_exchange raises a ValueError naming the registered strategies;
         # "auto" defers to the byte-model selection at plan time.
         for kind, name in (("dense", self.dense_exchange),
@@ -197,7 +213,7 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
                    queue_strategy: ex.ExchangeStrategy,
                    expand_fn=None, expand_emits_packed: bool = False,
                    n_kernel_args: int = 0, bottom_up_wire: str = "bytes",
-                   sieve: bool = False, on_trace=None):
+                   sieve: bool = False, fused: bool = False, on_trace=None):
     """Builds the per-shard BFS body (runs under shard_map).
 
     Exchange strategies arrive pre-resolved from the registry (plan time),
@@ -210,6 +226,17 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
     already the per-shard-blocked word array, so a packed exchange
     consumes it with no pack step.  ``on_trace`` is invoked once per
     trace — engines use it to prove compile-once reuse.
+
+    ``fused`` (plan-time resolution of ``BFSOptions.use_fused_tail``;
+    requires the dense wire to be packed) replaces the dense level's
+    unpack → owner-update tail with the ``kernels/fold_update`` fused
+    kernel and double-buffers the frontier: the loop state carries the
+    packed word generation (``fwords``) alongside the byte mask, each
+    level tail emits the next generation, and word-consuming collectives
+    (the packed bottom-up gather here; the 2-D expand allgather in
+    ``_make_shard_fn_2d``) read the *carried* words — their payload is
+    ready the moment the previous level's fused tail retires, with no
+    pack on the critical path between levels.
     """
     p, shard, n = part.p, part.shard_size, part.n
     itemsize = 1  # uint8 masks (the "bytes" wire format)
@@ -240,18 +267,30 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             # wire payload, unpack only the owned W-word slice
             words = cand if (expand_fn is not None and expand_emits_packed
                              ) else fr.pack_bits(cand, n_blocks=p)
-            own = fr.unpack_bits(dense_strategy.impl(words, axis), shard)
+            merged = dense_strategy.impl(words, axis)
+            if fused:
+                # fused tail: one kernel pass bit-tests the merged words
+                # against dist, writes depths and emits the next packed
+                # frontier generation — no (shard, S) unpack between the
+                # collective and the next level
+                dist, new, nwords = fold_update(merged, dist, level)
+                return dist, new, nwords, jnp.float32(dense_bytes)
+            own = fr.unpack_bits(merged, shard)
         else:
             own = dense_strategy.impl(cand, axis)
         dist, new = _owned_update(dist, own, level)
-        return dist, new, jnp.float32(dense_bytes)
+        return dist, new, None, jnp.float32(dense_bytes)
 
-    def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
+    def bottom_up_level(frontier, fwords, dist, level, in_src_global,
+                        in_dst_local):
         if bottom_up_wire == "packed":
             # gather the packed frontier (8x smaller) and read source
-            # bits straight out of the words — no (n, S) unpack
-            fw = fr.pack_bits(frontier)                    # (W, S)
-            fglob_w = ex.allgather_frontier(fw, axis)      # (p*W, S)
+            # bits straight out of the words — no (n, S) unpack.  Fused
+            # plans carry the packed generation in loop state (the
+            # previous level's tail emitted it), so the gather payload is
+            # ready with no pack on this level's critical path.
+            fw = fwords if fused else fr.pack_bits(frontier)   # (W, S)
+            fglob_w = ex.allgather_frontier(fw, axis)          # (p*W, S)
             cand = fr.expand_bottom_up_packed(fglob_w, in_src_global,
                                               in_dst_local, shard, w_shard)
         else:
@@ -259,7 +298,8 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local,
                                        shard)
         dist, new = _owned_update(dist, cand, level)
-        return dist, new, jnp.float32(bottom_up_bytes)
+        nwords = fr.pack_bits(new) if fused else None
+        return dist, new, nwords, jnp.float32(bottom_up_bytes)
 
     def queue_level(frontier, dist, level, src_local, dst_global, kargs):
         me = lax.axis_index(axis)
@@ -303,32 +343,38 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
                 rec_ids = queue_strategy.impl(buckets, axis)
             own = jnp.maximum(fr.apply_queue(rec_ids, me, shard), local_mask)
             d2, new = _owned_update(dist, own[:, None], level)
-            return d2, new, jnp.float32(queue_bytes)
+            nwords = fr.pack_bits(new) if fused else None
+            return d2, new, nwords, jnp.float32(queue_bytes)
 
         def dense_branch():
-            d2, new, bb = dense_level(frontier, dist, level, src_local,
-                                      dst_global, kargs)
+            d2, new, nwords, bb = dense_level(frontier, dist, level,
+                                              src_local, dst_global, kargs)
             # the sieve gather (if any) already ran before escalation
-            return d2, new, bb + jnp.float32(sieve_gather_bytes)
+            return d2, new, nwords, bb + jnp.float32(sieve_gather_bytes)
 
-        d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
-        return d2, new, bytes_, overflow_any, hits
+        d2, new, nwords, bytes_ = lax.cond(overflow_any, dense_branch,
+                                           sparse_branch)
+        return d2, new, nwords, bytes_, overflow_any, hits
 
     def body(state, src_local, dst_global, in_src_global, in_dst_local,
-             kargs, valid_local):
-        (dist, frontier, level, _, bytes_acc, overflowed, modes,
-         hits_acc) = state
+             kargs, valid_local, vwords):
+        if fused:
+            (dist, frontier, fwords, level, _, bytes_acc, overflowed,
+             modes, hits_acc) = state
+        else:
+            (dist, frontier, level, _, bytes_acc, overflowed, modes,
+             hits_acc) = state
+            fwords = None
         hits = jnp.int32(0)
 
         if opts.mode == "dense":
-            dist, new, b = dense_level(frontier, dist, level, src_local,
-                                       dst_global, kargs)
+            dist, new, nwords, b = dense_level(frontier, dist, level,
+                                               src_local, dst_global, kargs)
             modes = modes.at[0].add(1)
             ovf = jnp.bool_(False)
         elif opts.mode == "queue":
-            dist, new, b, ovf, hits = queue_level(frontier, dist, level,
-                                                  src_local, dst_global,
-                                                  kargs)
+            dist, new, nwords, b, ovf, hits = queue_level(
+                frontier, dist, level, src_local, dst_global, kargs)
             modes = modes.at[1].add(1)
         else:  # auto: direction-optimizing hybrid
             f_verts = lax.psum(frontier.sum(dtype=jnp.int32), axis)
@@ -339,26 +385,30 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             tiny = f_edges < jnp.int32(queue_edge_cutoff)
 
             def do_bottom_up():
-                d, nw, b = bottom_up_level(frontier, dist, level,
-                                           in_src_global, in_dst_local)
-                return d, nw, b, jnp.bool_(False), jnp.int32(2), jnp.int32(0)
+                d, nw, nwd, b = bottom_up_level(frontier, fwords, dist,
+                                                level, in_src_global,
+                                                in_dst_local)
+                return (d, nw, nwd, b, jnp.bool_(False), jnp.int32(2),
+                        jnp.int32(0))
 
             def do_queue():
-                d, nw, b, ovf, h = queue_level(frontier, dist, level,
-                                               src_local, dst_global, kargs)
-                return d, nw, b, ovf, jnp.int32(1), h
+                d, nw, nwd, b, ovf, h = queue_level(frontier, dist, level,
+                                                    src_local, dst_global,
+                                                    kargs)
+                return d, nw, nwd, b, ovf, jnp.int32(1), h
 
             def do_dense():
-                d, nw, b = dense_level(frontier, dist, level, src_local,
-                                       dst_global, kargs)
-                return d, nw, b, jnp.bool_(False), jnp.int32(0), jnp.int32(0)
+                d, nw, nwd, b = dense_level(frontier, dist, level,
+                                            src_local, dst_global, kargs)
+                return (d, nw, nwd, b, jnp.bool_(False), jnp.int32(0),
+                        jnp.int32(0))
 
             if s == 1:
-                dist, new, b, ovf, which, hits = lax.cond(
+                dist, new, nwords, b, ovf, which, hits = lax.cond(
                     big, do_bottom_up,
                     lambda: lax.cond(tiny, do_queue, do_dense))
             else:
-                dist, new, b, ovf, which, hits = lax.cond(
+                dist, new, nwords, b, ovf, which, hits = lax.cond(
                     big, do_bottom_up, do_dense)
             modes = modes.at[which].add(1)
 
@@ -366,6 +416,12 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
         new = new * valid_local[:, None].astype(new.dtype)
         dist = jnp.where(valid_local[:, None], dist, INF)
         active = lax.psum(new.sum(dtype=jnp.int32), axis) > 0
+        if fused:
+            # next packed generation, pad bits cleared to match the masked
+            # byte frontier exactly
+            fwords = nwords & vwords
+            return (dist, new, fwords, level + 1, active, bytes_acc + b,
+                    overflowed | ovf, modes, hits_acc + hits)
         return (dist, new, level + 1, active, bytes_acc + b,
                 overflowed | ovf, modes, hits_acc + hits)
 
@@ -374,20 +430,27 @@ def _make_shard_fn(part: Partition1D, e_total: int, s: int,
             on_trace()
         kargs = rest[:n_kernel_args]
         dist0, frontier0, valid_local = rest[n_kernel_args:]
-        state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
-                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32),
-                  jnp.int32(0))
+        tail0 = (jnp.int32(1), jnp.bool_(True), jnp.float32(0),
+                 jnp.bool_(False), jnp.zeros(3, jnp.int32), jnp.int32(0))
+        if fused:
+            vwords = fr.pack_bits(valid_local.astype(jnp.uint8)[:, None])
+            state0 = (dist0, frontier0, fr.pack_bits(frontier0)) + tail0
+        else:
+            vwords = None
+            state0 = (dist0, frontier0) + tail0
+        lvl_i, act_i = (3, 4) if fused else (2, 3)
 
         def cond(st):
-            return st[3] & (st[2] <= max_levels)
+            return st[act_i] & (st[lvl_i] <= max_levels)
 
         def body_fn(st):
             return body(st, src_local, dst_global, in_src_global,
-                        in_dst_local, kargs, valid_local)
+                        in_dst_local, kargs, valid_local, vwords)
 
-        (dist, _, level, _, bytes_acc, overflowed, modes,
-         sieve_hits) = lax.while_loop(cond, body_fn, state0)
-        return dist, level - 1, bytes_acc, overflowed, modes, sieve_hits
+        st = lax.while_loop(cond, body_fn, state0)
+        level = st[lvl_i]
+        bytes_acc, overflowed, modes, sieve_hits = st[lvl_i + 2:lvl_i + 6]
+        return st[0], level - 1, bytes_acc, overflowed, modes, sieve_hits
 
     return shard_fn
 
@@ -399,7 +462,8 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
                       expand_sparse_strategy: ex.ExchangeStrategy,
                       fold_sparse_strategy: ex.ExchangeStrategy,
                       bottom_up_wire: str = "bytes",
-                      sieve: bool = False, on_trace=None):
+                      sieve: bool = False, fused: bool = False,
+                      on_trace=None):
     """Per-device body of the 2-D two-phase BFS level loop (shard_map).
 
     Each dense level is expand -> local edge scatter -> fold -> owner
@@ -433,6 +497,15 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
       * auto — per level picks bottom-up (frontier huge), queue (frontier
         edges tiny, S = 1) or dense, from replicated frontier statistics
         (the frontier-edge count uses the per-vertex out_degree block).
+
+    ``fused`` (requires the fold wire packed) fuses the fold-merge +
+    owner-update tail into the ``kernels/fold_update`` kernel and carries
+    the packed frontier generation in loop state, exactly as in the 1-D
+    builder — here the payoff is larger: the expand-phase allgather of
+    level L+1 ships the carried words the fused tail of level L emitted,
+    so XLA can issue that collective with no pack (and, via
+    ``frontier.expand_dense_2d_packed``, no row-frontier unpack) between
+    it and the previous level's update.
     """
     r, c, b = part2.r, part2.c, part2.shard_size
     p = part2.p
@@ -462,28 +535,47 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
     bottom_up_bytes = jnp.float32(ex.bottomup_level_bytes(
         part2.n, p, s, 1, wire=bottom_up_wire))
 
-    def dense_level(frontier, dist, level, src_rowlocal, dst_fold):
+    def dense_level(frontier, fwords, dist, level, src_rowlocal, dst_fold):
         if expand_strategy.wire == "packed":
-            # ship the frontier chunk as words; the c gathered segments
-            # unpack blockwise into the row frontier the expansion reads
-            fw = expand_strategy.impl(fr.pack_bits(frontier), col_axis)
-            frow = fr.unpack_bits(fw, b, n_blocks=c)             # (c*b, S)
+            # ship the frontier chunk as words.  Fused plans gather the
+            # *carried* packed generation (emitted by the previous
+            # level's fused tail — double buffering: the collective's
+            # payload has no compute dependency at the top of this level)
+            # and read source bits straight from the gathered words; the
+            # unfused path packs here and unpacks the c gathered segments
+            # into the row frontier the expansion reads.
+            payload = fwords if fused else fr.pack_bits(frontier)
+            fw = expand_strategy.impl(payload, col_axis)
+            if fused:
+                cand = fr.expand_dense_2d_packed(fw, src_rowlocal,
+                                                 dst_fold, fold_len, b)
+            else:
+                frow = fr.unpack_bits(fw, b, n_blocks=c)         # (c*b, S)
+                cand = fr.expand_dense_2d(frow, src_rowlocal, dst_fold,
+                                          fold_len)
         else:
             frow = expand_strategy.impl(frontier, col_axis)      # (c*b, S)
-        cand = fr.expand_dense_2d(frow, src_rowlocal, dst_fold, fold_len)
+            cand = fr.expand_dense_2d(frow, src_rowlocal, dst_fold,
+                                      fold_len)
         if fold_strategy.wire == "packed":
             cw = fold_strategy.impl(fr.pack_bits(cand, n_blocks=r), row_axis)
+            if fused:
+                # fused fold tail: merge words -> dist depths + next
+                # packed generation in one kernel pass (no (b, S) unpack)
+                dist, new, nwords = fold_update(cw, dist, level)
+                return dist, new, nwords, dense_bytes
             own = fr.unpack_bits(cw, b)                          # (b, S)
         else:
             own = fold_strategy.impl(cand, row_axis)             # (b, S)
         dist, new = _owned_update(dist, own, level)
-        return dist, new, dense_bytes
+        return dist, new, None, dense_bytes
 
-    def bottom_up_level(frontier, dist, level, in_src_global, in_dst_local):
+    def bottom_up_level(frontier, fwords, dist, level, in_src_global,
+                        in_dst_local):
         # gather over (rows, cols) is chunk-id order: chunk k lives on
         # grid device (k // c, k % c), the same major-first linearization
         if bottom_up_wire == "packed":
-            fw = fr.pack_bits(frontier)                          # (Wb, S)
+            fw = fwords if fused else fr.pack_bits(frontier)     # (Wb, S)
             fglob_w = ex.allgather_frontier(fw, grid_axes)       # (p*Wb, S)
             cand = fr.expand_bottom_up_packed(fglob_w, in_src_global,
                                               in_dst_local, b, w_chunk)
@@ -491,9 +583,10 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
             fglob = ex.allgather_frontier(frontier, grid_axes)   # (n, S)
             cand = fr.expand_bottom_up(fglob, in_src_global, in_dst_local, b)
         dist, new = _owned_update(dist, cand, level)
-        return dist, new, bottom_up_bytes
+        nwords = fr.pack_bits(new) if fused else None
+        return dist, new, nwords, bottom_up_bytes
 
-    def queue_level(frontier, dist, level, src_rowlocal, dst_fold):
+    def queue_level(frontier, fwords, dist, level, src_rowlocal, dst_fold):
         me_row = lax.axis_index(row_axis)
         ids, _, pack_ovf = fr.pack_frontier_ids(frontier, opts.queue_cap)
         if use_comp_expand:
@@ -550,33 +643,41 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
                 rec = fold_sparse_strategy.impl(buckets, row_axis)
             own = jnp.maximum(fr.apply_queue(rec, me_row, b), local_mask)
             d2, new = _owned_update(dist, own[:, None], level)
-            return d2, new, sparse_bytes
+            nwords = fr.pack_bits(new) if fused else None
+            return d2, new, nwords, sparse_bytes
 
         def dense_branch():
             # the sparse expand allgather (and sieve gather) above
             # already ran, so an escalated level pays their bytes on top
             # of the dense level's
-            d2, new, bb = dense_level(frontier, dist, level, src_rowlocal,
-                                      dst_fold)
-            return d2, new, bb + expand_sparse_bytes + sieve_gather_bytes
+            d2, new, nwords, bb = dense_level(frontier, fwords, dist, level,
+                                              src_rowlocal, dst_fold)
+            return d2, new, nwords, bb + expand_sparse_bytes + sieve_gather_bytes
 
-        d2, new, bytes_ = lax.cond(overflow_any, dense_branch, sparse_branch)
-        return d2, new, bytes_, overflow_any, hits
+        d2, new, nwords, bytes_ = lax.cond(overflow_any, dense_branch,
+                                           sparse_branch)
+        return d2, new, nwords, bytes_, overflow_any, hits
 
     def body(state, src_rowlocal, dst_fold, in_src_global, in_dst_local,
-             out_degree, valid_local):
-        (dist, frontier, level, _, bytes_acc, overflowed, modes,
-         hits_acc) = state
+             out_degree, valid_local, vwords):
+        if fused:
+            (dist, frontier, fwords, level, _, bytes_acc, overflowed,
+             modes, hits_acc) = state
+        else:
+            (dist, frontier, level, _, bytes_acc, overflowed, modes,
+             hits_acc) = state
+            fwords = None
         hits = jnp.int32(0)
 
         if opts.mode == "dense":
-            dist, new, bb = dense_level(frontier, dist, level, src_rowlocal,
-                                        dst_fold)
+            dist, new, nwords, bb = dense_level(frontier, fwords, dist,
+                                                level, src_rowlocal,
+                                                dst_fold)
             modes = modes.at[0].add(1)
             ovf = jnp.bool_(False)
         elif opts.mode == "queue":
-            dist, new, bb, ovf, hits = queue_level(frontier, dist, level,
-                                                   src_rowlocal, dst_fold)
+            dist, new, nwords, bb, ovf, hits = queue_level(
+                frontier, fwords, dist, level, src_rowlocal, dst_fold)
             modes = modes.at[1].add(1)
         else:  # auto: direction-optimizing hybrid on the grid
             f_verts = lax.psum(frontier.sum(dtype=jnp.int32), grid_axes)
@@ -587,26 +688,30 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
             tiny = f_edges < jnp.int32(queue_edge_cutoff)
 
             def do_bottom_up():
-                d, nw, bb = bottom_up_level(frontier, dist, level,
-                                            in_src_global, in_dst_local)
-                return d, nw, bb, jnp.bool_(False), jnp.int32(2), jnp.int32(0)
+                d, nw, nwd, bb = bottom_up_level(frontier, fwords, dist,
+                                                 level, in_src_global,
+                                                 in_dst_local)
+                return (d, nw, nwd, bb, jnp.bool_(False), jnp.int32(2),
+                        jnp.int32(0))
 
             def do_queue():
-                d, nw, bb, ovf, h = queue_level(frontier, dist, level,
-                                                src_rowlocal, dst_fold)
-                return d, nw, bb, ovf, jnp.int32(1), h
+                d, nw, nwd, bb, ovf, h = queue_level(frontier, fwords, dist,
+                                                     level, src_rowlocal,
+                                                     dst_fold)
+                return d, nw, nwd, bb, ovf, jnp.int32(1), h
 
             def do_dense():
-                d, nw, bb = dense_level(frontier, dist, level, src_rowlocal,
-                                        dst_fold)
-                return d, nw, bb, jnp.bool_(False), jnp.int32(0), jnp.int32(0)
+                d, nw, nwd, bb = dense_level(frontier, fwords, dist, level,
+                                             src_rowlocal, dst_fold)
+                return (d, nw, nwd, bb, jnp.bool_(False), jnp.int32(0),
+                        jnp.int32(0))
 
             if s == 1:
-                dist, new, bb, ovf, which, hits = lax.cond(
+                dist, new, nwords, bb, ovf, which, hits = lax.cond(
                     big, do_bottom_up,
                     lambda: lax.cond(tiny, do_queue, do_dense))
             else:
-                dist, new, bb, ovf, which, hits = lax.cond(
+                dist, new, nwords, bb, ovf, which, hits = lax.cond(
                     big, do_bottom_up, do_dense)
             modes = modes.at[which].add(1)
 
@@ -614,6 +719,12 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
         new = new * valid_local[:, None].astype(new.dtype)
         dist = jnp.where(valid_local[:, None], dist, INF)
         active = lax.psum(new.sum(dtype=jnp.int32), grid_axes) > 0
+        if fused:
+            # next packed generation, pad bits cleared to match the masked
+            # byte frontier exactly
+            fwords = nwords & vwords
+            return (dist, new, fwords, level + 1, active, bytes_acc + bb,
+                    overflowed | ovf, modes, hits_acc + hits)
         return (dist, new, level + 1, active, bytes_acc + bb,
                 overflowed | ovf, modes, hits_acc + hits)
 
@@ -621,20 +732,27 @@ def _make_shard_fn_2d(part2: Partition2D, e_total: int, s: int,
              out_degree, dist0, frontier0, valid_local):
         if on_trace is not None:
             on_trace()
-        state0 = (dist0, frontier0, jnp.int32(1), jnp.bool_(True),
-                  jnp.float32(0), jnp.bool_(False), jnp.zeros(3, jnp.int32),
-                  jnp.int32(0))
+        tail0 = (jnp.int32(1), jnp.bool_(True), jnp.float32(0),
+                 jnp.bool_(False), jnp.zeros(3, jnp.int32), jnp.int32(0))
+        if fused:
+            vwords = fr.pack_bits(valid_local.astype(jnp.uint8)[:, None])
+            state0 = (dist0, frontier0, fr.pack_bits(frontier0)) + tail0
+        else:
+            vwords = None
+            state0 = (dist0, frontier0) + tail0
+        lvl_i, act_i = (3, 4) if fused else (2, 3)
 
         def cond(st):
-            return st[3] & (st[2] <= max_levels)
+            return st[act_i] & (st[lvl_i] <= max_levels)
 
         def body_fn(st):
             return body(st, src_rowlocal, dst_fold, in_src_global,
-                        in_dst_local, out_degree, valid_local)
+                        in_dst_local, out_degree, valid_local, vwords)
 
-        (dist, _, level, _, bytes_acc, overflowed, modes,
-         sieve_hits) = lax.while_loop(cond, body_fn, state0)
-        return dist, level - 1, bytes_acc, overflowed, modes, sieve_hits
+        st = lax.while_loop(cond, body_fn, state0)
+        level = st[lvl_i]
+        bytes_acc, overflowed, modes, sieve_hits = st[lvl_i + 2:lvl_i + 6]
+        return st[0], level - 1, bytes_acc, overflowed, modes, sieve_hits
 
     if opts.mode == "auto":
         shard_fn = _run

@@ -133,6 +133,39 @@ class BFSResult:
 # Plan: validated static metadata for one (graph, opts, mesh, S) traversal
 # ---------------------------------------------------------------------------
 
+def _roofline_row(wire_bytes, hbm_bytes, flops, overlap: bool) -> dict:
+    """Price one level variant on the TPU-v5e roofline.
+
+    Three analytic terms per level: collective bytes over ICI bandwidth,
+    memory traffic over HBM bandwidth, and elementwise work over peak
+    FLOPs (bit tests and compares counted one op each).  Fused plans
+    double-buffer the frontier generation, so the expand collective of
+    level L+1 can overlap the tail compute of level L — modeled as
+    ``max(collective, compute)``; unfused plans serialize the two
+    (``sum``).  Absolute numbers use the v5e constants from
+    launch/hlo_stats (the runtime here is CPU); the benchmark harness
+    validates *relative* phase shape against parsed profiler traces
+    after fitting one global calibration scale.
+    """
+    # deferred import: launch/hlo_stats is stdlib-only (import-light by
+    # its package contract), so core -> launch here cannot cycle
+    from repro.launch.hlo_stats import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+    t_coll = wire_bytes / ICI_BW
+    t_comp = hbm_bytes / HBM_BW + flops / PEAK_FLOPS_BF16
+    t_level = max(t_coll, t_comp) if overlap else t_coll + t_comp
+    return {
+        "wire_bytes": float(wire_bytes),
+        "hbm_bytes": float(hbm_bytes),
+        "flops": float(flops),
+        "t_collective_s": t_coll,
+        "t_compute_s": t_comp,
+        "t_level_s": t_level,
+        "bottleneck": "collective" if t_coll >= t_comp else "compute",
+        "model": "overlap(max)" if overlap else "serial(sum)",
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class BFSPlan:
     graph: "ShardedGraph"
@@ -159,6 +192,11 @@ class BFSPlan:
     # resolved visited-sieve decision (BFSOptions.sieve="auto" resolves at
     # plan time: on when the plan has a reachable queue path and p > 1)
     sieve: bool = False
+    # resolved fused fold/owner-update tail (BFSOptions.use_fused_tail;
+    # "auto" resolves at plan time: on when the dense/fold phase ships
+    # packed words — the fused kernel consumes them directly — and the
+    # mode has a dense path to fuse)
+    use_fused_tail: bool = False
 
     def describe(self) -> dict:
         """Static plan metadata (the non-per-run half of the old BFSStats)."""
@@ -231,6 +269,40 @@ class BFSPlan:
                 "bottom_up_level_bytes": ex.bottomup_level_bytes(
                     part2.n, part2.p, s, 1, wire=self.bottom_up_wire),
             })
+            # roofline latency terms per level variant (see _roofline_row):
+            # HBM traffic = edge index reads (8B/edge) + frontier gather/
+            # candidate scatter (1B/edge/source) + fold-width candidate
+            # array passes + the dist read/write + mask tails
+            e_p = self.graph2d.e_cap
+            meta["use_fused_tail"] = self.use_fused_tail
+            # byte passes only the *unfused* tail pays: the frontier pack
+            # feeding the expand allgather, the c-segment row unpack the
+            # expansion reads, the fold-word unpack, and the separate
+            # new-frontier mask pass — all skipped by the carried packed
+            # generation + fused fold/owner-update kernel
+            elim_hbm = (c + 5) * b * s if self.use_fused_tail else 0
+            elim_flops = (c + 2) * b * s if self.use_fused_tail else 0
+            meta["roofline"] = {
+                "dense": _roofline_row(
+                    meta["dense_level_bytes"],
+                    hbm_bytes=(8 * e_p + 2 * e_p * s
+                               + (3 * r * b + 10 * b) * s - elim_hbm),
+                    flops=(e_p + r * b + 4 * b) * s - elim_flops,
+                    overlap=self.use_fused_tail),
+                "queue": _roofline_row(
+                    meta["queue_level_bytes"],
+                    hbm_bytes=(8 * e_p + e_p * s + 16 * (r + c) * cap
+                               + 8 * b * s),
+                    flops=(e_p + (r + c) * cap) * s,
+                    overlap=False),
+                "bottom_up": _roofline_row(
+                    meta["bottom_up_level_bytes"],
+                    # in-edge blocks build lazily; the forward e_cap is the
+                    # cheap same-order proxy describe() is allowed to use
+                    hbm_bytes=8 * e_p + e_p * s + 8 * b * s,
+                    flops=e_p * s,
+                    overlap=self.use_fused_tail),
+            }
         else:
             density = self.opts.queue_cap / part.shard_size
             sieve_bytes = ((part.p - 1) * fr.sieve_layout(part.shard_size)[2]
@@ -254,6 +326,34 @@ class BFSPlan:
                     part.n, part.p, self.num_sources, 1,
                     wire=self.bottom_up_wire),
             })
+            e_p, in_e = self.graph.e_cap, self.graph.in_e_cap
+            shard, s = part.shard_size, self.num_sources
+            cap = self.opts.queue_cap
+            meta["use_fused_tail"] = self.use_fused_tail
+            # unfused-only byte passes (1-D shape of the same list as the
+            # 2-D branch: expand-side frontier pack, merged-word unpack,
+            # separate new-frontier mask pass)
+            elim_hbm = 5 * shard * s if self.use_fused_tail else 0
+            elim_flops = 2 * shard * s if self.use_fused_tail else 0
+            meta["roofline"] = {
+                "dense": _roofline_row(
+                    meta["dense_level_bytes"],
+                    hbm_bytes=(8 * e_p + 2 * e_p * s
+                               + (3 * part.n + 10 * shard) * s - elim_hbm),
+                    flops=(e_p + part.n + 4 * shard) * s - elim_flops,
+                    overlap=self.use_fused_tail),
+                "queue": _roofline_row(
+                    meta["queue_level_bytes"],
+                    hbm_bytes=(8 * e_p + e_p * s + 16 * part.p * cap
+                               + 8 * shard * s),
+                    flops=(e_p + part.p * cap) * s,
+                    overlap=False),
+                "bottom_up": _roofline_row(
+                    meta["bottom_up_level_bytes"],
+                    hbm_bytes=8 * in_e + in_e * s + 8 * shard * s,
+                    flops=in_e * s,
+                    overlap=self.use_fused_tail),
+            }
         return meta
 
     def plan_key(self) -> tuple:
@@ -280,8 +380,8 @@ class BFSPlan:
                    # packed-vs-bytes choice of each phase is in the
                    # resolved strategy names below; the bottom-up gather
                    # and the sieve have no registry strategy so their
-                   # resolutions key here
-                   self.bottom_up_wire, self.sieve)
+                   # resolutions key here, as does the resolved fused tail
+                   self.bottom_up_wire, self.sieve, self.use_fused_tail)
         strat_key = tuple(
             s.name if s is not None else None
             for s in (self.dense_strategy, self.queue_strategy,
@@ -336,6 +436,13 @@ class BFSPlan:
                     self.opts.queue_cap, b)
             if self.sieve:
                 wire += g.part.p * fr.sieve_layout(b)[2] * 4
+            if self.use_fused_tail:
+                # double-buffered frontier generation: the carried packed
+                # words plus the kernel's emitted next-generation words
+                # are both live across the level boundary (that overlap
+                # window is the point), and the fused kernel keeps one
+                # (32-row, S) dist tile of scratch in flight
+                wire += 2 * fr.packed_words(b) * 4 + 32 * 4
         else:
             g = self.graph
             n = g.part.n
@@ -349,6 +456,9 @@ class BFSPlan:
                     self.opts.queue_cap, g.part.shard_size)
             if self.sieve:
                 wire += g.p * fr.sieve_layout(g.part.shard_size)[2] * 4
+            if self.use_fused_tail:
+                # same double-buffered generation + kernel scratch as 2-D
+                wire += 2 * fr.packed_words(g.part.shard_size) * 4 + 32 * 4
             if self.opts.use_kernel:
                 # per-shard blocked adjacency resident on device for the
                 # engine's lifetime (tile values + block row/col indices),
@@ -448,6 +558,30 @@ def _resolve_bottom_up_wire(wire_format: str, n: int, p: int, s: int) -> str:
             < ex.bottomup_level_bytes(n, p, s)):
         return "packed"
     return "bytes"
+
+
+def _resolve_fused_tail(use_fused_tail, mode: str, dense_wire: str) -> bool:
+    """Resolve ``BFSOptions.use_fused_tail`` to the plan-time bool.
+
+    The fused kernel consumes the *packed* merged candidate words of the
+    dense (1-D) / fold (2-D) collective, so it only exists where that
+    phase resolved to a packed wire — ``True`` on a bytes wire is a
+    contradiction and fails loudly.  ``"auto"`` additionally requires a
+    mode with a dense path on the steady critical path: pure queue mode
+    re-packs per sparse level and only ever reaches the fused tail after
+    a bottom-up escalation, so auto keeps it off there.
+    """
+    if use_fused_tail is False:
+        return False
+    packed = dense_wire == "packed"
+    if use_fused_tail is True:
+        if not packed:
+            raise ValueError(
+                "use_fused_tail=True needs the dense/fold phase on a "
+                f"packed wire (resolved wire is {dense_wire!r}); set "
+                "wire_format='packed' or 'auto', or drop the flag")
+        return True
+    return packed and mode in ("dense", "auto")
 
 
 def normalize_ladder(ladder) -> tuple:
@@ -580,6 +714,10 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         # compiled loop ships
         sparse_args = (r, c, opts.queue_cap, 4,
                        opts.queue_cap / graph2d.part.shard_size)
+        # the fold strategy resolves first: the fused-tail decision keys
+        # off its resolved wire (the fused kernel consumes fold words)
+        fold_strategy = _resolve_strategy(
+            "fold_col", opts.fold_exchange, grid_args, opts.wire_format)
         return BFSPlan(
             graph=graph, opts=opts, mesh=mesh, axis=axes,
             axes_sizes=(r, c), num_sources=s,
@@ -588,9 +726,7 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
             expand_strategy=_resolve_strategy(
                 "expand_row", opts.expand_exchange, grid_args,
                 opts.wire_format),
-            fold_strategy=_resolve_strategy(
-                "fold_col", opts.fold_exchange, grid_args,
-                opts.wire_format),
+            fold_strategy=fold_strategy,
             expand_sparse_strategy=_resolve_strategy(
                 "expand_row_sparse", opts.expand_sparse_exchange,
                 sparse_args, opts.wire_format),
@@ -600,6 +736,8 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
             bottom_up_wire=_resolve_bottom_up_wire(
                 opts.wire_format, graph2d.part.n, part.p, s),
             sieve=_resolve_sieve(opts.sieve, opts.mode, part.p, s),
+            use_fused_tail=_resolve_fused_tail(
+                opts.use_fused_tail, opts.mode, fold_strategy.wire),
         )
 
     if isinstance(graph, ShardedGraph2D):
@@ -620,13 +758,14 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         raise ValueError(f"mesh axes {axes} of sizes {axes_sizes} do not "
                          f"multiply to the graph's p={part.p}")
 
+    dense_strategy = _resolve_strategy(
+        "dense", opts.dense_exchange,
+        (part.n, part.p, s, 1, axes_sizes), opts.wire_format)
     return BFSPlan(
         graph=graph, opts=opts, mesh=mesh, axis=axis,
         axes_sizes=axes_sizes, num_sources=s,
         max_levels=opts.max_levels or part.n_logical,
-        dense_strategy=_resolve_strategy(
-            "dense", opts.dense_exchange,
-            (part.n, part.p, s, 1, axes_sizes), opts.wire_format),
+        dense_strategy=dense_strategy,
         queue_strategy=_resolve_strategy(
             "queue", opts.queue_exchange,
             (part.p, opts.queue_cap, 4, opts.queue_cap / part.shard_size),
@@ -634,6 +773,8 @@ def plan(graph, opts: BFSOptions = BFSOptions(), *,
         bottom_up_wire=_resolve_bottom_up_wire(
             opts.wire_format, part.n, part.p, s),
         sieve=_resolve_sieve(opts.sieve, opts.mode, part.p, s),
+        use_fused_tail=_resolve_fused_tail(
+            opts.use_fused_tail, opts.mode, dense_strategy.wire),
     )
 
 
@@ -694,7 +835,7 @@ class BFSEngine:
                 plan_.max_levels, plan_.expand_strategy, plan_.fold_strategy,
                 plan_.expand_sparse_strategy, plan_.fold_sparse_strategy,
                 bottom_up_wire=plan_.bottom_up_wire, sieve=plan_.sieve,
-                on_trace=self._bump_trace)
+                fused=plan_.use_fused_tail, on_trace=self._bump_trace)
             # only the auto hybrid's bottom-up level reads the in-edge
             # blocks and out-degrees; dense/queue engines neither build
             # nor upload them.  Group names carry the partition kind: a
@@ -721,7 +862,7 @@ class BFSEngine:
                 expand_fn=expand_fn, expand_emits_packed=expand_packed,
                 n_kernel_args=n_kernel_args,
                 bottom_up_wire=plan_.bottom_up_wire, sieve=plan_.sieve,
-                on_trace=self._bump_trace)
+                fused=plan_.use_fused_tail, on_trace=self._bump_trace)
         n = part.n
 
         spec_edge = P(axis)

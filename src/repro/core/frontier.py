@@ -154,6 +154,36 @@ def unpack_bits(words: jnp.ndarray, m: int, n_blocks: int = 1) -> jnp.ndarray:
     return bits.reshape(n_blocks * m, s).astype(jnp.uint8)
 
 
+def expand_dense_2d_packed(frontier_words: jnp.ndarray,
+                           src_rowlocal: jnp.ndarray,
+                           dst_fold: jnp.ndarray, fold_len: int,
+                           m: int) -> jnp.ndarray:
+    """2-D top-down expansion straight from the *packed* row frontier.
+
+    ``frontier_words`` is the expand-phase allgather output kept packed:
+    ``(c * W, S)`` uint32, block ``k`` = row peer ``k``'s ``pack_bits``
+    output over its ``m``-vertex chunk (``W = packed_words(m)``).  Each
+    edge gathers one word and extracts its source's bit, so the
+    ``(c*b, S)`` row-frontier byte mask is never materialized between the
+    collective and the edge scatter — the fused-tail twin of
+    ``expand_bottom_up_packed`` for the expand phase.  Output matches
+    ``expand_dense_2d(unpack_bits(frontier_words, m, c), ...)`` bitwise.
+    """
+    valid = dst_fold >= 0
+    src = jnp.where(valid, src_rowlocal, 0)
+    blk = src // m
+    loc = src - blk * m
+    widx = blk * packed_words(m) + loc // 32
+    wvals = frontier_words[widx]                               # (E, S)
+    bit = (loc % 32).astype(jnp.uint32)
+    vals = ((wvals >> bit[:, None]) & jnp.uint32(1)).astype(jnp.uint8)
+    vals = vals * valid[:, None].astype(jnp.uint8)
+    idx = jnp.where(valid, dst_fold, fold_len)
+    cand = jnp.zeros((fold_len + 1, frontier_words.shape[1]),
+                     jnp.uint8).at[idx].max(vals)
+    return cand[:fold_len]
+
+
 def expand_bottom_up_packed(frontier_words: jnp.ndarray,
                             in_src_global: jnp.ndarray,
                             in_dst_local: jnp.ndarray, shard: int,

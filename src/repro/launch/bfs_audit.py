@@ -3,9 +3,10 @@
     PYTHONPATH=src python -m repro.launch.bfs_audit \
         --graph er:4096 --all-variants --devices 4
 
-For each partition x wire-format x mode variant, compile the plan (via
-the shared EngineCache, so twins that resolve to the same plan key cost
-one compile) and run the HLO plan auditor (analysis/hlo_audit): the
+For each partition x wire-format x mode x fused-tail variant, compile
+the plan (via the shared EngineCache, so twins that resolve to the same
+plan key cost one compile) and run the HLO plan auditor
+(analysis/hlo_audit): the
 collective census must match the resolved strategies, modeled bytes
 must agree with HLO received bytes within the documented tolerance, the
 dist buffer must be donated, no host transfer may hide in the loop, and
@@ -41,17 +42,25 @@ from repro.serve.engine_cache import default_engine_cache  # noqa: E402
 
 MODES = ("dense", "queue", "auto")
 WIRES = ("bytes", "packed", "compressed", "auto")
+# the fused-tail axis doubles the gate: every wire x mode compiles its
+# unfused twin and its "auto"-resolved twin (which turns the fused tail
+# on exactly where it can exist — packed dense/fold wire + a dense-path
+# mode; elsewhere both resolve to the same plan_key and the EngineCache
+# dedups the compile, so the doubling is nominal)
+FUSED = (False, "auto")
 
 
 def _variants(p: int, all_variants: bool, args):
     if not all_variants:
-        yield args.partition, args.mode, args.wire_format
+        yield (args.partition, args.mode, args.wire_format,
+               {"on": True, "off": False, "auto": "auto"}[args.fused_tail])
         return
     partitions = ("1d", "2d") if p > 1 else ("1d",)
     for part in partitions:
         for wire in WIRES:
             for mode in MODES:
-                yield part, mode, wire
+                for fused in FUSED:
+                    yield part, mode, wire, fused
 
 
 def main(argv=None):
@@ -68,6 +77,11 @@ def main(argv=None):
     ap.add_argument("--partition", default="1d", choices=["1d", "2d"])
     ap.add_argument("--mode", default="auto", choices=list(MODES))
     ap.add_argument("--wire-format", default="auto", choices=list(WIRES))
+    ap.add_argument("--fused-tail", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused fold/owner-update tail for the single-"
+                         "variant audit (--all-variants always audits "
+                         "both twins)")
     ap.add_argument("--grid", default=None, metavar="RxC",
                     help="2-D grid (default: most-square factorization)")
     ap.add_argument("--sources", type=int, default=1,
@@ -111,8 +125,9 @@ def main(argv=None):
     cache = default_engine_cache()
     reports = []
     failed = False
-    for part, mode, wire in _variants(p, args.all_variants, args):
-        opts = BFSOptions(mode=mode, wire_format=wire)
+    for part, mode, wire, fused in _variants(p, args.all_variants, args):
+        opts = BFSOptions(mode=mode, wire_format=wire,
+                          use_fused_tail=fused)
         t0 = time.time()
         if part == "2d":
             pl = plan(g2, opts, mesh=mesh_2d, num_sources=args.sources,
@@ -120,10 +135,16 @@ def main(argv=None):
         else:
             pl = plan(g1, opts, mesh=mesh_1d, axis="p",
                       num_sources=args.sources)
+        if (args.all_variants and fused == "auto"
+                and not pl.use_fused_tail):
+            # "auto" resolved the fused tail off — this plan_key is the
+            # fused=False twin already audited; skip the duplicate report
+            continue
         engine = cache.get_or_compile(pl)
+        fused_tag = ":fused" if pl.use_fused_tail else ""
         rep = hlo_audit.audit_engine(
             engine, tolerance=tol, run_check=not args.skip_run_check,
-            name=f"hlo:{part}:{mode}:{wire}:S{args.sources}")
+            name=f"hlo:{part}:{mode}:{wire}:S{args.sources}{fused_tag}")
         coll = rep.info["collectives"]
         print(f"{rep.summary()}  "
               f"[{coll['loop_data']} data + {coll['loop_control']} control "

@@ -239,6 +239,18 @@ def main(argv=None) -> int:
             fmt = " ".join(f"{k}={v}" for k, v in sorted(wires.items()))
             print(f"verify: lane {args.graph!r} wire formats: {fmt} "
                   f"sieve={lane.get('sieve')}")
+        try:
+            # per-level device step-time percentiles the server measured
+            # for the runs just verified (the distribution the fused
+            # fold/owner-update tail shortens)
+            lane_m = client.metrics()["lanes"].get(args.graph, {})
+            pl = lane_m.get("per_level_device") or {}
+            if pl.get("count"):
+                print(f"verify: lane {args.graph!r} per-level device time: "
+                      f"p50={pl['p50_ms']}ms p95={pl['p95_ms']}ms "
+                      f"p99={pl['p99_ms']}ms over {pl['count']} levels")
+        except (HTTPStatusError, OSError):
+            pass                       # metrics are best-effort here
         if _verify_depths(lane, results, args.include_parents):
             rc = 1
         else:

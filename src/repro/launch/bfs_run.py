@@ -27,12 +27,14 @@ from repro.launch import host_devices_from_argv, parse_graph_spec
 host_devices_from_argv()  # must precede the jax import below
 
 import argparse  # noqa: E402
+import contextlib  # noqa: E402
 import time  # noqa: E402
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
+from repro.analysis import trace_model  # noqa: E402
 from repro.configs.base import BFS_WORKLOADS  # noqa: E402
 from repro.core import BFSOptions, plan  # noqa: E402
 from repro.graphs import generate, shard_graph, shard_graph_2d  # noqa: E402
@@ -79,6 +81,11 @@ def main():
                          "next to the modeled bytes; exits 1 if any "
                          "engine fails the audit")
     ap.add_argument("--sources", type=int, default=1)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the timed "
+                         "traversals into DIR and print the per-phase "
+                         "device-time summary (expand / collective / "
+                         "fold / owner_update) parsed from it")
     ap.add_argument("--repeats", type=int, default=3,
                     help="traversals to run against each compiled engine")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
@@ -198,27 +205,37 @@ def main():
             audit_failed |= not rep.ok()
 
         rng = np.random.default_rng(0)
-        for rep in range(max(1, args.repeats)):
-            sources = (list(range(args.sources)) if rep == 0 else
-                       sorted(rng.choice(n, size=args.sources,
-                                         replace=False).tolist()))
-            t0 = time.time()
-            res = engine.run(sources)
-            run_s = time.time() - t0
-            stats = res.stats()
-            hits = int(stats.sieve_hits)
-            # hit-rate: share of would-be enqueued candidates the sieve
-            # dropped before they reached the wire (visited ids that the
-            # coarse replicated summary could already prove discovered)
-            rate = hits / max(1, hits + stats.visited)
-            sieve_str = (f" sieve_hits={hits} ({rate:.0%})"
-                         if meta["sieve"] else "")
-            print(f"run[{rep}] sources={sources[:4]}"
-                  f"{'...' if len(sources) > 4 else ''}: "
-                  f"levels={stats.levels} visited={stats.visited} "
-                  f"modes={stats.mode_counts} "
-                  f"comm_bytes/chip={stats.comm_bytes:.2e} "
-                  f"wall={run_s:.3f}s{sieve_str}")
+        profile_cm = (trace_model.capture(args.profile) if args.profile
+                      else contextlib.nullcontext())
+        total_levels = 0
+        with profile_cm:
+            for rep in range(max(1, args.repeats)):
+                sources = (list(range(args.sources)) if rep == 0 else
+                           sorted(rng.choice(n, size=args.sources,
+                                             replace=False).tolist()))
+                t0 = time.time()
+                res = engine.run(sources)
+                run_s = time.time() - t0
+                stats = res.stats()
+                total_levels += stats.levels
+                hits = int(stats.sieve_hits)
+                # hit-rate: share of would-be enqueued candidates the
+                # sieve dropped before they reached the wire (visited ids
+                # that the coarse replicated summary could already prove
+                # discovered)
+                rate = hits / max(1, hits + stats.visited)
+                sieve_str = (f" sieve_hits={hits} ({rate:.0%})"
+                             if meta["sieve"] else "")
+                print(f"run[{rep}] sources={sources[:4]}"
+                      f"{'...' if len(sources) > 4 else ''}: "
+                      f"levels={stats.levels} visited={stats.visited} "
+                      f"modes={stats.mode_counts} "
+                      f"comm_bytes/chip={stats.comm_bytes:.2e} "
+                      f"wall={run_s:.3f}s{sieve_str}")
+        if args.profile:
+            timings = trace_model.parse_trace(args.profile,
+                                              n_levels=total_levels)
+            print(trace_model.format_summary(timings))
         assert engine.trace_count == engine.compile_traces, \
             "engine retraced after compile — amortization broken"
 

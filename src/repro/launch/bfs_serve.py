@@ -44,6 +44,7 @@ from repro.launch import host_devices_from_argv, parse_graph_spec
 host_devices_from_argv()  # must precede the jax import below
 
 import argparse  # noqa: E402
+import contextlib  # noqa: E402
 import sys  # noqa: E402
 import time  # noqa: E402
 
@@ -51,6 +52,7 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
+from repro.analysis import trace_model  # noqa: E402
 from repro.configs.base import BFS_WORKLOADS  # noqa: E402
 from repro.core import BFSOptions  # noqa: E402
 from repro.graphs import generate, shard_graph  # noqa: E402
@@ -64,6 +66,19 @@ _GEN_DEFAULTS = {
     "small_world": {"k": 8, "beta": 0.1},
     "rmat": {"edge_factor": 8},
 }
+
+
+def _print_profile(logdir: str) -> None:
+    """Parse + print the phase summary of a captured serving trace.
+
+    Serving windows interleave traversals of several lanes, so levels of
+    different runs do not cluster cleanly — the summary reports phase
+    totals only (the median-gap segmentation heuristic still splits what
+    it can)."""
+    try:
+        print(trace_model.format_summary(trace_model.parse_trace(logdir)))
+    except FileNotFoundError as exc:
+        print(f"profile: {exc}", file=sys.stderr)
 
 
 def _serve_http(args, svc, graph_specs):
@@ -98,13 +113,18 @@ def _serve_http(args, svc, graph_specs):
             httpd.drain_and_stop()
 
         threading.Thread(target=_timer, daemon=True).start()
+    profile_cm = (trace_model.capture(args.profile) if args.profile
+                  else contextlib.nullcontext())
     try:
-        httpd.serve_forever()
+        with profile_cm:
+            httpd.serve_forever()
     except KeyboardInterrupt:
         print("interrupt: draining", flush=True)
         frontend.shutdown()
     finally:
         httpd.server_close()
+    if args.profile:
+        _print_profile(args.profile)
 
     st = svc.cache_stats()
     done = sum(m.completed for m in frontend.metrics.lanes.values())
@@ -158,6 +178,11 @@ def main():
     ap.add_argument("--serve-secs", type=float, default=0.0,
                     help="auto-shutdown the HTTP server after this many "
                          "seconds (0 = run until /admin/shutdown or ^C)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the serving "
+                         "window (self-driven loop, or HTTP accept loop "
+                         "until drain) into DIR and print the per-phase "
+                         "device-time summary parsed from it")
     ap.add_argument("--devices", type=int, default=0)  # parsed above
     args = ap.parse_args()
 
@@ -244,9 +269,14 @@ def main():
         n = edge_lists[name][2]
         svc.submit(TraversalRequest(rid=i, source=int(rng.integers(0, n)),
                                     graph=name))
+    profile_cm = (trace_model.capture(args.profile) if args.profile
+                  else contextlib.nullcontext())
     t0 = time.time()
-    done = svc.run_until_drained()
+    with profile_cm:
+        done = svc.run_until_drained()
     dt = time.time() - t0
+    if args.profile:
+        _print_profile(args.profile)
     print(f"{len(done)} traversals over {len(names)} graph(s) in {dt:.2f}s "
           f"({len(done)/max(dt, 1e-9):.1f} req/s, "
           f"{dt/max(len(done), 1)*1e3:.1f} ms/req)")

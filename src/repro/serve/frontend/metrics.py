@@ -29,6 +29,11 @@ from typing import Dict, Optional
 DEFAULT_BOUNDS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0)
 
+#: per-level step times sit 1-3 decades below request latencies (a
+#: traversal is levels x step), so the per-level histogram extends the
+#: default bounds downward into the sub-millisecond range
+PER_LEVEL_BOUNDS = (0.0001, 0.00025, 0.0005) + DEFAULT_BOUNDS
+
 
 class Histogram:
     """Fixed-bound latency histogram (seconds in, ms out).
@@ -97,11 +102,17 @@ class LaneMetrics:
 
     def __init__(self):
         self._lock = threading.Lock()
-        # guarded-by(_lock): queue_wait, device, e2e, completed, failed,
-        # guarded-by(_lock): rejected, rejected_invalid, bucket_counts,
-        # guarded-by(_lock): sources_served, wire_bytes, _ewma_e2e_s
+        # guarded-by(_lock): queue_wait, device, per_level, e2e, completed,
+        # guarded-by(_lock): failed, rejected, rejected_invalid,
+        # guarded-by(_lock): bucket_counts, sources_served, wire_bytes,
+        # guarded-by(_lock): _ewma_e2e_s
         self.queue_wait = Histogram()
         self.device = Histogram()
+        # per-level device step time: each completed run contributes one
+        # observation per traversal level (device_s / levels), so deep
+        # traversals weigh in proportion to the level iterations they ran
+        # — the distribution the fused-tail work (ISSUE 9) shortens
+        self.per_level = Histogram(PER_LEVEL_BOUNDS)
         self.e2e = Histogram()
         self.completed = 0
         self.failed = 0
@@ -129,12 +140,14 @@ class LaneMetrics:
     def record_completed(self, *, queue_wait_s: float, device_s: float,
                          e2e_s: float, bucket: int, n_sources: int,
                          wire_bytes: Optional[Dict[str, float]] = None,
-                         ) -> None:
+                         levels: int = 0) -> None:
         with self._lock:
             for phase, b in (wire_bytes or {}).items():
                 self.wire_bytes[phase] = self.wire_bytes.get(phase, 0.0) + b
             self.queue_wait.observe(queue_wait_s)
             self.device.observe(device_s)
+            for _ in range(int(levels)):
+                self.per_level.observe(device_s / levels)
             self.e2e.observe(e2e_s)
             self.completed += 1
             self.sources_served += int(n_sources)
@@ -166,6 +179,7 @@ class LaneMetrics:
                                in sorted(self.wire_bytes.items())},
                 "queue_wait": self.queue_wait.snapshot(),
                 "device": self.device.snapshot(),
+                "per_level_device": self.per_level.snapshot(),
                 "e2e": self.e2e.snapshot(),
                 "ewma_e2e_ms": round(self._ewma_e2e_s * 1e3, 3)
                                 if self._ewma_e2e_s is not None else None,

@@ -259,7 +259,8 @@ class BFSFrontend:
                         e2e_s=pending.t_done - pending.t_admit,
                         bucket=pending.bucket,
                         n_sources=len(pending.sources),
-                        wire_bytes=self._run_wire_bytes(name, res))
+                        wire_bytes=self._run_wire_bytes(name, res),
+                        levels=res.run_stats.to_host()["levels"])
                 if pending.t_done is None:
                     pending.t_done = time.monotonic()
                 self.gates[name].complete(cost)

@@ -230,6 +230,21 @@ def test_lane_metrics_counters_and_ewma():
     assert m.ewma_e2e_s() == pytest.approx(0.3 * 0.022 + 0.7 * 0.011)
 
 
+def test_lane_metrics_per_level_device_histogram():
+    m = LaneMetrics()
+    # no levels reported -> the per-level histogram stays empty
+    m.record_completed(queue_wait_s=0.0, device_s=0.01, e2e_s=0.01,
+                       bucket=1, n_sources=1)
+    assert m.snapshot()["per_level_device"]["count"] == 0
+    # 3 levels at 0.6ms device time -> three 0.2ms per-level samples
+    m.record_completed(queue_wait_s=0.0, device_s=0.0006, e2e_s=0.001,
+                       bucket=1, n_sources=1, levels=3)
+    snap = m.snapshot()["per_level_device"]
+    assert snap["count"] == 3
+    assert snap["p50_ms"] == 0.25        # le_0.25ms sub-ms bucket
+    assert snap["p99_ms"] == 0.25
+
+
 # ---------------------------------------------------------------------------
 # BFSService: bucket routing + drain satellites
 # ---------------------------------------------------------------------------
