@@ -264,7 +264,10 @@ def analyze_lock_source(src: str, path: str,
 SERVE_MODULES = ("engine_cache.py", "bfs_service.py",
                  os.path.join("frontend", "server.py"),
                  os.path.join("frontend", "admission.py"),
-                 os.path.join("frontend", "metrics.py"))
+                 os.path.join("frontend", "metrics.py"),
+                 os.path.join("resilience", "faults.py"),
+                 os.path.join("resilience", "breaker.py"),
+                 os.path.join("resilience", "watchdog.py"))
 
 
 def analyze_serve(root: Optional[str] = None) -> AuditReport:

@@ -41,6 +41,9 @@ from repro.core import frontier as fr
 from repro.core.bfs import (BFSOptions, BFSStats, INF, _make_shard_fn,
                             _make_shard_fn_2d, validate_sources)
 from repro.core.compat import shard_map
+# chaos layer: a no-op global read unless a FaultPlan is installed
+# (stdlib-only module; degrade.py defers its engine import, no cycle)
+from repro.serve.resilience import faults as _faults
 
 if TYPE_CHECKING:
     from repro.graphs.formats import ShardedGraph, ShardedGraph2D
@@ -818,6 +821,7 @@ class BFSEngine:
 
     def __init__(self, plan_: BFSPlan):
         self.plan = plan_
+        _faults.fire("engine.compile", _faults.plan_tag(plan_))
         self._trace_count = 0
         opts, mesh = plan_.opts, plan_.mesh
         s = plan_.num_sources
@@ -1024,6 +1028,7 @@ class BFSEngine:
                              "distance/source buffers are int32")
         padded = np.full((s,), -1, dtype=np.int32)
         padded[:n_req] = src_arr
+        _faults.fire("engine.dispatch", _faults.plan_tag(self.plan))
         src_dev = jax.device_put(padded, self._sh_repl)
 
         dist0, frontier0 = self._init_c(src_dev)

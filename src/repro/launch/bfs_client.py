@@ -20,6 +20,8 @@ regenerates each lane's graph from the ``spec`` the server advertises in
 reference (and parent rows for validity when ``--include-parents``).
 ``--expect-429`` flips the contract: the run fails unless at least one
 request was rejected with 429 (and 429s stop counting as errors).
+``--max-retries N`` makes the client honor the server's ``Retry-After``
+hint on 429/503 (capped, jittered backoff); the default 0 fails fast.
 
 Import-light on purpose: urllib only, numpy/JAX imported lazily inside
 ``--verify`` so a plain round-trip works without touching the device
@@ -30,29 +32,53 @@ from __future__ import annotations
 
 import argparse
 import json
+import random
 import sys
 import threading
 import time
 import urllib.error
 import urllib.request
 
+#: ceiling on one Retry-After-driven backoff sleep (a misbehaving or
+#: draining server must not park a client thread for minutes)
+MAX_BACKOFF_S = 10.0
+
+#: statuses worth retrying when the caller opts in: admission shed (429)
+#: and not-ready/breaker-open/draining (503) — both explicitly
+#: retry-later states the server stamps a Retry-After on
+RETRYABLE_STATUSES = (429, 503)
+
 
 class HTTPStatusError(RuntimeError):
-    """Non-2xx response; carries the status and decoded error payload."""
+    """Non-2xx response; carries the status and decoded error payload.
 
-    def __init__(self, status: int, payload: dict, url: str):
+    ``retry_after_s`` is the server's ``Retry-After`` header in seconds
+    (None when absent) — what ``max_retries > 0`` clients sleep on.
+    """
+
+    def __init__(self, status: int, payload: dict, url: str,
+                 retry_after_s=None):
         super().__init__(f"HTTP {status} from {url}: "
                          f"{payload.get('error', payload)}")
         self.status = status
         self.payload = payload
+        self.retry_after_s = retry_after_s
 
 
 class BFSClient:
-    def __init__(self, base_url: str, timeout_s: float = 120.0):
+    """Stdlib client; ``max_retries > 0`` honors ``Retry-After`` on
+    429/503 with capped jittered sleeps (default 0 = fail fast, the
+    pre-retry behavior exactly)."""
+
+    def __init__(self, base_url: str, timeout_s: float = 120.0, *,
+                 max_retries: int = 0, seed: int = 0):
         self.base_url = base_url.rstrip("/")
         self.timeout_s = timeout_s
+        self.max_retries = int(max_retries)
+        self.retries_used = 0            # cumulative, for smoke summaries
+        self._rng = random.Random(seed)
 
-    def _request(self, path: str, body: dict = None) -> dict:
+    def _request_once(self, path: str, body: dict = None) -> dict:
         url = self.base_url + path
         data = json.dumps(body).encode() if body is not None else None
         req = urllib.request.Request(
@@ -66,13 +92,44 @@ class BFSClient:
                 payload = json.loads(exc.read().decode())
             except Exception:
                 payload = {"error": str(exc)}
-            raise HTTPStatusError(exc.code, payload, url) from None
+            retry_after = exc.headers.get("Retry-After")
+            try:
+                retry_after = (float(retry_after)
+                               if retry_after is not None else None)
+            except ValueError:
+                retry_after = None
+            raise HTTPStatusError(exc.code, payload, url,
+                                  retry_after_s=retry_after) from None
+
+    def _request(self, path: str, body: dict = None) -> dict:
+        """One request, retried up to ``max_retries`` times on 429/503.
+
+        Sleeps the server's Retry-After hint (default 1s when absent),
+        capped at ``MAX_BACKOFF_S`` and jittered +-25% so synchronized
+        clients don't re-burst on the same tick."""
+        attempt = 0
+        while True:
+            try:
+                return self._request_once(path, body)
+            except HTTPStatusError as exc:
+                if (exc.status not in RETRYABLE_STATUSES
+                        or attempt >= self.max_retries):
+                    raise
+                attempt += 1
+                self.retries_used += 1
+                hint = exc.retry_after_s if exc.retry_after_s else 1.0
+                delay = min(MAX_BACKOFF_S, hint)
+                time.sleep(delay * (1.0 + 0.25 * (2 * self._rng.random()
+                                                  - 1)))
 
     # ------------------------------------------------------------ endpoints
-    def traverse(self, graph, sources, include_parents: bool = False) -> dict:
+    def traverse(self, graph, sources, include_parents: bool = False,
+                 deadline_ms=None) -> dict:
         body = {"sources": list(sources), "include_parents": include_parents}
         if graph is not None:
             body["graph"] = graph
+        if deadline_ms is not None:
+            body["deadline_ms"] = deadline_ms
         return self._request("/v1/traverse", body)
 
     def graphs(self) -> dict:
@@ -83,6 +140,9 @@ class BFSClient:
 
     def health(self) -> dict:
         return self._request("/healthz")
+
+    def ready(self) -> dict:
+        return self._request("/readyz")
 
     def shutdown(self) -> dict:
         return self._request("/admin/shutdown", body={})
@@ -152,12 +212,17 @@ def main(argv=None) -> int:
                          "the regenerated graph (needs the server spec)")
     ap.add_argument("--expect-429", action="store_true",
                     help="fail unless >= 1 request was rejected with 429")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="retry 429/503 responses up to N times, sleeping "
+                         "the server's Retry-After hint (capped, jittered); "
+                         "0 = fail fast (default)")
     ap.add_argument("--timeout", type=float, default=120.0)
     ap.add_argument("--shutdown", action="store_true",
                     help="POST /admin/shutdown after the run")
     args = ap.parse_args(argv)
 
-    client = BFSClient(args.url, timeout_s=args.timeout)
+    client = BFSClient(args.url, timeout_s=args.timeout,
+                       max_retries=args.max_retries, seed=args.seed)
     catalog = client.graphs()["graphs"]
     lanes = {g["name"]: g for g in catalog}
     if args.graph is None and len(lanes) == 1:
@@ -173,7 +238,6 @@ def main(argv=None) -> int:
               f"{max(lane['buckets'])}", file=sys.stderr)
         return 2
 
-    import random
     rng = random.Random(args.seed)
     source_sets = [rng.sample(range(n), args.batch)
                    for _ in range(args.requests)]
@@ -209,7 +273,8 @@ def main(argv=None) -> int:
     print(f"{len(results)}/{args.requests} ok on lane {args.graph!r} "
           f"(batch={args.batch}, served buckets="
           f"{sorted({r['bucket'] for r in results})}), "
-          f"{len(rejected)} x 429, {len(errors)} errors; "
+          f"{len(rejected)} x 429, {len(errors)} errors, "
+          f"{client.retries_used} retries; "
           f"p50={p(0.5):.1f}ms p95={p(0.95):.1f}ms")
     try:
         cache = client.metrics().get("engine_cache", {})

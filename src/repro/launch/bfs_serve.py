@@ -37,6 +37,13 @@ and ``/metrics`` serves per-lane latency histograms next to the cache
 counters.  ``HOST:0`` binds an ephemeral port; ``--port-file`` writes
 the bound port for scripted callers.  The server runs until
 ``POST /admin/shutdown`` (graceful drain), SIGINT, or ``--serve-secs``.
+
+Resilience knobs (HTTP mode): ``--breaker-threshold`` /
+``--breaker-reset-secs`` size the per-lane circuit breakers,
+``--watchdog-secs`` bounds each device round, ``--no-degrade`` turns
+off the degradation arms, and ``--default-deadline-ms`` stamps a
+deadline on requests that carry none; ``/readyz`` reports readiness
+separately from ``/healthz`` liveness.
 """
 
 from repro.launch import host_devices_from_argv, parse_graph_spec
@@ -95,7 +102,14 @@ def _serve_http(args, svc, graph_specs):
     httpd, frontend = serve_http(
         svc, host, port, max_queue_depth=args.queue_depth,
         max_inflight_mb=args.max_inflight_mb,
-        stats_interval_s=args.stats_interval, graph_specs=graph_specs)
+        stats_interval_s=args.stats_interval, graph_specs=graph_specs,
+        breaker_threshold=args.breaker_threshold,
+        breaker_reset_s=args.breaker_reset_s,
+        watchdog_timeout_s=(args.watchdog_secs
+                            if args.watchdog_secs > 0 else None),
+        degrade=not args.no_degrade,
+        default_deadline_ms=(args.default_deadline_ms
+                             if args.default_deadline_ms > 0 else None))
     bound = httpd.server_address[1]
     print(f"serving on http://{host}:{bound} "
           f"(queue_depth={args.queue_depth}, "
@@ -175,6 +189,22 @@ def main():
                     help="seconds between serving stats log lines (0=off)")
     ap.add_argument("--port-file", default=None,
                     help="write the bound HTTP port to this file")
+    ap.add_argument("--breaker-threshold", type=int, default=5,
+                    help="consecutive lane failures that open its circuit "
+                         "breaker (HTTP mode)")
+    ap.add_argument("--breaker-reset-secs", type=float, default=5.0,
+                    dest="breaker_reset_s",
+                    help="open-circuit cooldown before half-open probes")
+    ap.add_argument("--watchdog-secs", type=float, default=0.0,
+                    help="fail a device round exceeding this bound with a "
+                         "typed 500; other lanes keep serving (0 = off)")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="disable degradation arms (other buckets, split "
+                         "runs, the uncompressed wire tier) on persistent "
+                         "transient failures")
+    ap.add_argument("--default-deadline-ms", type=float, default=0.0,
+                    help="server-side deadline for requests that carry no "
+                         "deadline_ms of their own (0 = none)")
     ap.add_argument("--serve-secs", type=float, default=0.0,
                     help="auto-shutdown the HTTP server after this many "
                          "seconds (0 = run until /admin/shutdown or ^C)")

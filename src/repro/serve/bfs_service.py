@@ -40,6 +40,8 @@ from repro.core.engine import pick_bucket, plan_ladder
 from repro.serve.batcher import SlotPool
 from repro.serve.engine_cache import (EngineCache, GraphCatalog,
                                       default_engine_cache)
+from repro.serve.resilience import faults as _faults
+from repro.serve.resilience.errors import StrandedRequestError
 
 DEFAULT_GRAPH = "default"
 
@@ -56,6 +58,8 @@ class TraversalRequest:
     levels: int = 0                      # eccentricity of this source's tree
     visited: int = 0
     done: bool = False
+    error: Optional[BaseException] = None   # typed rejection (stranded
+                                            # drains set StrandedRequestError)
 
 
 class _Lane:
@@ -275,6 +279,7 @@ class BFSService:
         lane = self.lane(name) if name is not None else self._sole_lane()
         srcs = validate_sources(sources, lane.n_logical,
                                 max_sources=lane.ladder[-1])
+        _faults.fire("service.dispatch", lane.name)
         plan_ = lane.plan_for(len(srcs))
         engine = self.cache.get_or_compile(plan_)
         return engine.run_async([int(s) for s in srcs]), plan_.num_sources
@@ -294,6 +299,28 @@ class BFSService:
         return {name: lane.pending() for name, lane in self._lanes.items()
                 if lane.pending()}
 
+    def reject_stranded(self, reason: str) -> List[TraversalRequest]:
+        """Fail every queued / in-slot request with a typed
+        ``StrandedRequestError`` and empty the pools.
+
+        This is the shutdown path's leak stopper: a request object whose
+        holder is still waiting observes ``done=True`` with ``error``
+        set, instead of sitting in a dead pool forever.  Returns the
+        rejected requests (callers fold them into their ledger)."""
+        rejected: List[TraversalRequest] = []
+        for name in self._order:
+            pool = self._lanes[name].pool
+            stranded = pool.queue + [
+                r for r in pool.slots if r is not None and not r.done]
+            pool.queue.clear()
+            pool.slots[:] = [None] * len(pool.slots)
+            for r in stranded:
+                r.error = StrandedRequestError(
+                    f"request {r.rid} on lane {name!r} stranded: {reason}")
+                r.done = True
+                rejected.append(r)
+        return rejected
+
     def run_until_drained(self, max_steps: int = 10_000,
                           timeout_s: Optional[float] = None):
         """Step until every submitted request on every lane has finished.
@@ -308,6 +335,11 @@ class BFSService:
         ``max_steps``, and serving shutdown paths need a time bound, not
         a step bound.  The error names each lane's pending count so a
         stuck lane is identifiable instead of one opaque total.
+
+        On that timeout every still-pending request is *rejected*, not
+        leaked: each gets ``done=True`` and a typed
+        ``StrandedRequestError`` in ``.error`` (see ``reject_stranded``),
+        so callers holding request objects always observe an outcome.
         """
         done = []
         deadline = (time.monotonic() + timeout_s
@@ -325,8 +357,10 @@ class BFSService:
             limit = (f"timeout_s={timeout_s}" if deadline is not None
                      and time.monotonic() >= deadline
                      else f"max_steps={max_steps}")
+            self.reject_stranded(f"drain gave up at {limit}")
             raise RuntimeError(
                 f"run_until_drained: {pending} request(s) still pending "
-                f"after {limit} ({len(done)} finished; per-lane pending: "
-                f"{per_lane}); raise the bound or submit fewer requests")
+                f"after {limit} ({len(done)} finished, each rejected with "
+                f"StrandedRequestError; per-lane pending: {per_lane}); "
+                f"raise the bound or submit fewer requests")
         return done

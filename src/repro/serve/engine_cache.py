@@ -40,6 +40,8 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from repro.serve.resilience import faults as _faults
+
 
 def _to_key(obj) -> tuple:
     """Accept a BFSPlan, a BFSEngine or a raw key tuple."""
@@ -146,6 +148,10 @@ class EngineCache:
         eviction in between).
         """
         key = plan.plan_key()
+        # chaos: "storm" specs evict everything unpinned before the
+        # lookup (cache-eviction storms); no-op without an active plan
+        _faults.fire("cache.get", _faults.plan_tag(plan),
+                     storm=self.clear_unpinned)
         while True:
             with self._lock:
                 ent = self._entries.get(key)
@@ -165,6 +171,7 @@ class EngineCache:
             # builder on the next loop)
             ev.wait()
         try:
+            _faults.fire("cache.compile", _faults.plan_tag(plan))
             t0 = time.perf_counter()
             engine = plan.compile()
             dt = time.perf_counter() - t0
@@ -256,6 +263,16 @@ class EngineCache:
         with self._lock:
             self.evictions += len(self._entries)
             self._entries.clear()
+
+    def clear_unpinned(self) -> int:
+        """Drop every unpinned entry (the eviction-storm hammer the
+        chaos layer swings); returns the number dropped."""
+        with self._lock:
+            victims = [k for k, e in self._entries.items() if not e.pinned]
+            for k in victims:
+                del self._entries[k]
+            self.evictions += len(victims)
+            return len(victims)
 
 
 # ---------------------------------------------------------------------------

@@ -105,7 +105,8 @@ class LaneMetrics:
         # guarded-by(_lock): queue_wait, device, per_level, e2e, completed,
         # guarded-by(_lock): failed, rejected, rejected_invalid,
         # guarded-by(_lock): bucket_counts, sources_served, wire_bytes,
-        # guarded-by(_lock): _ewma_e2e_s
+        # guarded-by(_lock): _ewma_e2e_s, deadline_expired,
+        # guarded-by(_lock): breaker_rejected, retries, degraded
         self.queue_wait = Histogram()
         self.device = Histogram()
         # per-level device step time: each completed run contributes one
@@ -124,6 +125,12 @@ class LaneMetrics:
         # plan's per-level pricing x levels each run spent in the phase)
         self.wire_bytes: Dict[str, float] = {}
         self._ewma_e2e_s = None
+        # resilience counters (server.py's deadline / breaker / retry /
+        # degradation paths record here; /metrics surfaces them)
+        self.deadline_expired = 0      # 504s (reaped or expired waits)
+        self.breaker_rejected = 0      # 503s shed while the circuit is open
+        self.retries = 0               # transient-failure retry attempts
+        self.degraded: Dict[str, int] = {}   # serves per degradation arm
 
     # ------------------------------------------------------------ recording
     def record_rejected(self, *, invalid: bool = False) -> None:
@@ -136,6 +143,22 @@ class LaneMetrics:
     def record_failed(self) -> None:
         with self._lock:
             self.failed += 1
+
+    def record_deadline_expired(self) -> None:
+        with self._lock:
+            self.deadline_expired += 1
+
+    def record_breaker_rejected(self) -> None:
+        with self._lock:
+            self.breaker_rejected += 1
+
+    def record_retry(self) -> None:
+        with self._lock:
+            self.retries += 1
+
+    def record_degraded(self, arm: str) -> None:
+        with self._lock:
+            self.degraded[arm] = self.degraded.get(arm, 0) + 1
 
     def record_completed(self, *, queue_wait_s: float, device_s: float,
                          e2e_s: float, bucket: int, n_sources: int,
@@ -172,6 +195,10 @@ class LaneMetrics:
                 "failed": self.failed,
                 "rejected": self.rejected,
                 "rejected_invalid": self.rejected_invalid,
+                "deadline_expired": self.deadline_expired,
+                "breaker_rejected": self.breaker_rejected,
+                "retries": self.retries,
+                "degraded": dict(sorted(self.degraded.items())),
                 "sources_served": self.sources_served,
                 "buckets": {str(k): v for k, v
                             in sorted(self.bucket_counts.items())},

@@ -49,9 +49,10 @@ def parse_traverse_request(body: bytes) -> dict:
     """Decode + structurally validate a ``/v1/traverse`` body.
 
     Returns ``{"graph": str|None, "sources": [int, ...],
-    "include_parents": bool}``.  Range/duplicate checks are deferred to
-    the service's submit-time ``validate_sources`` (they need the lane's
-    vertex count); everything shape- and type-level fails here.
+    "include_parents": bool, "deadline_ms": float|None}``.
+    Range/duplicate checks are deferred to the service's submit-time
+    ``validate_sources`` (they need the lane's vertex count); everything
+    shape- and type-level fails here.
     """
     if len(body) > MAX_BODY_BYTES:
         raise RequestError(f"request body of {len(body)} bytes exceeds "
@@ -63,10 +64,11 @@ def parse_traverse_request(body: bytes) -> dict:
     if not isinstance(obj, dict):
         raise RequestError("request body must be a JSON object with a "
                            "'sources' list (and optionally 'graph')")
-    unknown = sorted(set(obj) - {"graph", "sources", "include_parents"})
+    unknown = sorted(set(obj) - {"graph", "sources", "include_parents",
+                                 "deadline_ms"})
     if unknown:
         raise RequestError(f"unknown request field(s) {unknown}; expected "
-                           "graph, sources, include_parents")
+                           "graph, sources, include_parents, deadline_ms")
 
     graph = obj.get("graph")
     if graph is not None and not isinstance(graph, str):
@@ -88,8 +90,22 @@ def parse_traverse_request(body: bytes) -> dict:
     include_parents = obj.get("include_parents", False)
     if not isinstance(include_parents, bool):
         raise RequestError("'include_parents' must be a boolean")
+
+    # request deadline: a *budget* in ms from admission, propagated
+    # admission -> queue -> dispatch so expired work is reaped (504)
+    # before it reaches the device
+    deadline_ms = obj.get("deadline_ms")
+    if deadline_ms is not None:
+        if isinstance(deadline_ms, bool) or \
+                not isinstance(deadline_ms, (int, float)):
+            raise RequestError("'deadline_ms' must be a number of "
+                               "milliseconds")
+        if not deadline_ms > 0:
+            raise RequestError(f"'deadline_ms' must be positive "
+                               f"({deadline_ms})")
+        deadline_ms = float(deadline_ms)
     return {"graph": graph, "sources": [int(s) for s in sources],
-            "include_parents": include_parents}
+            "include_parents": include_parents, "deadline_ms": deadline_ms}
 
 
 def derive_parents(src: np.ndarray, dst: np.ndarray,

@@ -16,15 +16,29 @@ serialization.
 Endpoints::
 
     POST /v1/traverse    {"graph": name, "sources": [ids...],
-                          "include_parents": false}
+                          "include_parents": false, "deadline_ms": 500}
     GET  /v1/graphs      lanes, ladders, admission config, graph specs
     GET  /healthz        liveness + draining flag
-    GET  /metrics        per-lane histograms/counters + engine-cache stats
+    GET  /readyz         readiness: 503 while draining, every lane's
+                         breaker open, or a watchdog round is stuck
+    GET  /metrics        per-lane histograms/counters + engine-cache
+                         stats + breaker/deadline/retry/degrade counters
     POST /admin/shutdown graceful drain, then server stop
 
 Error mapping: schema violations and source validation -> 400 (413 for
 oversized bodies), unknown lane -> 404, admission bound -> 429 with a
-``Retry-After`` header, draining -> 503.
+``Retry-After`` header, draining or open circuit -> 503 (+Retry-After),
+expired request deadline -> 504, stuck dispatch round -> 500.
+
+Resilience (serve/resilience/): per-lane circuit breakers shed load at
+the admission door and at dispatch; transient compile/dispatch failures
+are retried with bounded exponential backoff, then served on a
+degradation arm (another bucket, a split over a smaller bucket, the
+uncompressed wire tier); request deadlines propagate admission ->
+queue -> dispatch so expired entries are reaped before device work; a
+watchdog bounds each device round so one wedged lane cannot freeze the
+dispatcher.  All of it is driven by typed errors and is inert by
+default (no deadline, no watchdog, retries only on ``TransientError``).
 """
 
 from __future__ import annotations
@@ -40,17 +54,25 @@ from repro.serve.frontend import schema
 from repro.serve.frontend.admission import (AdmissionError, DrainingError,
                                             LaneGate)
 from repro.serve.frontend.metrics import FrontendMetrics
+from repro.serve.resilience import faults as _faults
+from repro.serve.resilience.breaker import CircuitBreaker
+from repro.serve.resilience.deadline import Deadline
+from repro.serve.resilience.degrade import degraded_traverse
+from repro.serve.resilience.errors import (DeadlineExceeded,
+                                           ResilienceError, TransientError)
+from repro.serve.resilience.retry import RetryPolicy, call_with_retry
+from repro.serve.resilience.watchdog import DispatchWatchdog
 
 
 class _Pending:
     """One admitted request riding the dispatcher: timestamps + result."""
 
     __slots__ = ("graph", "sources", "include_parents", "cost_bytes",
-                 "event", "result", "bucket", "error",
+                 "event", "result", "bucket", "error", "deadline", "arm",
                  "t_admit", "t_dispatch", "t_done")
 
     def __init__(self, graph: str, sources, include_parents: bool,
-                 cost_bytes: int):
+                 cost_bytes: int, deadline: Optional[Deadline] = None):
         self.graph = graph
         self.sources = sources
         self.include_parents = include_parents
@@ -59,6 +81,8 @@ class _Pending:
         self.result = None           # BFSResult once served
         self.bucket = None
         self.error: Optional[Exception] = None
+        self.deadline = deadline     # None = no time bound
+        self.arm = None              # degradation arm label, if degraded
         self.t_admit = time.monotonic()
         self.t_dispatch = None
         self.t_done = None
@@ -78,6 +102,12 @@ class BFSFrontend:
                  stats_interval_s: float = 0.0,
                  graph_specs: Optional[dict] = None,
                  start_dispatcher: bool = True,
+                 breaker_threshold: int = 5,
+                 breaker_reset_s: float = 5.0,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 watchdog_timeout_s: Optional[float] = None,
+                 degrade: bool = True,
+                 default_deadline_ms: Optional[float] = None,
                  log=print):
         self.service = service
         self.graph_specs = dict(graph_specs or {})
@@ -92,6 +122,21 @@ class BFSFrontend:
                            max_inflight_bytes=max_bytes)
             for name in names}
         self.metrics = FrontendMetrics(names)
+        # resilience: per-lane breakers, one shared retry policy, an
+        # optional watchdog (None = unbounded device rounds, the
+        # pre-resilience behavior), degradation arms on/off, and a
+        # server-side default deadline for requests that carry none
+        self.breakers: Dict[str, CircuitBreaker] = {
+            name: CircuitBreaker(failure_threshold=breaker_threshold,
+                                 reset_timeout_s=breaker_reset_s,
+                                 name=name)
+            for name in names}
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
+        self.watchdog = (DispatchWatchdog(watchdog_timeout_s)
+                         if watchdog_timeout_s else None)
+        self.degrade_enabled = bool(degrade)
+        self.default_deadline_ms = default_deadline_ms
         self._level_bytes: Dict[str, dict] = {}   # lane -> phase pricing
         # guarded-by(_cv): _running, _draining
         self._cv = threading.Condition()
@@ -151,12 +196,15 @@ class BFSFrontend:
         return graph, self.service.lane(graph)  # raises KeyError if unknown
 
     def submit(self, graph: Optional[str], sources,
-               include_parents: bool = False) -> _Pending:
+               include_parents: bool = False,
+               deadline_ms: Optional[float] = None) -> _Pending:
         """Validate + admit one request; returns its pending handle.
 
         Raises ``KeyError`` (unknown lane), ``ValueError`` (bad
-        sources), ``AdmissionError`` (bounds) or ``DrainingError`` —
-        the transport maps each to its status code.
+        sources), ``AdmissionError`` (bounds), ``DrainingError`` or
+        ``CircuitOpenError`` (lane breaker open) — the transport maps
+        each to its status code.  ``deadline_ms`` pins an absolute
+        deadline the request carries through queue and dispatch.
         """
         from repro.core.bfs import validate_sources
 
@@ -168,12 +216,22 @@ class BFSFrontend:
         except ValueError:
             lane_metrics.record_rejected(invalid=True)
             raise
+        # the breaker's fast 503: an open circuit sheds at the door,
+        # before the gate books queue/byte capacity for doomed work
+        breaker = self.breakers[name]
+        if not breaker.admits():
+            lane_metrics.record_breaker_rejected()
+            raise breaker.reject_error()
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+        deadline = (Deadline.after_ms(deadline_ms)
+                    if deadline_ms is not None else None)
         # admission cost ~= response payload: one int32 depth row per
         # source (doubled when parents ride along), plus framing slack
         cost = (1 + bool(include_parents)) * lane.n_logical * 4 * len(srcs)
         cost += 1024
         pending = _Pending(name, [int(s) for s in srcs], include_parents,
-                           cost)
+                           cost, deadline)
         try:
             self.gates[name].try_admit(
                 pending, cost, retry_after_s=lane_metrics.ewma_e2e_s())
@@ -187,8 +245,20 @@ class BFSFrontend:
     def wait(self, pending: _Pending,
              timeout_s: Optional[float] = None) -> "object":
         """Block until a pending request is served; returns its
-        ``BFSResult`` or re-raises the dispatch error."""
-        if not pending.event.wait(timeout_s):
+        ``BFSResult`` or re-raises the dispatch error.
+
+        A request deadline tightens the wait: the handler thread stops
+        blocking the moment the deadline lapses and raises the typed
+        ``DeadlineExceeded`` (504) — the still-queued entry is reaped by
+        the dispatcher before it can waste device work.
+        """
+        wait_s = (pending.deadline.bound(timeout_s)
+                  if pending.deadline is not None else timeout_s)
+        if not pending.event.wait(wait_s):
+            if pending.deadline is not None and pending.deadline.expired():
+                self.metrics.lane(pending.graph).record_deadline_expired()
+                pending.deadline.check("wait",
+                                       f"lane {pending.graph!r}")
             raise TimeoutError(
                 f"request on lane {pending.graph!r} not served within "
                 f"{timeout_s}s (queue depth "
@@ -199,10 +269,11 @@ class BFSFrontend:
 
     def traverse(self, graph: Optional[str], sources, *,
                  include_parents: bool = False,
-                 timeout_s: Optional[float] = 120.0) -> dict:
+                 timeout_s: Optional[float] = 120.0,
+                 deadline_ms: Optional[float] = None) -> dict:
         """Submit + wait + shape the response payload (the in-process
         mirror of ``POST /v1/traverse``; benchmarks drive this)."""
-        pending = self.submit(graph, sources, include_parents)
+        pending = self.submit(graph, sources, include_parents, deadline_ms)
         result = self.wait(pending, timeout_s)
         return self._payload(pending, result)
 
@@ -226,52 +297,136 @@ class BFSFrontend:
     # ------------------------------------------------------------- dispatch
     def _dispatch_loop(self) -> None:
         while True:
-            batch = []
-            for name in self.service.graph_names():
-                popped = self.gates[name].pop()
-                if popped is None:
-                    continue
-                pending, cost = popped
-                pending.t_dispatch = time.monotonic()
-                try:
-                    res, bucket = self.service.traverse_async(
-                        name, pending.sources)
-                    pending.bucket = bucket
-                    batch.append((name, pending, cost, res))
-                except Exception as exc:   # compile/device failure
-                    pending.error = exc
-                    pending.t_done = time.monotonic()
-                    self.metrics.lane(name).record_failed()
-                    self.gates[name].complete(cost)
-                    pending.event.set()
-            for name, pending, cost, res in batch:
-                try:
-                    res.block()
-                    pending.result = res
-                except Exception as exc:
-                    pending.error = exc
-                    self.metrics.lane(name).record_failed()
-                else:
-                    pending.t_done = time.monotonic()
-                    self.metrics.lane(name).record_completed(
-                        queue_wait_s=pending.t_dispatch - pending.t_admit,
-                        device_s=pending.t_done - pending.t_dispatch,
-                        e2e_s=pending.t_done - pending.t_admit,
-                        bucket=pending.bucket,
-                        n_sources=len(pending.sources),
-                        wire_bytes=self._run_wire_bytes(name, res),
-                        levels=res.run_stats.to_host()["levels"])
-                if pending.t_done is None:
-                    pending.t_done = time.monotonic()
-                self.gates[name].complete(cost)
-                pending.event.set()
-            if batch:
+            if self._dispatch_round():
                 continue          # keep draining queues while work exists
             with self._cv:
                 if not self._running:
                     return
                 if all(g.depth() == 0 for g in self.gates.values()):
                     self._cv.wait(timeout=0.1)
+
+    def _fail(self, name: str, pending: _Pending, cost: int, exc,
+              *, count_failed: bool = True) -> None:
+        """Complete one pending request with an error (gate released,
+        waiter woken)."""
+        pending.error = exc
+        pending.t_done = time.monotonic()
+        if count_failed:
+            self.metrics.lane(name).record_failed()
+        self.gates[name].complete(cost)
+        pending.event.set()
+
+    def _pop_live(self, name: str):
+        """Next queued request whose deadline has not lapsed; expired
+        entries are reaped here — completed with ``DeadlineExceeded``
+        (504) — so no device work is ever spent on dead requests."""
+        while True:
+            popped = self.gates[name].pop()
+            if popped is None:
+                return None
+            pending, cost = popped
+            if pending.deadline is None or not pending.deadline.expired():
+                return pending, cost
+            self.metrics.lane(name).record_deadline_expired()
+            try:
+                pending.deadline.check("queue", f"lane {name!r}")
+            except DeadlineExceeded as exc:
+                self._fail(name, pending, cost, exc, count_failed=False)
+
+    def _dispatch_one(self, name: str, pending: _Pending):
+        """Resolve + dispatch one request: bounded retry on transient
+        failures, then the degradation arms.  Returns the un-blocked
+        result handle + bucket; raises when every avenue is spent."""
+        lane_metrics = self.metrics.lane(name)
+
+        def on_retry(attempt, exc, backoff_s):
+            lane_metrics.record_retry()
+
+        try:
+            res, bucket = call_with_retry(
+                lambda: self.service.traverse_async(name, pending.sources),
+                self.retry_policy, on_retry=on_retry)
+            return res, bucket
+        except TransientError:
+            if not self.degrade_enabled:
+                raise
+        res, bucket, arm = degraded_traverse(self.service, name,
+                                             pending.sources)
+        pending.arm = arm
+        lane_metrics.record_degraded(arm)
+        return res, bucket
+
+    def _block_result(self, name: str, res):
+        """Sync one dispatched result, watchdog-bounded when enabled
+        (a wedged device round fails its batch with a typed 500 and the
+        dispatcher moves on; the round is tracked, not leaked)."""
+        def sync():
+            _faults.fire("frontend.block", name)
+            res.block()
+            return res
+
+        if self.watchdog is None:
+            return sync()
+        return self.watchdog.guard(sync, label=f"lane {name!r}")
+
+    def _dispatch_round(self) -> int:
+        """One rotation: pop at most one live request per lane, dispatch
+        them all, then sync them all (the cross-lane overlap window).
+        Returns the number of requests taken off the queues."""
+        _faults.fire("frontend.loop")
+        taken = 0
+        batch = []
+        for name in self.service.graph_names():
+            popped = self._pop_live(name)
+            if popped is None:
+                continue
+            pending, cost = popped
+            taken += 1
+            breaker = self.breakers[name]
+            if not breaker.allow():
+                self.metrics.lane(name).record_breaker_rejected()
+                self._fail(name, pending, cost, breaker.reject_error(),
+                           count_failed=False)
+                continue
+            pending.t_dispatch = time.monotonic()
+            try:
+                if pending.deadline is not None:
+                    pending.deadline.check("queue", f"lane {name!r}")
+                res, bucket = self._dispatch_one(name, pending)
+                pending.bucket = bucket
+                batch.append((name, pending, cost, res))
+            except DeadlineExceeded as exc:
+                # expired mid-retry/backoff: a reap, not a lane failure
+                self.metrics.lane(name).record_deadline_expired()
+                self._fail(name, pending, cost, exc, count_failed=False)
+            except Exception as exc:   # compile/device failure
+                breaker.record_failure()
+                self._fail(name, pending, cost, exc)
+        for name, pending, cost, res in batch:
+            breaker = self.breakers[name]
+            try:
+                self._block_result(name, res)
+                pending.result = res
+            except Exception as exc:
+                breaker.record_failure()
+                pending.error = exc
+                self.metrics.lane(name).record_failed()
+            else:
+                breaker.record_success()
+                pending.t_done = time.monotonic()
+                self.metrics.lane(name).record_completed(
+                    queue_wait_s=pending.t_dispatch - pending.t_admit,
+                    device_s=pending.t_done - pending.t_dispatch,
+                    e2e_s=pending.t_done - pending.t_admit,
+                    bucket=pending.bucket,
+                    n_sources=len(pending.sources),
+                    wire_bytes=self._run_wire_bytes(name, res),
+                    levels=res.run_stats.to_host()["levels"])
+            if pending.t_done is None:
+                pending.t_done = time.monotonic()
+            self.gates[name].complete(cost)
+            pending.event.set()
+        return taken
 
     def _run_wire_bytes(self, name: str, res) -> dict:
         """Modeled per-chip wire bytes one run moved, split by phase:
@@ -321,9 +476,48 @@ class BFSFrontend:
         return {"graphs": lanes}
 
     def metrics_payload(self) -> dict:
-        return self.metrics.snapshot(
+        out = self.metrics.snapshot(
             cache_stats=self.service.cache_stats(), gates=self.gates,
             draining=self.draining)
+        for name, breaker in self.breakers.items():
+            out["lanes"][name]["breaker"] = breaker.snapshot()
+        if self.watchdog is not None:
+            out["watchdog"] = self.watchdog.snapshot()
+        return out
+
+    def ready(self) -> "tuple[bool, list]":
+        """Readiness verdict + the reasons it fails (``/readyz``).
+
+        Not ready while draining, while *every* lane's breaker is open
+        (one open lane degrades, all open means nothing can be served),
+        or while a watchdog-abandoned device round is still stuck.
+        Liveness (``/healthz``) stays green through all of these — the
+        process is up; a load balancer should just stop routing here.
+        """
+        reasons = []
+        if self.draining:
+            reasons.append("draining")
+        states = {name: b.state() for name, b in self.breakers.items()}
+        if states and all(s == "open" for s in states.values()):
+            reasons.append("all lane breakers open")
+        if self.watchdog is not None and self.watchdog.stuck() > 0:
+            reasons.append(f"{self.watchdog.stuck()} stuck dispatch "
+                           f"round(s)")
+        return not reasons, reasons
+
+    def readiness_payload(self) -> "tuple[int, dict]":
+        ok, reasons = self.ready()
+        body = {
+            "ready": ok,
+            "draining": self.draining,
+            "breakers": {name: b.state()
+                         for name, b in self.breakers.items()},
+            "watchdog_stuck": (self.watchdog.stuck()
+                               if self.watchdog is not None else 0),
+        }
+        if reasons:
+            body["reasons"] = reasons
+        return (200 if ok else 503), body
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +563,9 @@ class _Handler(BaseHTTPRequestHandler):
         if self.path == "/healthz":
             self._send_json(200, {"status": "draining" if fe.draining
                                   else "ok", "lanes": len(fe.gates)})
+        elif self.path == "/readyz":
+            status, body = fe.readiness_payload()
+            self._send_json(status, body)
         elif self.path == "/v1/graphs":
             self._send_json(200, fe.graphs_payload())
         elif self.path == "/metrics":
@@ -392,12 +589,24 @@ class _Handler(BaseHTTPRequestHandler):
                 f"{schema.MAX_BODY_BYTES}-byte limit", status=413)
         return self.rfile.read(length)
 
+    def _send_resilience_error(self, exc: ResilienceError) -> None:
+        """Map a typed serving failure to its status (+Retry-After)."""
+        headers = ()
+        fields = {}
+        if exc.retry_after_s > 0:
+            headers = (("Retry-After",
+                        str(max(1, math.ceil(exc.retry_after_s)))),)
+            fields["retry_after_s"] = round(exc.retry_after_s, 3)
+        self._send_error_json(exc.status, str(exc), extra_headers=headers,
+                              error_type=type(exc).__name__, **fields)
+
     def _traverse(self) -> None:
         fe = self.frontend
         try:
             req = schema.parse_traverse_request(self._read_body())
             pending = fe.submit(req["graph"], req["sources"],
-                                req["include_parents"])
+                                req["include_parents"],
+                                req["deadline_ms"])
         except schema.RequestError as exc:
             self._send_error_json(exc.status, str(exc))
             return
@@ -418,8 +627,14 @@ class _Handler(BaseHTTPRequestHandler):
             self._send_error_json(
                 503, str(exc), extra_headers=(("Retry-After", "5"),))
             return
+        except ResilienceError as exc:   # breaker open at the door
+            self._send_resilience_error(exc)
+            return
         try:
             result = fe.wait(pending, timeout_s=300.0)
+        except ResilienceError as exc:   # 504 deadline / 503 breaker /
+            self._send_resilience_error(exc)   # 500 watchdog, all typed
+            return
         except TimeoutError as exc:
             self._send_error_json(504, str(exc))
             return
@@ -450,7 +665,12 @@ class _FrontendHTTPServer(ThreadingHTTPServer):
 def serve_http(service, host: str = "127.0.0.1", port: int = 0, *,
                max_queue_depth: int = 64, max_inflight_mb: float = 256.0,
                stats_interval_s: float = 0.0, graph_specs=None,
-               start_dispatcher: bool = True, log=print):
+               start_dispatcher: bool = True,
+               breaker_threshold: int = 5, breaker_reset_s: float = 5.0,
+               retry_policy: Optional[RetryPolicy] = None,
+               watchdog_timeout_s: Optional[float] = None,
+               degrade: bool = True,
+               default_deadline_ms: Optional[float] = None, log=print):
     """Bind the front-end: returns ``(httpd, frontend)``.
 
     ``port=0`` binds an ephemeral port (``httpd.server_address[1]``
@@ -462,7 +682,11 @@ def serve_http(service, host: str = "127.0.0.1", port: int = 0, *,
         service, max_queue_depth=max_queue_depth,
         max_inflight_mb=max_inflight_mb,
         stats_interval_s=stats_interval_s, graph_specs=graph_specs,
-        start_dispatcher=start_dispatcher, log=log)
+        start_dispatcher=start_dispatcher,
+        breaker_threshold=breaker_threshold,
+        breaker_reset_s=breaker_reset_s, retry_policy=retry_policy,
+        watchdog_timeout_s=watchdog_timeout_s, degrade=degrade,
+        default_deadline_ms=default_deadline_ms, log=log)
     httpd = _FrontendHTTPServer((host, port), _Handler)
     httpd.frontend = frontend
     return httpd, frontend

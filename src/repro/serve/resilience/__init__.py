@@ -1,0 +1,53 @@
+"""Fault injection + resilience primitives for the serving stack.
+
+Six pieces, one contract — every failure a caller can see is typed with
+its HTTP status, every recovery path is deterministic enough to replay:
+
+  * ``errors``   — the typed taxonomy (504 deadline / 503 breaker /
+    500 watchdog / transient-vs-permanent retry classifier).
+  * ``faults``   — the seeded ``FaultPlan`` registry and the named
+    injection points (``faults.fire``) the engine, cache, service and
+    frontend consult; a no-op costing one global read when disabled.
+  * ``deadline`` — absolute monotonic request deadlines propagating
+    admission -> queue -> dispatch (reaped before device work).
+  * ``retry``    — bounded deterministic exponential backoff for
+    transient compile/dispatch failures.
+  * ``breaker``  — the per-lane circuit breaker (open / half-open /
+    closed, fast 503s, recovery-latency log).
+  * ``watchdog`` — bounded device rounds; a stuck round fails its
+    batch with a typed error while other lanes keep serving.
+  * ``degrade``  — graceful-degradation arms (other rungs, split over
+    a smaller bucket, the uncompressed wire tier).
+
+``launch/bfs_chaos.py`` drives the whole set under randomized fault
+schedules to a bitwise-correct, no-deadlock, no-leak verdict.
+"""
+
+from repro.serve.resilience.breaker import CircuitBreaker
+from repro.serve.resilience.deadline import Deadline
+from repro.serve.resilience.degrade import (StitchedResult,
+                                            degradation_arms,
+                                            degraded_traverse)
+from repro.serve.resilience.errors import (CircuitOpenError,
+                                           DeadlineExceeded,
+                                           InjectedCompileError,
+                                           InjectedDispatchError,
+                                           InjectedError, ResilienceError,
+                                           StrandedRequestError,
+                                           StuckDispatchError,
+                                           TransientError)
+from repro.serve.resilience.faults import (FaultPlan, FaultSpec,
+                                           corrupt_bytes, fire, install)
+from repro.serve.resilience.faults import active as faults_active
+from repro.serve.resilience.retry import RetryPolicy, call_with_retry
+from repro.serve.resilience.watchdog import DispatchWatchdog
+
+__all__ = [
+    "CircuitBreaker", "Deadline", "DispatchWatchdog",
+    "FaultPlan", "FaultSpec", "RetryPolicy", "StitchedResult",
+    "CircuitOpenError", "DeadlineExceeded", "InjectedCompileError",
+    "InjectedDispatchError", "InjectedError", "ResilienceError",
+    "StrandedRequestError", "StuckDispatchError", "TransientError",
+    "call_with_retry", "corrupt_bytes", "degradation_arms",
+    "degraded_traverse", "faults_active", "fire", "install",
+]

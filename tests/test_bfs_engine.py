@@ -204,19 +204,31 @@ def test_bfs_service_batches_concurrent_requests():
 
 def test_bfs_service_truncated_drain_raises():
     """Satellite: exhausting max_steps with requests still queued must not
-    look like a completed drain."""
+    look like a completed drain — and must not leak the stranded requests:
+    each is completed with a typed StrandedRequestError and the pool is
+    left clean for new work."""
     from repro.serve.bfs_service import BFSService, TraversalRequest
+    from repro.serve.resilience.errors import StrandedRequestError
 
     n = 300
     src, dst, g = _graph(n, seed=8, deg=5)
     svc = BFSService(g, BFSOptions(mode="dense"), batch_slots=1)
-    for i, s in enumerate([0, 5, 9]):   # 3 requests, 1 slot -> 3 steps
-        svc.submit(TraversalRequest(rid=i, source=s))
+    reqs = [TraversalRequest(rid=i, source=s)
+            for i, s in enumerate([0, 5, 9])]   # 3 requests, 1 slot
+    for r in reqs:
+        svc.submit(r)
     with pytest.raises(RuntimeError, match="still pending"):
         svc.run_until_drained(max_steps=1)
-    # the remaining queue is still there and a full drain completes it
-    rest = svc.run_until_drained()
+    # the survivors are rejected, not leaked: done with a typed error,
+    # pool empty, so a stuck drain can't strand callers forever
+    stranded = [r for r in reqs if isinstance(r.error, StrandedRequestError)]
+    assert {r.source for r in stranded} == {5, 9}
+    assert all(r.done for r in stranded)
     assert svc.pool.drained()
-    assert {r.source for r in rest} == {5, 9}
+    # the pool is clean: fresh work drains normally afterwards
+    again = TraversalRequest(rid=9, source=5)
+    svc.submit(again)
+    rest = svc.run_until_drained()
+    assert [r.source for r in rest] == [5] and again.error is None
     # an empty service drains immediately even with max_steps=0
     assert svc.run_until_drained(max_steps=0) == []

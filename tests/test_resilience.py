@@ -1,0 +1,447 @@
+"""Deterministic chaos regression suite for the serving resilience layer.
+
+Every scenario replays a fixed ``FaultPlan`` (seeded, hit-window
+scheduled) against the real stack and asserts the exact trajectory:
+breaker open -> fast 503 -> half-open probe -> close, deadline reaping
+under a parked dispatcher (504 before any device work), retry-then-
+degrade serving bitwise-correct results on worse plans, watchdog trips
+failing only the wedged round, and ``run_until_drained`` rejecting
+stranded requests with a typed error.  No sleeps drive state machines —
+breakers take injected clocks and retries injected sleepers — so the
+suite is exact, not statistical."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BFSOptions
+from repro.core.engine import plan
+from repro.core.ref import bfs_reference
+from repro.graphs import generate, shard_graph
+from repro.serve.bfs_service import BFSService
+from repro.serve.engine_cache import EngineCache
+from repro.serve.frontend.server import BFSFrontend
+from repro.serve.resilience import faults
+from repro.serve.resilience.breaker import CircuitBreaker
+from repro.serve.resilience.deadline import Deadline
+from repro.serve.resilience.degrade import degraded_traverse
+from repro.serve.resilience.errors import (CircuitOpenError,
+                                           DeadlineExceeded, InjectedError,
+                                           StuckDispatchError,
+                                           TransientError)
+from repro.serve.resilience.faults import FaultPlan, FaultSpec, corrupt_bytes
+from repro.serve.resilience.retry import RetryPolicy, call_with_retry
+from repro.serve.resilience.watchdog import DispatchWatchdog
+
+
+def _graph(n=120, seed=3):
+    src, dst = generate("erdos_renyi", n, seed=seed)
+    return src, dst, shard_graph(src, dst, n, 1)
+
+
+def _service(g, ladder=(1, 4)):
+    svc = BFSService(opts=BFSOptions(mode="dense"), batch_buckets=ladder,
+                     cache=EngineCache())
+    svc.add_graph("er", g, partition="1d", mesh=None)
+    return svc
+
+
+def _frontend(svc, **kw):
+    kw.setdefault("start_dispatcher", False)
+    kw.setdefault("max_queue_depth", 8)
+    return BFSFrontend(svc, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fault plan: deterministic scheduling + replay
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_hit_windows_and_replay():
+    spec = FaultSpec(site="s", kind="fail", after=2, times=2)
+    for _ in range(2):                      # identical across replays
+        p = FaultPlan([spec], seed=7)
+        fired = [p.arm("s", "") is not None for _ in range(6)]
+        assert fired == [False, False, True, True, False, False]
+    assert FaultPlan([spec], seed=7).arm("other", "") is None
+
+
+def test_fault_plan_tag_matching_targets_one_bucket():
+    p = FaultPlan([FaultSpec(site="cache.compile", match="S=4")])
+    assert p.arm("cache.compile", "S=1 mode=dense") is None
+    assert p.arm("cache.compile", "S=4 mode=dense") is not None
+
+
+def test_fire_is_noop_without_plan_and_raises_with():
+    assert faults.fire("cache.compile", "anything") is None
+    with faults.active(FaultPlan([FaultSpec(site="x", kind="fail")])):
+        with pytest.raises(InjectedError, match="injected"):
+            faults.fire("x")
+    assert faults.fire("x") is None         # uninstalled on exit
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(site="s", kind="explode")
+    with pytest.raises(ValueError, match="p must be"):
+        FaultSpec(site="s", p=1.5)
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec(site="s", times=0)
+
+
+def test_corrupt_bytes_is_deterministic_and_mangles():
+    body = b'{"graph": "er", "sources": [1, 2, 3]}'
+    spec = FaultSpec(site="client.payload", kind="corrupt")
+    for seed in range(6):
+        a = corrupt_bytes(body, spec, seed=seed)
+        assert a == corrupt_bytes(body, spec, seed=seed)
+        assert a != body
+
+
+# ---------------------------------------------------------------------------
+# breaker: exact open / half-open / close trajectory on an injected clock
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_after_threshold_and_recovers():
+    now = [0.0]
+    b = CircuitBreaker(failure_threshold=3, reset_timeout_s=10.0,
+                       name="er", clock=lambda: now[0])
+    for _ in range(2):
+        b.record_failure()
+    assert b.state() == "closed"            # threshold not reached
+    b.record_failure()
+    assert b.state() == "open" and b.opened == 1
+    assert not b.admits() and not b.allow()
+    err = b.reject_error()
+    assert isinstance(err, CircuitOpenError) and err.status == 503
+    assert 0 < err.retry_after_s <= 10.0
+    now[0] = 10.1                            # cooldown elapses
+    assert b.state() == "half_open"
+    assert b.allow()                         # the single probe
+    assert not b.allow()                     # probe budget spent
+    b.record_success()
+    assert b.state() == "closed"
+    assert [s for s, _ in b.transitions] == [
+        "closed", "open", "half_open", "closed"]
+    assert b.recovery_latencies_s() == [pytest.approx(10.1)]
+
+
+def test_breaker_failed_probe_reopens_with_fresh_cooldown():
+    now = [0.0]
+    b = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                       clock=lambda: now[0])
+    b.record_failure()
+    now[0] = 5.0
+    assert b.allow()                         # half-open probe
+    b.record_failure()                       # probe fails
+    assert b.state() == "open" and b.opened == 2
+    now[0] = 9.9
+    assert b.state() == "open"               # fresh cooldown, not stale
+    now[0] = 10.0
+    assert b.state() == "half_open"
+
+
+# ---------------------------------------------------------------------------
+# deadline + retry primitives
+# ---------------------------------------------------------------------------
+
+def test_deadline_checks_and_bounds():
+    now = [100.0]
+    d = Deadline.after_ms(250, clock=lambda: now[0])
+    assert not d.expired() and d.remaining_s() == pytest.approx(0.25)
+    assert d.bound(10.0) == pytest.approx(0.25)
+    assert d.bound(0.1) == pytest.approx(0.1)
+    d.check("queue")                         # no raise while live
+    now[0] = 100.3
+    assert d.expired() and d.bound(10.0) == 0.0
+    with pytest.raises(DeadlineExceeded, match="queue") as ei:
+        d.check("queue", "lane 'er'")
+    assert ei.value.status == 504 and ei.value.stage == "queue"
+    with pytest.raises(ValueError, match="> 0"):
+        Deadline.after_ms(0)
+
+
+def test_retry_backoff_deterministic_and_bounded():
+    pol = RetryPolicy(max_attempts=4, base_s=0.1, max_s=0.3, seed=5)
+    assert pol.backoffs() == pol.backoffs()  # seeded, replayable
+    assert len(pol.backoffs()) == 3
+    assert all(0.05 <= b <= 0.45 for b in pol.backoffs())
+
+    calls, slept, retried = [], [], []
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientError("transient")
+        return "ok"
+    out = call_with_retry(flaky, pol, sleep=slept.append,
+                          on_retry=lambda a, e, b: retried.append(a))
+    assert out == "ok" and len(calls) == 3 and retried == [1, 2]
+    assert slept == pol.backoffs()[:2]
+
+    # budget exhausted -> last transient propagates with exact attempts
+    calls.clear()
+    with pytest.raises(TransientError):
+        call_with_retry(lambda: (_ for _ in ()).throw(TransientError("x")),
+                        RetryPolicy(max_attempts=2, base_s=0.0),
+                        sleep=lambda s: None)
+
+    # non-transient errors never retry
+    calls.clear()
+    def hard():
+        calls.append(1)
+        raise ValueError("permanent")
+    with pytest.raises(ValueError):
+        call_with_retry(hard, pol, sleep=lambda s: None)
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# watchdog: trip, late completion accounting, on-time passthrough
+# ---------------------------------------------------------------------------
+
+def test_watchdog_passthrough_and_trip_accounting():
+    wd = DispatchWatchdog(timeout_s=0.2)
+    assert wd.guard(lambda: 42) == 42        # on-time value passes through
+    with pytest.raises(ZeroDivisionError):   # callee errors propagate
+        wd.guard(lambda: 1 // 0)
+    assert wd.snapshot()["trips"] == 0
+
+    release = threading.Event()
+    with pytest.raises(StuckDispatchError, match="watchdog"):
+        wd.guard(release.wait, label="wedged")
+    assert wd.stuck() == 1 and wd.snapshot()["trips"] == 1
+    release.set()                            # abandoned worker finishes
+    assert wd.wait_idle(timeout_s=5.0)
+    assert wd.snapshot()["completed_late"] == 1 and wd.stuck() == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation arms: bitwise parity on worse plans
+# ---------------------------------------------------------------------------
+
+def test_degraded_traverse_split_arm_matches_reference():
+    src, dst, g = _graph(n=110)
+    svc = _service(g, ladder=(1, 4))
+    # poison every S=4 compile: the preferred rung can never build, so
+    # the walk lands on split:1 (4 sequential S=1 runs, stitched)
+    with faults.active(FaultPlan([FaultSpec(site="cache.compile",
+                                            match="S=4")])):
+        res, bucket, arm = degraded_traverse(svc, "er", [5, 9, 40, 77])
+    assert arm == "split:1" and bucket == 1
+    res.block()
+    want = bfs_reference(src, dst, 110, [5, 9, 40, 77])
+    np.testing.assert_array_equal(res.dist_host, want)
+    stats = res.run_stats.to_host()
+    assert stats["levels"] >= 1 and "mode_counts" in stats
+
+
+def test_degraded_traverse_wire_tier_arm():
+    src, dst, g = _graph(n=100)
+    svc = _service(g, ladder=(1,))
+    base = svc.lane("er").plans[1]
+    assert base.opts.wire_format != "bytes"
+    # poison the preferred rung only (its resolved wire tier); with no
+    # other rung, the bytes twin is the last arm standing
+    tag = f"wire={base.opts.wire_format}"
+    with faults.active(FaultPlan([FaultSpec(site="cache.compile",
+                                            match=tag)])):
+        res, bucket, arm = degraded_traverse(svc, "er", [3])
+    assert arm == "wire:bytes" and bucket == 1
+    np.testing.assert_array_equal(
+        res.block().dist_host, bfs_reference(src, dst, 100, [3]))
+
+
+def test_degraded_traverse_exhausted_reraises_transient():
+    _, _, g = _graph(n=100)
+    svc = _service(g, ladder=(1,))
+    with faults.active(FaultPlan([FaultSpec(site="cache.compile")])):
+        with pytest.raises(TransientError):
+            degraded_traverse(svc, "er", [3])
+
+
+# ---------------------------------------------------------------------------
+# frontend integration: deadline reaping under a parked dispatcher
+# ---------------------------------------------------------------------------
+
+def test_deadline_reaped_before_device_work():
+    _, _, g = _graph(n=100)
+    svc = _service(g)
+    fe = _frontend(svc)                      # dispatcher parked
+    pending = fe.submit("er", [4], deadline_ms=30)
+    with pytest.raises(DeadlineExceeded) as ei:
+        fe.wait(pending, timeout_s=5.0)      # unblocks at the deadline,
+    assert ei.value.stage == "wait"          # not after 5s
+    # the dead entry is still queued; the next round must reap it
+    # without dispatching (no compile, no device work)
+    misses_before = svc.cache.stats()["misses"]
+    assert fe._dispatch_round() == 0         # reaped, no live dispatch...
+    assert svc.cache.stats()["misses"] == misses_before   # ...no compile
+    assert pending.event.is_set()
+    assert isinstance(pending.error, DeadlineExceeded)
+    assert pending.error.stage == "queue"
+    snap = fe.metrics.lane("er").snapshot()
+    assert snap["deadline_expired"] == 2     # wait + reap
+    assert fe.gates["er"].idle()             # admission released
+
+
+def test_live_deadline_request_serves_normally():
+    src, dst, g = _graph(n=100)
+    svc = _service(g)
+    fe = _frontend(svc)
+    pending = fe.submit("er", [7], deadline_ms=60_000)
+    assert fe._dispatch_round() == 1
+    res = fe.wait(pending, timeout_s=5.0)
+    np.testing.assert_array_equal(
+        res.dist_host, bfs_reference(src, dst, 100, [7]))
+
+
+# ---------------------------------------------------------------------------
+# frontend integration: breaker trajectory through the dispatcher
+# ---------------------------------------------------------------------------
+
+def test_frontend_breaker_opens_sheds_and_recovers():
+    src, dst, g = _graph(n=100)
+    svc = _service(g, ladder=(1,))
+    fe = _frontend(svc, breaker_threshold=2, breaker_reset_s=0.15,
+                   degrade=False,
+                   retry_policy=RetryPolicy(max_attempts=1))
+    # two rounds of unretried, undegraded compile failures open it
+    with faults.active(FaultPlan([FaultSpec(site="cache.compile",
+                                            times=2)])):
+        for _ in range(2):
+            p = fe.submit("er", [1])
+            fe._dispatch_round()
+            with pytest.raises(InjectedError):
+                fe.wait(p, timeout_s=1.0)
+    assert fe.breakers["er"].state() == "open"
+    # open circuit: submission door sheds with a typed 503 + retry hint
+    with pytest.raises(CircuitOpenError) as ei:
+        fe.submit("er", [1])
+    assert ei.value.status == 503 and ei.value.retry_after_s > 0
+    snap = fe.metrics.lane("er").snapshot()
+    assert snap["breaker_rejected"] == 1
+    ok, reasons = fe.ready()
+    assert not ok and "breakers open" in reasons[0]
+    # cooldown -> half-open probe -> healthy dispatch closes it
+    time.sleep(0.2)
+    p = fe.submit("er", [2])
+    fe._dispatch_round()
+    res = fe.wait(p, timeout_s=5.0)
+    np.testing.assert_array_equal(
+        res.dist_host, bfs_reference(src, dst, 100, [2]))
+    assert fe.breakers["er"].state() == "closed"
+    assert fe.ready()[0]
+
+
+def test_frontend_retry_then_degrade_serves_bitwise():
+    src, dst, g = _graph(n=100)
+    svc = _service(g, ladder=(1, 4))
+    fe = _frontend(svc, retry_policy=RetryPolicy(max_attempts=2,
+                                                 base_s=0.0))
+    # S=4 compiles always fail: both attempts burn, then the split arm
+    # serves on the S=1 rung — caller sees a normal, correct response
+    with faults.active(FaultPlan([FaultSpec(site="cache.compile",
+                                            match="S=4")])):
+        p = fe.submit("er", [8, 33, 60])
+        fe._dispatch_round()
+        res = fe.wait(p, timeout_s=10.0)
+    np.testing.assert_array_equal(
+        res.dist_host, bfs_reference(src, dst, 100, [8, 33, 60]))
+    assert p.arm == "split:1" and p.bucket == 1
+    snap = fe.metrics.lane("er").snapshot()
+    assert snap["retries"] == 1
+    assert snap["degraded"] == {"split:1": 1}
+    assert snap["completed"] == 1 and snap["failed"] == 0
+    assert fe.breakers["er"].state() == "closed"   # degraded = success
+
+
+def test_frontend_watchdog_trips_only_the_wedged_round():
+    src, dst, g = _graph(n=100)
+    svc = _service(g, ladder=(1,))
+    fe = _frontend(svc, watchdog_timeout_s=0.25)
+    # one slow collective wedges one round past the watchdog bound
+    with faults.active(FaultPlan([FaultSpec(site="frontend.block",
+                                            kind="stall", delay_s=1.0,
+                                            times=1)])):
+        p1 = fe.submit("er", [5])
+        fe._dispatch_round()
+        with pytest.raises(StuckDispatchError) as ei:
+            fe.wait(p1, timeout_s=5.0)
+        assert ei.value.status == 500
+    assert fe.breakers["er"].state() == "closed"   # 1 < threshold
+    assert fe.metrics.lane("er").snapshot()["failed"] == 1
+    # the abandoned round drains; the next request serves fine
+    assert fe.watchdog.wait_idle(timeout_s=5.0)
+    p2 = fe.submit("er", [6])
+    fe._dispatch_round()
+    np.testing.assert_array_equal(
+        fe.wait(p2, timeout_s=5.0).dist_host,
+        bfs_reference(src, dst, 100, [6]))
+    wd = fe.watchdog.snapshot()
+    assert wd["trips"] == 1 and wd["stuck"] == 0
+    assert wd["completed_late"] == 1
+
+
+def test_readyz_payload_and_metrics_surface_resilience():
+    _, _, g = _graph(n=100)
+    svc = _service(g)
+    fe = _frontend(svc, watchdog_timeout_s=5.0)
+    status, body = fe.readiness_payload()
+    assert status == 200 and body["ready"]
+    assert body["breakers"] == {"er": "closed"}
+    assert body["watchdog_stuck"] == 0
+    m = fe.metrics_payload()
+    assert m["lanes"]["er"]["breaker"]["state"] == "closed"
+    assert m["watchdog"]["trips"] == 0
+    for key in ("deadline_expired", "breaker_rejected", "retries",
+                "degraded"):
+        assert key in m["lanes"]["er"]
+    fe.drain(timeout_s=1.0)
+    status, body = fe.readiness_payload()
+    assert status == 503 and body["reasons"] == ["draining"]
+
+
+# ---------------------------------------------------------------------------
+# zero behavior change with faults disabled
+# ---------------------------------------------------------------------------
+
+def test_faults_disabled_bitwise_identical_and_plan_key_unchanged():
+    src, dst, g = _graph(n=100)
+    opts = BFSOptions(mode="dense")
+    base = plan(g, opts, num_sources=2)
+    # plan_key is untouched by the resilience layer (cache compatibility)
+    assert base.plan_key() == plan(g, opts, num_sources=2).plan_key()
+    engine = base.compile()
+    direct = engine.run([4, 9]).dist_host
+    svc = _service(g)
+    fe = _frontend(svc)
+    p = fe.submit("er", [4, 9])              # no deadline, no faults
+    fe._dispatch_round()
+    served = fe.wait(p, timeout_s=5.0).dist_host
+    np.testing.assert_array_equal(served, direct)
+    np.testing.assert_array_equal(direct,
+                                  bfs_reference(src, dst, 100, [4, 9]))
+    snap = fe.metrics.lane("er").snapshot()
+    assert (snap["retries"], snap["breaker_rejected"],
+            snap["deadline_expired"], snap["degraded"]) == (0, 0, 0, {})
+
+
+def test_eviction_storm_recompiles_transparently():
+    src, dst, g = _graph(n=100)
+    svc = _service(g, ladder=(1,))
+    fe = _frontend(svc)
+    p = fe.submit("er", [3])
+    fe._dispatch_round()
+    fe.wait(p, timeout_s=5.0)
+    # a storm between requests drops the compiled engine; the next
+    # dispatch just recompiles — slower, never wrong
+    with faults.active(FaultPlan([FaultSpec(site="cache.get",
+                                            kind="storm", times=1)])):
+        p2 = fe.submit("er", [8])
+        fe._dispatch_round()
+        res = fe.wait(p2, timeout_s=10.0)
+    np.testing.assert_array_equal(
+        res.dist_host, bfs_reference(src, dst, 100, [8]))
+    assert svc.cache.stats()["evictions"] >= 1
+    assert svc.cache.stats()["misses"] == 2

@@ -84,7 +84,7 @@ def test_plan_ladder_one_plan_per_rung():
 def test_parse_traverse_request_accepts_minimal_and_full_bodies():
     req = parse_traverse_request(b'{"sources": [3, 1]}')
     assert req == {"graph": None, "sources": [3, 1],
-                   "include_parents": False}
+                   "include_parents": False, "deadline_ms": None}
     req = parse_traverse_request(
         b'{"graph": "er", "sources": [0], "include_parents": true}')
     assert req["graph"] == "er" and req["include_parents"] is True
@@ -287,16 +287,26 @@ def test_service_slot_path_uses_bucket_for_partial_batches():
 
 
 def test_run_until_drained_timeout_names_pending_lanes():
+    from repro.serve.resilience.errors import StrandedRequestError
+
     _, _, g = _graph(n=100)
     svc = _service({"er": (g, "1d")}, ladder=(1,))
-    svc.submit(TraversalRequest(rid=0, source=0, graph="er"))
-    svc.submit(TraversalRequest(rid=1, source=1, graph="er"))
+    r0 = TraversalRequest(rid=0, source=0, graph="er")
+    r1 = TraversalRequest(rid=1, source=1, graph="er")
+    svc.submit(r0)
+    svc.submit(r1)
     assert svc.pending_by_lane() == {"er": 2}
     with pytest.raises(RuntimeError, match=r"timeout_s=0.*er: 2") as ei:
         svc.run_until_drained(timeout_s=0)
     assert "still pending" in str(ei.value)
-    done = svc.run_until_drained()       # the work itself is still fine
-    assert len(done) == 2 and not svc.pending_by_lane()
+    # stranded requests are rejected with a typed error, never leaked:
+    # a caller polling req.done always observes an outcome
+    for r in (r0, r1):
+        assert r.done and isinstance(r.error, StrandedRequestError)
+    assert not svc.pending_by_lane()
+    svc.submit(TraversalRequest(rid=2, source=0, graph="er"))
+    done = svc.run_until_drained()       # the lane itself is still fine
+    assert len(done) == 1 and not svc.pending_by_lane()
 
 
 # ---------------------------------------------------------------------------
